@@ -1,0 +1,81 @@
+"""Paper Fig. 6: collective latency — OMPCCL vs flat-MPI-shaped baselines.
+
+Broadcast and AllReduce across 128 KB..64 MB on the (2,2,2) smoke mesh:
+* DiOMP = OMPCCL with the pod-aware hierarchical backend;
+* "MPI"  = flat single-phase collective over the whole group.
+We report CPU wall medians, the log10(MPI/DiOMP) ratio the paper plots, and
+the analytic inter-pod traffic model for the production 2x16x16 mesh (where
+the hierarchy's 16x inter-pod reduction actually bites — the smoke mesh has
+only fast links, so wall ratios hover near 1).
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import ompccl
+from repro.core.groups import DiompGroup
+from repro.distributed.hierarchical import inter_pod_traffic_bytes
+
+from .common import smoke_mesh, timeit, write_csv
+
+SIZES = [131_072, 1_048_576, 8_388_608, 67_108_864]
+
+
+def run(quick: bool = False):
+    mesh = smoke_mesh()
+    g = DiompGroup(("pod", "data"), name="dp")
+    rows = []
+    sizes = SIZES[:3] if quick else SIZES
+    for nbytes in sizes:
+        n = nbytes // 4
+        x = np.random.RandomState(0).randn(8, max(n // 8, 1)).astype(np.float32)
+        spec = P(("pod", "data", "model"))
+
+        flat_ar = jax.jit(shard_map(
+            lambda v: ompccl.allreduce(v.reshape(-1), g).reshape(v.shape),
+            mesh=mesh, in_specs=P(("pod", "data"), "model"),
+            out_specs=P(None, "model")))
+        hier_ar = jax.jit(shard_map(
+            lambda v: ompccl.allreduce(v.reshape(-1), g,
+                                       backend="hierarchical").reshape(v.shape),
+            mesh=mesh, in_specs=P(("pod", "data"), "model"),
+            out_specs=P(None, "model")))
+        flat_bc = jax.jit(shard_map(
+            lambda v: ompccl.bcast(v, g, root=0),
+            mesh=mesh, in_specs=P(("pod", "data"), "model"),
+            out_specs=P(None, "model")))
+
+        t_flat = timeit(flat_ar, x) * 1e6
+        t_hier = timeit(hier_ar, x) * 1e6
+        t_bc = timeit(flat_bc, x) * 1e6
+        # production-mesh inter-pod bytes per chip: DP fast domain = the
+        # 16-way "data" axis within a pod, slow domain = the 2 pods
+        b_flat = inter_pod_traffic_bytes(nbytes, 16, 2, hierarchical=False)
+        b_hier = inter_pod_traffic_bytes(nbytes, 16, 2, hierarchical=True)
+        rows.append({
+            "bytes": nbytes,
+            "allreduce_flat_us_cpu": round(t_flat, 1),
+            "allreduce_hier_us_cpu": round(t_hier, 1),
+            "bcast_us_cpu": round(t_bc, 1),
+            "log10_flat_over_hier_cpu": round(
+                math.log10(max(t_flat, 1e-9) / max(t_hier, 1e-9)), 3),
+            "interpod_bytes_flat_2x256": int(b_flat),
+            "interpod_bytes_hier_2x256": int(b_hier),
+            "interpod_reduction_x": round(b_flat / max(b_hier, 1), 1),
+        })
+    path = write_csv("collectives.csv", rows)
+    print(f"[bench_collectives] -> {path}")
+    for r in rows:
+        print("  ", r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Shared benchmark utilities (timing, CSV, smoke mesh)."""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Callable, Dict, List
+
+import jax
+
+OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall seconds per call (blocks on device results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def write_csv(name: str, rows: List[Dict]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, name)
+    if rows:
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0]))
+            w.writeheader()
+            w.writerows(rows)
+    return path
+
+
+def smoke_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,66 @@
+"""Generate the EXPERIMENTS.md §Dry-run + §Roofline tables from the JSON
+records under experiments/dryrun (and the §Perf iterations under
+experiments/perf).  ``python -m benchmarks.report > /tmp/tables.md``."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}"
+
+
+def load(dirname, tag=None):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        if tag and not f.endswith(f"__{tag}.json"):
+            continue
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def dryrun_table(recs):
+    print("| arch | shape | mesh | status | HBM GiB/chip | t_compute s | "
+          "t_memory s | t_collective s | dominant | useful |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] == "skip":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                  f"skip: {r['reason'][:45]} | | | | | | |")
+            continue
+        if r["status"] == "fail":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL | | | | | | |")
+            continue
+        mem = sum(v for v in r["memory"].values() if v)
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+              f"{mem/2**30:.1f} | {r['t_compute_s']:.4f} | "
+              f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+              f"{r['dominant']} | {r['useful_flops_fraction']:.2f} |")
+
+
+def main():
+    recs = load("experiments/dryrun", tag="baseline")
+    ok = [r for r in recs if r["status"] == "ok"]
+    skip = [r for r in recs if r["status"] == "skip"]
+    print(f"## Dry-run summary: {len(ok)} ok, {len(skip)} documented skips, "
+          f"{len(recs)-len(ok)-len(skip)} failures\n")
+    dryrun_table(recs)
+    print("\n\n## Perf iterations\n")
+    for r in load("experiments/perf"):
+        if r.get("status") != "ok":
+            continue
+        mem = sum(v for v in r["memory"].values() if v)
+        print(f"* {r['arch']} × {r['shape']} × {r['mesh']} "
+              f"[{r['knobs']}] -> t=(c {r['t_compute_s']:.3f}, "
+              f"m {r['t_memory_s']:.3f}, x {r['t_collective_s']:.3f})s, "
+              f"HBM {mem/2**30:.1f} GiB, dominant={r['dominant']}")
+
+
+if __name__ == "__main__":
+    main()

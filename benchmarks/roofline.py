@@ -1,0 +1,160 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / link_bw
+
+``cost_analysis()`` of the SPMD-partitioned executable is per-chip;
+collective bytes are parsed from the post-partitioning HLO text (operand
+sizes of all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute, including their -start async forms).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+__all__ = ["HW", "collective_bytes_from_hlo", "roofline", "RooflineReport"]
+
+# TPU v5e constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link direction
+
+HW = {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+# e.g. "bf16[16,512,448]" possibly with layout "{2,1,0}"
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|f16|f32|f64)\[([\d,]*)\]")
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.I)
+
+_OP_LINE_RE = re.compile(
+    r"^\s*\S+\s*=\s*(?P<outs>.*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<phase>-start|-done)?\((?P<args>.*)$")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum of *output* shape bytes per collective kind (per-chip program).
+
+    ``-done`` ops are skipped (their ``-start`` counterpart was counted).
+    """
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_LINE_RE.match(line)
+        if not m or m.group("phase") == "-done":
+            continue
+        op = m.group("op").lower()
+        nbytes = _shape_bytes(m.group("outs"))
+        out[op] = out.get(op, 0) + nbytes
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float              # MXU operand/result traffic (dot_bytes)
+    coll_bytes_per_chip: Dict[str, int]
+    model_flops: float                 # 6·N·D (active params for MoE)
+    bytes_upper_per_chip: float = 0.0  # full instruction-level traffic proxy
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return sum(self.coll_bytes_per_chip.values()) / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs · chips) — remat/redundancy waste."""
+        total = self.flops_per_chip * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the roofline the dominant term allows for useful work:
+        (model_flops/chips/peak) / bound_time."""
+        ideal = self.model_flops / self.chips / PEAK_FLOPS
+        return ideal / self.bound_time if self.bound_time else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops_per_chip": self.flops_per_chip,
+            "hlo_bytes_per_chip": self.bytes_per_chip,
+            "hlo_bytes_upper_per_chip": self.bytes_upper_per_chip,
+            "coll_bytes_per_chip": dict(self.coll_bytes_per_chip),
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline(arch: str, shape: str, mesh_name: str, chips: int,
+             cost: dict, hlo_text: str, model_flops: float) -> RooflineReport:
+    """Build the report from the loop-aware HLO analysis (hlo_analysis.py).
+
+    ``cost`` (compiled.cost_analysis()) is kept for cross-checking but NOT
+    used for the terms — XLA's analysis visits while bodies once, which
+    under-counts layer scans / grad accumulation by orders of magnitude.
+    """
+    from .hlo_analysis import analyze_hlo
+
+    hc = analyze_hlo(hlo_text)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=hc.flops,
+        bytes_per_chip=hc.dot_bytes,
+        coll_bytes_per_chip={k: int(v) for k, v in
+                             hc.collective_bytes.items()},
+        model_flops=model_flops,
+        bytes_upper_per_chip=hc.bytes,
+    )

@@ -1,0 +1,49 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+``python -m benchmarks.run [--quick]`` executes:
+  p2p          (paper Figs. 3-5: RMA latency/bandwidth)
+  collectives  (paper Fig. 6: OMPCCL vs flat collectives)
+  matmul       (paper Fig. 7: Cannon ring matmul scaling)
+  minimod      (paper Fig. 8 + Listings 1-2: halo exchange + LOC)
+  streams      (paper §3.2: stream-pool policy throughput)
+  kvcache      (paper Fig. 2: asymmetric heap / page-table churn)
+
+CSVs land in experiments/bench/.  Set XLA device count before jax imports.
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset (p2p,collectives,matmul,"
+                         "minimod,streams,kvcache)")
+    args = ap.parse_args(argv)
+
+    from . import (bench_collectives, bench_kvcache, bench_matmul,
+                   bench_minimod, bench_p2p, bench_streams)
+
+    table = {
+        "p2p": bench_p2p.run,
+        "collectives": bench_collectives.run,
+        "matmul": bench_matmul.run,
+        "minimod": bench_minimod.run,
+        "streams": bench_streams.run,
+        "kvcache": bench_kvcache.run,
+    }
+    only = args.only.split(",") if args.only else list(table)
+    t0 = time.time()
+    for name in only:
+        print(f"\n=== {name} ===")
+        table[name](quick=args.quick)
+    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

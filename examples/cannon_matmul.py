@@ -1,0 +1,75 @@
+"""Paper §4.4: Cannon's-algorithm matrix multiplication with overlap.
+
+C = A x B on a ring of devices: A row-stripes stay put, B stripes rotate
+via ompx_put while the current block GEMM runs — communication is masked by
+computation (the paper's 'additional block stripe' trick).
+
+Run:  PYTHONPATH=src python examples/cannon_matmul.py [N]
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.groups import DiompGroup
+from repro.core.rma import ompx_put
+from repro.kernels.ring_matmul.ops import matmul
+
+
+def cannon(a_stripe, b_stripe, g):
+    """Each rank holds A[rank] (rows) and B[rank] (row-stripe of B).
+
+    P steps: compute partial product with the currently-held B stripe while
+    putting it onward around the ring (paper Listing-1 style: put + fence
+    folded into the compiled dataflow).
+    """
+    n = jax.lax.axis_size(g.axes[0])
+    idx = jax.lax.axis_index(g.axes[0])
+    ns = b_stripe.shape[0]
+    acc = jnp.zeros((a_stripe.shape[0], b_stripe.shape[1]), jnp.float32)
+    acc = acc + 0 * a_stripe[0, 0]  # inherit vma
+    stripe = b_stripe
+    for s in range(n):
+        src = (idx - s) % n                      # whose B stripe I hold
+        a_block = jax.lax.dynamic_slice_in_dim(a_stripe, src * ns, ns, axis=1)
+        acc = acc + matmul(a_block, stripe).astype(jnp.float32)
+        if s != n - 1:
+            stripe = ompx_put(stripe, g, shift=1)   # overlaps the next GEMM
+    return acc.astype(a_stripe.dtype)
+
+
+def main():
+    N = int(sys.argv[1]) if len(sys.argv) > 1 else 768
+    ndev = 8
+    mesh = jax.make_mesh((ndev,), ("ring",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    g = DiompGroup(("ring",), name="ring")
+    rng = np.random.RandomState(0)
+    A = rng.randn(N, N).astype(np.float32)
+    B = rng.randn(N, N).astype(np.float32)
+
+    f = jax.jit(shard_map(lambda a, b: cannon(a, b, g), mesh=mesh,
+                          in_specs=(P("ring", None), P("ring", None)),
+                          out_specs=P("ring", None)))
+    t0 = time.perf_counter()
+    C = np.asarray(jax.block_until_ready(f(A, B)))
+    dt = time.perf_counter() - t0
+    err = np.abs(C - A @ B).max() / np.abs(A @ B).max()
+    print(f"Cannon {N}x{N} on {ndev} devices: {dt*1e3:.1f} ms "
+          f"(incl. compile), rel err {err:.2e}")
+    assert err < 1e-4
+    print("cannon_matmul OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Continuous-batching serving example (see repro.launch.serve).
+
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen1-5-110b
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,27 @@
+"""End-to-end driver: train a small LM with the full DiOMP substrate.
+
+This is a thin veneer over the production driver (repro.launch.train): same
+step builder, same PGAS registration, same checkpoint/straggler machinery —
+scaled to CPU.  ``--arch``/``--steps`` select any assigned architecture's
+reduced config; e.g. a few hundred steps of a ~20M-param GLM4 on 8 virtual
+devices:
+
+  PYTHONPATH=src python examples/train_lm.py --arch glm4-9b --steps 200
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if "--reduced" not in argv:
+        argv.append("--reduced")
+    if not any(a.startswith("--checkpoint-dir") for a in argv):
+        argv += ["--checkpoint-dir", "/tmp/diomp_ckpt"]
+    main(argv)

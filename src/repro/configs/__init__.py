@@ -1,0 +1,38 @@
+"""Assigned-architecture registry: ``get(name)`` -> (full, reduced) configs."""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "paligemma_3b",
+    "deepseek_v3_671b",
+    "qwen3_moe_235b_a22b",
+    "hubert_xlarge",
+    "rwkv6_7b",
+    "qwen1_5_110b",
+    "glm4_9b",
+    "command_r_plus_104b",
+    "stablelm_3b",
+    "zamba2_1_2b",
+)
+
+# CLI ids (--arch) use dashes, matching the assignment table
+CLI_IDS = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def get(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{CLI_IDS.get(name, name)}")
+    return mod.CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{CLI_IDS.get(name, name)}")
+    return mod.REDUCED
+
+
+def all_archs():
+    return [a.replace("_", "-") for a in ARCHS]

@@ -1,0 +1,454 @@
+"""PGAS global memory for the DiOMP-JAX runtime.
+
+Reproduces the paper's §3.1–3.2 memory architecture on TPU:
+
+* a **global segment** per device (the GASNet-EX segment), carved up by a
+  **linear** or **buddy** allocator;
+* **symmetric allocation**: every rank allocates identical bytes, so a region
+  is addressed remotely as ``(remote_base + local_offset)`` — here: identical
+  per-device shard sizes, addressed as ``(device_index, offset)``;
+* **asymmetric allocation**: per-rank sizes differ; a uniformly-replicated
+  **second-level pointer** (32-byte wrapper) holds each rank's actual address,
+  and a **remote-pointer cache** avoids re-fetching it (paper Fig. 2 (as-1));
+* a **centralized mapping table** shared by compute, P2P and collective layers
+  (paper Fig. 1(b)) — here the table also records the sharding spec and the
+  owning group, so the same metadata steers ``jax`` placement, OMPCCL calls
+  and checkpoint layout.
+
+On TPU the actual bytes live inside XLA-managed buffers; what the runtime
+owns is the *address space plan*: which arena offsets a logical region uses on
+which devices.  That plan is exactly what the serving KV-cache allocator needs
+(pages = asymmetric regions; page table = the second-level pointer table), and
+what the checkpoint manager uses to lay out shards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .groups import DiompGroup
+
+__all__ = [
+    "AllocError",
+    "LinearAllocator",
+    "BuddyAllocator",
+    "Region",
+    "SecondLevelPtr",
+    "RemotePtrCache",
+    "GlobalMemory",
+]
+
+_ALIGN = 256  # bytes; TPU-friendly alignment (≥ lane*dtype granularity)
+_SLP_BYTES = 32  # the paper's 32-byte second-level pointer wrapper
+
+
+def _align_up(n: int, a: int = _ALIGN) -> int:
+    return (n + a - 1) // a * a
+
+
+class AllocError(RuntimeError):
+    """Out of segment space / invalid free."""
+
+
+# ---------------------------------------------------------------------------
+# allocators (paper: "strategies such as a linear heap allocator or a buddy
+# allocator to build a unified PGAS global space")
+# ---------------------------------------------------------------------------
+
+
+class LinearAllocator:
+    """Bump allocator with free-list coalescing — the paper's 'linear heap'."""
+
+    def __init__(self, capacity: int):
+        if capacity <= 0:
+            raise ValueError("capacity must be positive")
+        self.capacity = capacity
+        # sorted list of (offset, size) free extents
+        self._free: List[Tuple[int, int]] = [(0, capacity)]
+        self._live: Dict[int, int] = {}  # offset -> size
+
+    def alloc(self, size: int) -> int:
+        size = _align_up(max(size, 1))
+        for i, (off, ext) in enumerate(self._free):
+            if ext >= size:
+                if ext == size:
+                    self._free.pop(i)
+                else:
+                    self._free[i] = (off + size, ext - size)
+                self._live[off] = size
+                return off
+        raise AllocError(f"linear allocator: no extent for {size} bytes")
+
+    def free(self, offset: int) -> None:
+        size = self._live.pop(offset, None)
+        if size is None:
+            raise AllocError(f"invalid free at offset {offset}")
+        self._free.append((offset, size))
+        self._free.sort()
+        # coalesce
+        merged: List[Tuple[int, int]] = []
+        for off, ext in self._free:
+            if merged and merged[-1][0] + merged[-1][1] == off:
+                merged[-1] = (merged[-1][0], merged[-1][1] + ext)
+            else:
+                merged.append((off, ext))
+        self._free = merged
+
+    @property
+    def bytes_in_use(self) -> int:
+        return sum(self._live.values())
+
+    @property
+    def bytes_free(self) -> int:
+        return sum(ext for _, ext in self._free)
+
+    def check_invariants(self) -> None:
+        """Free + live extents exactly tile [0, capacity) without overlap."""
+        extents = sorted(
+            [(o, s, "free") for o, s in self._free]
+            + [(o, s, "live") for o, s in self._live.items()]
+        )
+        cursor = 0
+        for off, size, _kind in extents:
+            if off != cursor:
+                raise AssertionError(f"gap/overlap at {cursor}..{off}")
+            cursor = off + size
+        if cursor != self.capacity:
+            raise AssertionError(f"heap ends at {cursor}, capacity {self.capacity}")
+
+
+class BuddyAllocator:
+    """Power-of-two buddy allocator — the paper's alternative strategy.
+
+    O(log n) alloc/free with bounded fragmentation; preferred for the
+    serving KV-page arena where pages churn at high rate.
+    """
+
+    MIN_BLOCK = _ALIGN
+
+    def __init__(self, capacity: int):
+        cap = self.MIN_BLOCK
+        while cap < capacity:
+            cap <<= 1
+        self.capacity = cap
+        self._max_order = (cap // self.MIN_BLOCK).bit_length() - 1
+        self._free: List[List[int]] = [[] for _ in range(self._max_order + 1)]
+        self._free[self._max_order].append(0)
+        self._live: Dict[int, int] = {}  # offset -> order
+
+    def _order_for(self, size: int) -> int:
+        size = max(size, self.MIN_BLOCK)
+        order = 0
+        block = self.MIN_BLOCK
+        while block < size:
+            block <<= 1
+            order += 1
+        return order
+
+    def alloc(self, size: int) -> int:
+        order = self._order_for(size)
+        if order > self._max_order:
+            raise AllocError(f"buddy: request {size} exceeds capacity")
+        o = order
+        while o <= self._max_order and not self._free[o]:
+            o += 1
+        if o > self._max_order:
+            raise AllocError(f"buddy: no block of order {order}")
+        off = self._free[o].pop()
+        while o > order:  # split down
+            o -= 1
+            buddy = off + (self.MIN_BLOCK << o)
+            self._free[o].append(buddy)
+        self._live[off] = order
+        return off
+
+    def free(self, offset: int) -> None:
+        order = self._live.pop(offset, None)
+        if order is None:
+            raise AllocError(f"buddy: invalid free at {offset}")
+        while order < self._max_order:
+            size = self.MIN_BLOCK << order
+            buddy = offset ^ size
+            if buddy in self._free[order]:
+                self._free[order].remove(buddy)
+                offset = min(offset, buddy)
+                order += 1
+            else:
+                break
+        self._free[order].append(offset)
+
+    @property
+    def bytes_in_use(self) -> int:
+        return sum(self.MIN_BLOCK << o for o in self._live.values())
+
+    @property
+    def bytes_free(self) -> int:
+        return sum(len(blocks) * (self.MIN_BLOCK << o) for o, blocks in enumerate(self._free))
+
+    def check_invariants(self) -> None:
+        if self.bytes_in_use + self.bytes_free != self.capacity:
+            raise AssertionError("buddy accounting mismatch")
+        seen = set()
+        for o, blocks in enumerate(self._free):
+            for off in blocks:
+                if off % (self.MIN_BLOCK << o) != 0:
+                    raise AssertionError(f"misaligned free block {off} order {o}")
+                rng = (off, off + (self.MIN_BLOCK << o))
+                for s in seen:
+                    if rng[0] < s[1] and s[0] < rng[1]:
+                        raise AssertionError("overlapping free blocks")
+                seen.add(rng)
+
+
+# ---------------------------------------------------------------------------
+# regions + second-level pointers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """One PGAS allocation in the centralized mapping table."""
+
+    rid: int
+    name: str
+    symmetric: bool
+    # per-rank byte sizes; for symmetric regions all entries are equal
+    sizes: Tuple[int, ...]
+    # per-rank arena offsets
+    offsets: Tuple[int, ...]
+    group: DiompGroup
+    # sharding metadata consumed by the jax layer (logical axis names)
+    logical_axes: Tuple[Optional[str], ...] = ()
+    dtype: str = "bfloat16"
+
+    def remote_address(self, rank: int) -> Tuple[int, int]:
+        """(rank, offset) of this region on ``rank`` — the put/get target.
+
+        For symmetric regions offset is identical on every rank (offset-based
+        translation); for asymmetric regions callers must go through the
+        second-level pointer instead (enforced here).
+        """
+        if not self.symmetric:
+            raise AllocError(
+                f"region {self.name!r} is asymmetric: dereference via "
+                "SecondLevelPtr, not direct offset translation"
+            )
+        return (rank, self.offsets[rank])
+
+
+@dataclasses.dataclass(frozen=True)
+class SecondLevelPtr:
+    """The paper's 32-byte uniformly-allocated pointer wrapper.
+
+    Symmetrically allocated on all ranks (same slot offset everywhere), its
+    *value* on rank r is the address of rank r's asymmetric payload.
+    """
+
+    slot_offset: int  # symmetric — identical on all ranks
+    region: Region
+
+    def dereference(self, rank: int) -> Tuple[int, int]:
+        return (rank, self.region.offsets[rank])
+
+
+class RemotePtrCache:
+    """Cache of fetched second-level pointer values (paper §3.2).
+
+    Each miss models a round-trip fetch of the remote pointer value; hits skip
+    it.  The runtime invalidates entries when a region is freed — validity is
+    guaranteed "throughout the lifetime of its corresponding allocation".
+    """
+
+    def __init__(self):
+        self._cache: Dict[Tuple[int, int], Tuple[int, int]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def lookup(self, ptr: SecondLevelPtr, rank: int) -> Tuple[int, int]:
+        key = (ptr.region.rid, rank)
+        if key in self._cache:
+            self.hits += 1
+            return self._cache[key]
+        self.misses += 1  # first access pays the two-step communication
+        addr = ptr.dereference(rank)
+        self._cache[key] = addr
+        return addr
+
+    def invalidate_region(self, rid: int) -> None:
+        for key in [k for k in self._cache if k[0] == rid]:
+            del self._cache[key]
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+# ---------------------------------------------------------------------------
+# the global memory manager
+# ---------------------------------------------------------------------------
+
+
+class GlobalMemory:
+    """DiOMP's unified memory view: one arena per rank + one mapping table.
+
+    ``nranks`` is the number of participants of the world group (devices).
+    ``segment_bytes`` models each device's registered global segment (on v5e:
+    the HBM slice the runtime plans into, default 16 GB).
+    """
+
+    def __init__(
+        self,
+        nranks: int,
+        segment_bytes: int = 16 * 2**30,
+        allocator: str = "linear",
+    ):
+        if nranks <= 0:
+            raise ValueError("nranks must be positive")
+        self.nranks = nranks
+        self.segment_bytes = segment_bytes
+        alloc_cls = {"linear": LinearAllocator, "buddy": BuddyAllocator}[allocator]
+        self._arenas = [alloc_cls(segment_bytes) for _ in range(nranks)]
+        self._slp_arena = LinearAllocator(2**20)  # symmetric 1 MiB SLP table
+        self._regions: Dict[int, Region] = {}
+        self._slps: Dict[int, SecondLevelPtr] = {}
+        self._rid = itertools.count()
+        self._lock = threading.Lock()
+        self.ptr_cache = RemotePtrCache()
+
+    # -- collective allocation (paper: "all participating nodes coordinate") --
+    def alloc_symmetric(
+        self,
+        name: str,
+        size: int,
+        group: DiompGroup,
+        logical_axes: Tuple[Optional[str], ...] = (),
+        dtype: str = "bfloat16",
+    ) -> Region:
+        """Identical ``size`` bytes on every rank; offset-translatable."""
+        with self._lock:
+            offsets = []
+            done = []
+            try:
+                for arena in self._arenas:
+                    offsets.append(arena.alloc(size))
+                    done.append(arena)
+            except AllocError:
+                for arena, off in zip(done, offsets):
+                    arena.free(off)
+                raise
+            # symmetric property: identical offsets (arenas evolve in lockstep
+            # under collective alloc/free, like shmem symmetric heaps)
+            assert len(set(offsets)) == 1, "symmetric arenas diverged"
+            region = Region(
+                rid=next(self._rid),
+                name=name,
+                symmetric=True,
+                sizes=tuple([size] * self.nranks),
+                offsets=tuple(offsets),
+                group=group,
+                logical_axes=logical_axes,
+                dtype=dtype,
+            )
+            self._regions[region.rid] = region
+            return region
+
+    def alloc_asymmetric(
+        self,
+        name: str,
+        sizes: Sequence[int],
+        group: DiompGroup,
+        logical_axes: Tuple[Optional[str], ...] = (),
+        dtype: str = "bfloat16",
+    ) -> SecondLevelPtr:
+        """Per-rank sizes differ; returns the second-level pointer handle.
+
+        Implementation detail from the paper: the wrapper slots are
+        symmetric (identical offset on all ranks), while payloads land
+        "at the end of the global segment" wherever each arena has room.
+        """
+        if len(sizes) != self.nranks:
+            raise ValueError(f"need {self.nranks} sizes, got {len(sizes)}")
+        with self._lock:
+            slot = self._slp_arena.alloc(_SLP_BYTES)
+            offsets = []
+            done = []
+            try:
+                for arena, size in zip(self._arenas, sizes):
+                    offsets.append(arena.alloc(max(size, 1)))
+                    done.append(arena)
+            except AllocError:
+                for arena, off in zip(done, offsets):
+                    arena.free(off)
+                self._slp_arena.free(slot)
+                raise
+            region = Region(
+                rid=next(self._rid),
+                name=name,
+                symmetric=False,
+                sizes=tuple(int(s) for s in sizes),
+                offsets=tuple(offsets),
+                group=group,
+                logical_axes=logical_axes,
+                dtype=dtype,
+            )
+            self._regions[region.rid] = region
+            slp = SecondLevelPtr(slot_offset=slot, region=region)
+            self._slps[region.rid] = slp
+            return slp
+
+    def free(self, handle) -> None:
+        """Collective free; invalidates any cached remote pointers."""
+        region = handle.region if isinstance(handle, SecondLevelPtr) else handle
+        with self._lock:
+            if region.rid not in self._regions:
+                raise AllocError(f"double free of region {region.name!r}")
+            for arena, off in zip(self._arenas, region.offsets):
+                arena.free(off)
+            slp = self._slps.pop(region.rid, None)
+            if slp is not None:
+                self._slp_arena.free(slp.slot_offset)
+            del self._regions[region.rid]
+            self.ptr_cache.invalidate_region(region.rid)
+
+    # -- address translation ---------------------------------------------------
+    def translate(self, handle, rank: int) -> Tuple[int, int]:
+        """Resolve a handle to a (rank, offset) remote address.
+
+        Symmetric regions use offset translation directly; asymmetric ones go
+        through the cached second-level pointer — transparently, which is the
+        "consistent and efficient access model" the runtime promises.
+        """
+        if isinstance(handle, SecondLevelPtr):
+            return self.ptr_cache.lookup(handle, rank)
+        return handle.remote_address(rank)
+
+    # -- introspection ----------------------------------------------------------
+    def bytes_in_use(self, rank: int = 0) -> int:
+        return self._arenas[rank].bytes_in_use
+
+    def regions(self) -> List[Region]:
+        return list(self._regions.values())
+
+    def mapping_table(self) -> List[dict]:
+        """The centralized mapping table of paper Fig. 1(b), for inspection."""
+        return [
+            {
+                "rid": r.rid,
+                "name": r.name,
+                "symmetric": r.symmetric,
+                "bytes": r.sizes,
+                "offsets": r.offsets,
+                "group": r.group.name,
+                "logical_axes": r.logical_axes,
+                "dtype": r.dtype,
+            }
+            for r in self._regions.values()
+        ]
+
+    def check_invariants(self) -> None:
+        for arena in self._arenas:
+            arena.check_invariants()

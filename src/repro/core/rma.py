@@ -1,0 +1,190 @@
+"""One-sided RMA — ``ompx_put`` / ``ompx_get`` / ``ompx_fence`` on TPU.
+
+The paper's RMA layer issues one-sided ``put``/``get`` over GASNet-EX (or
+GPI-2) into the PGAS segment, with ``ompx_fence`` completing all outstanding
+operations by polling network + device events in one loop (§3.2).
+
+TPU adaptation (recorded in DESIGN.md §2): ICI transfers are *compiled*, not
+runtime-initiated.  A one-sided put into a remote window is exactly what
+``lax.ppermute`` (XLA ``collective-permute``) lowers to — a remote DMA write
+with no receiver-side participation.  We therefore express the RMA verbs as
+SPMD functions usable inside ``shard_map``:
+
+* ``ompx_put(x, group, shift)``   — deposit my shard into the window of the
+  rank ``shift`` positions ahead on the group's ring; returns what landed in
+  *my* window (SPMD view of the same one-sided write).
+* ``ompx_get(x, group, shift)``   — fetch the shard of the rank ``shift``
+  positions ahead (a read = a put with inverted permutation).
+* ``halo_exchange(x, group)``     — the Minimod pattern (paper Listing 1):
+  both boundary slabs put to both neighbors, one fence.
+* ``ompx_fence(*arrays)``         — completion/ordering barrier: an
+  ``optimization_barrier`` that pins every outstanding transfer before any
+  consumer, the compiled analogue of the hybrid event-polling fence.
+
+The host-side :class:`RMATracker` enforces the *programming model* (reads of
+a window require a fence after the last put), so misuse fails loudly in tests
+even though the compiled program would order correctly by dataflow.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .groups import DiompGroup
+from .ompccl import registry
+
+__all__ = [
+    "ompx_put",
+    "ompx_get",
+    "ompx_put_perm",
+    "ompx_fence",
+    "halo_exchange",
+    "RMATracker",
+    "RMAError",
+]
+
+
+class RMAError(RuntimeError):
+    """Programming-model violation (read before fence, unknown window)."""
+
+
+def _ring_axis(group: DiompGroup) -> str:
+    if len(group.axes) != 1:
+        raise ValueError(
+            f"RMA rings need a single-axis group (one ICI ring), got {group.axes}"
+        )
+    return group.axes[0]
+
+
+def ompx_put(x, group: DiompGroup, *, shift: int = 1):
+    """One-sided put of my shard to the rank ``shift`` ahead on the ring.
+
+    SPMD semantics: every rank's window receives the shard of the rank
+    ``shift`` *behind* it.  ``shift`` may be negative.  Lowers to a single
+    ``collective-permute`` (a remote DMA on ICI).
+    """
+    registry.communicator(group).record("put")
+    ax = _ring_axis(group)
+    n = lax.axis_size(ax)
+    perm = [(i, (i + shift) % n) for i in range(n)]
+    return lax.ppermute(x, ax, perm)
+
+
+def ompx_get(x, group: DiompGroup, *, shift: int = 1):
+    """One-sided get of the shard owned by the rank ``shift`` ahead."""
+    registry.communicator(group).record("get")
+    return ompx_put(x, group, shift=-shift)
+
+
+def ompx_put_perm(x, group: DiompGroup, perm: Sequence[Tuple[int, int]]):
+    """General one-sided put along an arbitrary (src, dst) permutation."""
+    registry.communicator(group).record("put")
+    ax = _ring_axis(group)
+    return lax.ppermute(x, ax, list(perm))
+
+
+def ompx_fence(*arrays):
+    """Complete all outstanding RMA before anything downstream runs.
+
+    ``lax.optimization_barrier`` prevents XLA from reordering/fusing across
+    the fence — the compiled counterpart of DiOMP's hybrid polling loop that
+    waits on both network and device events.  Returns the fenced arrays.
+    """
+    if not arrays:
+        return ()
+    fenced = lax.optimization_barrier(arrays)
+    return fenced[0] if len(arrays) == 1 else fenced
+
+
+def halo_exchange(x, group: DiompGroup, *, halo: int, axis: int = 0):
+    """Minimod's halo pattern (paper Listing 1) as one fused exchange.
+
+    Every rank puts its *left* boundary slab to the left neighbor's right
+    halo and its *right* boundary slab to the right neighbor's left halo,
+    then fences.  Returns ``(left_halo, right_halo)`` — the slabs that landed
+    in my window.  Edge ranks receive zeros (the paper's ``rank != 0`` /
+    ``rank != nranks-1`` guards), matching non-periodic stencil boundaries.
+    """
+    registry.communicator(group).record("halo_exchange")
+    ax = _ring_axis(group)
+    n = lax.axis_size(ax)
+    idx = lax.axis_index(ax)
+
+    # my boundary slabs
+    left_slab = lax.slice_in_dim(x, 0, halo, axis=axis)
+    right_slab = lax.slice_in_dim(x, x.shape[axis] - halo, x.shape[axis], axis=axis)
+
+    # put right_slab -> rank+1's left halo; left_slab -> rank-1's right halo.
+    # Non-periodic: drop the wrap-around edge (i = n-1 -> 0 and 0 -> n-1).
+    fwd = [(i, i + 1) for i in range(n - 1)]
+    bwd = [(i, i - 1) for i in range(1, n)]
+    from_left = lax.ppermute(right_slab, ax, fwd)   # lands in my left halo
+    from_right = lax.ppermute(left_slab, ax, bwd)   # lands in my right halo
+
+    # ranks with no neighbor on a side get explicit zeros
+    from_left = jnp.where(idx == 0, jnp.zeros_like(from_left), from_left)
+    from_right = jnp.where(idx == n - 1, jnp.zeros_like(from_right), from_right)
+    return ompx_fence(from_left, from_right)
+
+
+# ---------------------------------------------------------------------------
+# host-side programming-model tracker
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _WindowState:
+    epoch: int = 0          # bumped by fence
+    dirty_since: int = -1   # epoch of the last un-fenced put, -1 = clean
+
+
+class RMATracker:
+    """Host-side epoch tracker for put/fence discipline (tests + examples).
+
+    The compiled program is always correct by dataflow; this tracker exists to
+    make the *programming model* of the paper checkable: reading a window that
+    received a put since the last fence raises :class:`RMAError`, exactly the
+    bug class ``ompx_fence`` exists to prevent on real hardware.
+    """
+
+    def __init__(self):
+        self._windows: Dict[str, _WindowState] = {}
+        self.puts = 0
+        self.fences = 0
+
+    def register(self, name: str) -> None:
+        if name in self._windows:
+            raise RMAError(f"window {name!r} already registered")
+        self._windows[name] = _WindowState()
+
+    def _state(self, name: str) -> _WindowState:
+        try:
+            return self._windows[name]
+        except KeyError:
+            raise RMAError(f"unknown window {name!r}") from None
+
+    def on_put(self, name: str) -> None:
+        st = self._state(name)
+        st.dirty_since = st.epoch
+        self.puts += 1
+
+    def on_fence(self, *names: str) -> None:
+        targets = names or tuple(self._windows)
+        for name in targets:
+            st = self._state(name)
+            st.epoch += 1
+            st.dirty_since = -1
+        self.fences += 1
+
+    def on_read(self, name: str) -> None:
+        st = self._state(name)
+        if st.dirty_since >= 0:
+            raise RMAError(
+                f"window {name!r} read with un-fenced puts outstanding "
+                "(call ompx_fence first)"
+            )

@@ -1,0 +1,26 @@
+"""Varying-manual-axes helpers for code shared between shard_map and plain jit.
+
+Under ``shard_map`` with vma checking (the default, and the thing that makes
+AD through our explicit collectives sound), freshly created constants are
+*unvarying* while values derived from inputs are *varying*; loop carries must
+match.  ``zeros_like_varying`` creates a zero array that inherits the varying
+axes of a reference value, working identically (and at ~zero cost) outside
+shard_map.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["zeros_varying", "full_varying"]
+
+
+def zeros_varying(shape, dtype, like):
+    """Zeros of ``shape``/``dtype`` carrying ``like``'s varying axes."""
+    tag = (like.reshape(-1)[0] * 0).astype(dtype)
+    return jnp.zeros(shape, dtype) + tag
+
+
+def full_varying(shape, dtype, value, like):
+    tag = (like.reshape(-1)[0] * 0).astype(dtype)
+    return jnp.full(shape, value, dtype) + tag

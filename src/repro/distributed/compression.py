@@ -1,0 +1,145 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Not in the DiOMP paper — a beyond-paper extension for 1000+-node scale where
+the inter-pod all-reduce becomes bandwidth-bound.  Two codecs:
+
+* **int8** uniform quantization (4x wire reduction vs f32, 2x vs bf16) with
+  per-tensor scale and error feedback (the residual is carried to the next
+  step, which keeps SGD convergence — Karimireddy et al. 2019);
+* **top-k** magnitude sparsification (wire = 2k entries) with error feedback.
+
+On this CPU container the *wire* saving cannot be observed; the codecs are
+numerically real (quantize -> reduce -> dequantize) and the byte saving is
+accounted by :func:`wire_bytes` for the roofline/§Perf math.  The decode->
+psum->encode structure matches what a real deployment would run as a
+reduce-scatter in the compressed domain.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax._src.lax.parallel import all_gather_invariant
+
+from repro.core.groups import DiompGroup
+
+__all__ = [
+    "quantize_int8",
+    "dequantize_int8",
+    "compressed_allreduce",
+    "topk_compress",
+    "topk_allreduce",
+    "wire_bytes",
+]
+
+
+def quantize_int8(x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8: q = round(x/scale), scale = amax/127."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_allreduce(
+    x,
+    group: DiompGroup,
+    *,
+    error: Optional[jnp.ndarray] = None,
+):
+    """int8 all-reduce with error feedback (ZeRO++ qgZ-style two phase).
+
+    Phase 1: all-to-all the int8 chunks + all-gather the per-rank scales,
+    dequantize each received chunk with its *source* scale and reduce
+    locally (an exact compressed-domain reduce-scatter).  Phase 2:
+    re-quantize the reduced shard and all-gather it.  Wire traffic is int8
+    payload + one f32 scale per rank per phase; the only lossy steps are the
+    two quantizations, whose residual feeds back via ``error``.
+
+    Returns ``(mean_grad, new_error)``.
+    """
+    if error is not None:
+        x = x + error
+    n = 1
+    for ax in group.axes:
+        n *= lax.axis_size(ax)
+    orig_shape, orig_dtype = x.shape, x.dtype
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+
+    q, scale = quantize_int8(flat)
+    # phase 1 wire: chunk i of my int8 payload -> rank i; scales broadcast
+    chunks = q.reshape(n, -1)
+    recv = lax.all_to_all(chunks, group.lax_axes, split_axis=0, concat_axis=0, tiled=True)
+    scales = scale.reshape(1)
+    for ax in reversed(group.axes):
+        scales = lax.all_gather(scales, ax, axis=0, tiled=True)
+    shard = jnp.sum(recv.astype(jnp.float32) * scales[:, None], axis=0) / n
+
+    # phase 2 wire: re-quantized reduced shard all-gathered back (invariant:
+    # every rank reconstructs the same reduced tensor)
+    q2, s2 = quantize_int8(shard)
+    gathered = q2
+    for ax in reversed(group.axes):
+        gathered = all_gather_invariant(gathered, ax, axis=0, tiled=True)
+    s2_all = s2.reshape(1)
+    for ax in reversed(group.axes):
+        s2_all = all_gather_invariant(s2_all, ax, axis=0, tiled=True)
+    out = (gathered.reshape(n, -1).astype(jnp.float32) * s2_all[:, None]).reshape(-1)
+    if pad:
+        out = out[:-pad]
+        flat = flat[:-pad]
+        q = q[:-pad]
+    new_error = flat - dequantize_int8(q, scale)
+    return out.reshape(orig_shape).astype(orig_dtype), new_error.reshape(orig_shape).astype(orig_dtype)
+
+
+def topk_compress(x, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Keep the k largest-|x| entries of the flattened tensor."""
+    flat = x.reshape(-1)
+    _, idx = lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    return vals, idx
+
+
+def topk_allreduce(
+    x,
+    group: DiompGroup,
+    *,
+    k: int,
+    error: Optional[jnp.ndarray] = None,
+):
+    """Top-k sparsified mean with error feedback.  Returns (grad, error)."""
+    if error is not None:
+        x = x + error
+    flat = x.reshape(-1)
+    vals, idx = topk_compress(flat, k)
+    sparse = jnp.zeros_like(flat).at[idx].set(vals)
+    n = 1
+    for ax in group.axes:
+        n *= lax.axis_size(ax)
+    reduced = lax.psum(sparse, group.lax_axes) / n
+    new_error = flat - sparse
+    return reduced.reshape(x.shape), new_error.reshape(x.shape)
+
+
+def wire_bytes(numel: int, *, codec: str, k: int = 0) -> int:
+    """Bytes on the wire per rank for one reduce — roofline accounting."""
+    if codec == "f32":
+        return 4 * numel
+    if codec == "bf16":
+        return 2 * numel
+    if codec == "int8":
+        return numel + 4  # payload + scale
+    if codec == "topk":
+        return 8 * k      # (f32 value + i32 index) per kept entry
+    raise ValueError(codec)

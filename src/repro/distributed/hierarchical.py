@@ -1,0 +1,116 @@
+"""Pod-aware hierarchical collectives (OMPCCL's topology-aware backend).
+
+The paper's OMPCCL defers topology awareness to NCCL/RCCL; on TPU the
+topology is the mesh itself, so the runtime *is* the topology-aware layer.
+For a ("pod", "data", ...) group where "pod" rides the slow inter-pod links
+and the remaining axes ride intra-pod ICI, a flat all-reduce would push the
+full payload over the slow axis.  The hierarchical algorithm is the classic
+three-phase decomposition:
+
+    reduce-scatter (fast axes)  ->  all-reduce (slow axis, 1/F of the data)
+                                ->  all-gather (fast axes)
+
+which moves ``2·B·(F-1)/F`` bytes per chip on fast links and ``2·B/F·(S-1)/S``
+on slow links, vs. ``2·B·(P-1)/P`` on *every* link for the flat ring
+(F = fast-domain size, S = slow-domain size, P = F·S).  The inter-pod traffic
+drops by a factor of F — the same reason NCCL builds intra-node rings first.
+
+All functions run inside ``shard_map``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+# Varying -> Invariant all-gather: same wire traffic as all_gather, but the
+# type system knows every rank ends with identical bytes (transposes to
+# dynamic_slice).  Exactly the semantics of an allreduce's final gather.
+from jax._src.lax.parallel import all_gather_invariant
+
+from repro.core.groups import DiompGroup
+
+__all__ = [
+    "hierarchical_allreduce",
+    "hierarchical_allgather",
+    "flat_allreduce",
+    "inter_pod_traffic_bytes",
+]
+
+
+def _sizes(axes) -> int:
+    n = 1
+    for ax in axes:
+        n *= lax.axis_size(ax)
+    return n
+
+
+def flat_allreduce(x, group: DiompGroup, *, op: str = "sum"):
+    if op == "sum":
+        return lax.psum(x, group.lax_axes)
+    if op == "max":
+        return lax.pmax(x, group.lax_axes)
+    if op == "min":
+        return lax.pmin(x, group.lax_axes)
+    raise ValueError(op)
+
+
+def hierarchical_allreduce(x, group: DiompGroup, *, op: str = "sum"):
+    """RS(fast) -> AR(slow) -> AG(fast).  First group axis is the slow one.
+
+    Exact for ``op="sum"``; other ops fall back to the flat algorithm (they
+    do not decompose through a scatter).
+    """
+    if len(group.axes) < 2 or op != "sum":
+        return flat_allreduce(x, group, op=op)
+
+    slow, fast = group.axes[0], group.axes[1:]
+    fast_size = _sizes(fast)
+
+    shape = x.shape
+    flat = x.reshape(-1)
+    pad = (-flat.size) % fast_size
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+
+    # phase 1: reduce-scatter across fast axes (innermost first so shard
+    # order matches the row-major group rank order)
+    shard = flat
+    for ax in fast:
+        shard = lax.psum_scatter(shard, ax, scatter_dimension=0, tiled=True)
+    # phase 2: all-reduce across the slow axis on 1/fast_size of the bytes
+    shard = lax.psum(shard, slow)
+    # phase 3: all-gather across fast axes (invariant: every rank ends with
+    # the same reduced tensor, and the type system knows it)
+    out = shard
+    for ax in reversed(fast):
+        out = all_gather_invariant(out, ax, axis=0, tiled=True)
+    if pad:
+        out = out[: flat.size - pad]
+    return out.reshape(shape)
+
+
+def hierarchical_allgather(x, group: DiompGroup, *, axis: int = 0):
+    """Gather along fast axes first (cheap), slow axis last."""
+    if len(group.axes) < 2:
+        return lax.all_gather(x, group.axes[0], axis=axis, tiled=True)
+    slow, fast = group.axes[0], group.axes[1:]
+    out = x
+    for ax in reversed(fast):
+        out = lax.all_gather(out, ax, axis=axis, tiled=True)
+    return lax.all_gather(out, slow, axis=axis, tiled=True)
+
+
+def inter_pod_traffic_bytes(payload_bytes: int, fast_size: int, slow_size: int,
+                            *, hierarchical: bool = True) -> float:
+    """Analytic inter-pod bytes/chip — the §Perf napkin-math helper."""
+    if slow_size <= 1:
+        return 0.0
+    if hierarchical:
+        b = payload_bytes / fast_size
+        return 2 * b * (slow_size - 1) / slow_size
+    p = fast_size * slow_size
+    return 2 * payload_bytes * (p - 1) / p

@@ -1,0 +1,51 @@
+"""Public wrapper for flash attention.
+
+Layout contract with the model zoo: (B, T, H, D) in, (B, T, H, Dv) out.
+``impl='ref'`` runs the pure-jnp blockwise oracle (used on CPU, inside the
+shard_map'd model steps, and for the dry-run HLO) and accepts *traced*
+``q_offset`` / ``valid_len`` (decode).  ``impl='pallas'`` runs the TPU kernel
+(``interpret=True`` executes the kernel body in Python on CPU for
+validation) and requires static offsets.
+
+Deliberately not jitted here: the callers (model steps) are jitted.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from .kernel import flash_attention_pallas
+from .ref import flash_attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(
+    q, k, v,
+    *,
+    causal: bool = True,
+    q_offset=0,
+    prefix_len: int = 0,
+    scale: Optional[float] = None,
+    impl: str = "ref",
+    block: int = 512,
+    valid_len=None,
+    interpret: bool = True,
+):
+    """q: (B, Tq, H, D); k: (B, Tk, KH, D); v: (B, Tk, KH, Dv)."""
+    if impl == "ref":
+        return flash_attention_ref(
+            q, k, v, causal=causal, q_offset=q_offset, prefix_len=prefix_len,
+            scale=scale, block=block, valid_len=valid_len,
+        )
+    if impl == "pallas":
+        qt = q.transpose(0, 2, 1, 3)  # (B, H, Tq, D)
+        kt = k.transpose(0, 2, 1, 3)
+        vt = v.transpose(0, 2, 1, 3)
+        out = flash_attention_pallas(
+            qt, kt, vt, causal=causal, q_offset=q_offset, prefix_len=prefix_len,
+            scale=scale, block_q=block, block_k=block, valid_len=valid_len,
+            interpret=interpret,
+        )
+        return out.transpose(0, 2, 1, 3)
+    raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,123 @@
+"""Pure-jnp oracle for blockwise (flash) attention with GQA.
+
+This is both the numerical ground truth for the Pallas kernel and the
+memory-safe attention used on non-TPU backends: it never materializes the
+full (Tq, Tk) score matrix — KV is consumed in blocks with an online
+softmax, so peak memory is O(Tq · block) per head.
+
+Supports:
+* GQA (q heads grouped over kv heads),
+* causal masking with a query position offset (decode: Tq=1, offset=cache
+  length), and a bidirectional prefix window (PaliGemma prefix-LM),
+* variable valid KV length (padded caches),
+* f32 accumulation regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref"]
+
+
+def _block_update(carry, kv, q, *, causal, q_offset, prefix_len, block, valid_len):
+    """Online-softmax update for one KV block.
+
+    ``q_offset`` / ``valid_len`` may be scalars or (B,) vectors (per-slot
+    decode positions under continuous batching).
+    """
+    m_prev, l_prev, acc_prev, j = carry
+    k_blk, v_blk = kv  # (B, block, KH, D)
+
+    B, Tq, KH, G, D = q.shape
+    # scores: (B, Tq, KH, G, block), f32
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", q, k_blk.astype(jnp.float32))
+
+    k_pos = j * block + jnp.arange(block)          # (block,)
+    q_off = jnp.asarray(q_offset)
+    v_len = jnp.asarray(valid_len)
+    # broadcast to (B, Tq, block)
+    q_pos = (q_off.reshape(-1, 1, 1) + jnp.arange(Tq).reshape(1, -1, 1))
+    vis = k_pos.reshape(1, 1, -1) < v_len.reshape(-1, 1, 1)
+    if causal:
+        # bidirectional inside the prefix window, causal after it
+        vis = vis & ((k_pos.reshape(1, 1, -1) <= q_pos) | (
+            (k_pos.reshape(1, 1, -1) < prefix_len) & (q_pos < prefix_len)))
+    vis = jnp.broadcast_to(vis, (B, Tq, block))
+    s = jnp.where(vis[:, :, None, None, :], s, -jnp.inf)
+
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    # guard: fully-masked rows keep m = -inf; use a safe subtrahend there
+    m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(vis[:, :, None, None, :], p, 0.0)
+    scale = jnp.where(jnp.isneginf(m_prev), 0.0, jnp.exp(m_prev - m_safe))
+    l_new = l_prev * scale + p.sum(axis=-1)
+    acc_new = acc_prev * scale[..., None] + jnp.einsum(
+        "bqhgk,bkhd->bqhgd", p, v_blk.astype(jnp.float32)
+    )
+    return (m_new, l_new, acc_new, j + 1), None
+
+
+def flash_attention_ref(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    q_offset=0,
+    prefix_len: int = 0,
+    scale: Optional[float] = None,
+    block: int = 512,
+    valid_len=None,
+):
+    """q: (B, Tq, H, D); k: (B, Tk, KH, D); v: (B, Tk, KH, Dv) -> (B, Tq, H, Dv).
+
+    ``q_offset`` and ``valid_len`` may be traced scalars (decode steps pass
+    the running cache position).  Dv may differ from D (MLA).
+    """
+    B, Tq, H, D = q.shape
+    Tk, KH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    assert H % KH == 0, (H, KH)
+    G = H // KH
+    if scale is None:
+        scale = D ** -0.5
+    if valid_len is None:
+        valid_len = Tk
+    block = min(block, Tk)
+
+    qg = (q.astype(jnp.float32) * scale).reshape(B, Tq, KH, G, D)
+
+    pad = (-Tk) % block
+    if pad:
+        k = jnp.concatenate([k, jnp.zeros((B, pad, KH, D), k.dtype)], axis=1)
+        v = jnp.concatenate([v, jnp.zeros((B, pad, KH, Dv), v.dtype)], axis=1)
+    nblk = k.shape[1] // block
+    kb = k.reshape(B, nblk, block, KH, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, block, KH, Dv).transpose(1, 0, 2, 3, 4)
+
+    # carries derive from q/v so their varying-manual-axes match the scan
+    # body outputs under shard_map (see repro.core.vma)
+    tag = (qg.reshape(-1)[0] * 0) + (v.reshape(-1)[0] * 0).astype(jnp.float32)
+    m0 = jnp.full((B, Tq, KH, G), -jnp.inf, jnp.float32) + tag
+    l0 = jnp.zeros((B, Tq, KH, G), jnp.float32) + tag
+    a0 = jnp.zeros((B, Tq, KH, G, Dv), jnp.float32) + tag
+
+    step = functools.partial(
+        _block_update,
+        q=qg,
+        causal=causal,
+        q_offset=q_offset,
+        prefix_len=prefix_len,
+        block=block,
+        valid_len=valid_len,
+    )
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, 0), (kb, vb))
+    l = jnp.maximum(l, 1e-30)
+    out = (acc / l[..., None]).reshape(B, Tq, H, Dv)
+    return out.astype(q.dtype)

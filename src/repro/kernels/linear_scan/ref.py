@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the unified linear-recurrence scan.
+
+One recurrence covers both RWKV6 time-mix and Mamba2 SSD (DESIGN.md §3):
+
+    S_t = S_{t-1} * a_t[None, :] + p_t ⊗ q_t          S: (M, N)
+    y_t = (S_{t-1} if readout_pre else S_t) @ r_t      y: (M,)
+
+* RWKV6:  M = head v-dim, N = head k-dim, a = data-dependent decay w_t,
+          p = v_t, q = k_t, r = r_t, readout_pre=True (the diag(u) bonus
+          term is added outside — it is pointwise).
+* Mamba2: M = head dim, N = ssm state, a = exp(Δt·A) (broadcast over N),
+          p = Δt·x_t, q = B_t, r = C_t, readout_pre=False (D·x added
+          outside).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["linear_scan_ref"]
+
+
+def linear_scan_ref(p, q, a, r, s0, *, readout_pre: bool = True):
+    """p: (BH, T, M); q, a, r: (BH, T, N); s0: (BH, M, N).
+
+    Returns (y: (BH, T, M) in p.dtype, s_final: (BH, M, N) f32).
+    """
+    pf, qf, af, rf = (x.astype(jnp.float32) for x in (p, q, a, r))
+    # inherit the inputs' varying manual axes (shard_map vma; no-op outside)
+    s0 = s0.astype(jnp.float32) + 0.0 * (
+        pf.reshape(-1)[0] + qf.reshape(-1)[0] + af.reshape(-1)[0]
+        + rf.reshape(-1)[0])
+
+    def step(s, inp):
+        pt, qt, at, rt = inp
+        s_new = s * at[None, :] + pt[:, None] * qt[None, :]
+        y = (s if readout_pre else s_new) @ rt
+        return s_new, y
+
+    def scan_one(p1, q1, a1, r1, s1):
+        s_fin, ys = jax.lax.scan(step, s1, (p1, q1, a1, r1))
+        return ys, s_fin
+
+    ys, s_fin = jax.vmap(scan_one)(pf, qf, af, rf, s0)
+    return ys.astype(p.dtype), s_fin

@@ -1,0 +1,1 @@
+from .ops import matmul, ring_allgather_matmul  # noqa: F401

@@ -1,0 +1,25 @@
+"""Oracles for the blocked matmul kernel and the ring collective matmul."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import ompccl
+from repro.core.groups import DiompGroup
+
+__all__ = ["matmul_ref", "ring_allgather_matmul_ref"]
+
+
+def matmul_ref(x, w):
+    """f32-accumulated matmul — oracle for the Pallas blocked kernel."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def ring_allgather_matmul_ref(x_local, w_local, group: DiompGroup):
+    """Unoverlapped baseline: all-gather X, then one local matmul.
+
+    Must run inside shard_map.  x_local: (T/n, K) shard; w_local: (K, N/n)
+    column shard.  Returns (T, N/n).
+    """
+    x_full = ompccl.allgather(x_local, group, axis=0)
+    return matmul_ref(x_full, w_local)

@@ -1,0 +1,1 @@
+from .ops import wave_step  # noqa: F401

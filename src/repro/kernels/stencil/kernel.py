@@ -1,0 +1,96 @@
+"""Pallas TPU kernel for the Minimod 25-point acoustic stencil.
+
+TPU adaptation of Minimod's GPU kernel (DESIGN.md §2): instead of a thread
+block per tile with shared-memory halos, we slab the Z axis across the grid
+and DMA each (bz + 2R, Y + 2R, X + 2R) halo slab HBM -> VMEM explicitly with
+``pltpu.make_async_copy`` — the TPU analogue of the paper's stream-managed
+transfers (the DMA slot count is what StreamPool.plan_slots bounds).  The
+compute is a vectorized 25-point star over the VMEM slab (VPU work, one
+fused multiply-add chain per radius), writing a (bz, Y, X) output block.
+
+VMEM budget: slab (bz+8)(Y+8)(X+8)·4B; for bz=8, Y=X=248 the slab is
+~4.2 MiB + out/u_prev blocks ~2 MiB — inside the ~16 MiB budget at the
+default tile, and ``ops.wave_step`` shrinks bz for wider grids.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .ref import COEFFS, RADIUS
+
+__all__ = ["wave_step_pallas"]
+
+
+def _stencil_kernel(upad_hbm, uprev_ref, c2dt2_ref, out_ref, slab, sem,
+                    *, bz: int, inv_dx2: float):
+    iz = pl.program_id(0)
+
+    # explicit HBM -> VMEM DMA of the halo slab for this Z block
+    cp = pltpu.make_async_copy(
+        upad_hbm.at[pl.ds(iz * bz, bz + 2 * RADIUS)], slab, sem
+    )
+    cp.start()
+    cp.wait()
+
+    u = slab[...]                      # (bz+2R, Y+2R, X+2R) f32
+    zc = slice(RADIUS, RADIUS + bz)
+    yc = slice(RADIUS, u.shape[1] - RADIUS)
+    xc = slice(RADIUS, u.shape[2] - RADIUS)
+    center = u[zc, yc, xc]
+
+    c0, *cs = COEFFS
+    lap = 3.0 * c0 * center
+    for r, c in zip(range(1, RADIUS + 1), cs):
+        lap += c * (
+            u[slice(RADIUS - r, RADIUS - r + bz), yc, xc]
+            + u[slice(RADIUS + r, RADIUS + r + bz), yc, xc]
+            + u[zc, slice(RADIUS - r, u.shape[1] - RADIUS - r), xc]
+            + u[zc, slice(RADIUS + r, u.shape[1] - RADIUS + r), xc]
+            + u[zc, yc, slice(RADIUS - r, u.shape[2] - RADIUS - r)]
+            + u[zc, yc, slice(RADIUS + r, u.shape[2] - RADIUS + r)]
+        )
+    lap = lap * inv_dx2
+
+    out_ref[...] = (
+        2.0 * center - uprev_ref[...] + c2dt2_ref[...] * lap
+    ).astype(out_ref.dtype)
+
+
+def wave_step_pallas(u, u_prev, c2dt2, *, dx: float = 1.0, bz: int = 8,
+                     interpret: bool = False):
+    """u, u_prev: (Z, Y, X) f32; c2dt2 scalar or (Z, Y, X).  One leapfrog step."""
+    Z, Y, X = u.shape
+    bz = min(bz, Z)
+    pz = (-Z) % bz
+    c2 = jnp.broadcast_to(jnp.asarray(c2dt2, u.dtype), u.shape)
+
+    upad = jnp.pad(u, RADIUS)                      # halo + Z-slab overrun pad
+    if pz:
+        upad = jnp.pad(upad, ((0, pz), (0, 0), (0, 0)))
+        u_prev = jnp.pad(u_prev, ((0, pz), (0, 0), (0, 0)))
+        c2 = jnp.pad(c2, ((0, pz), (0, 0), (0, 0)))
+    Zp = Z + pz
+
+    out = pl.pallas_call(
+        functools.partial(_stencil_kernel, bz=bz, inv_dx2=1.0 / (dx * dx)),
+        grid=(Zp // bz,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),              # padded u in HBM
+            pl.BlockSpec((bz, Y, X), lambda i: (i, 0, 0)),     # u_prev block
+            pl.BlockSpec((bz, Y, X), lambda i: (i, 0, 0)),     # velocity block
+        ],
+        out_specs=pl.BlockSpec((bz, Y, X), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Zp, Y, X), u.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bz + 2 * RADIUS, Y + 2 * RADIUS, X + 2 * RADIUS), u.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(upad, u_prev, c2)
+    return out[:Z]

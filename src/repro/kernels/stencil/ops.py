@@ -1,0 +1,23 @@
+"""jit'd public wrapper for the acoustic wave step."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import wave_step_pallas
+from .ref import wave_step_ref
+
+__all__ = ["wave_step"]
+
+
+@functools.partial(jax.jit, static_argnames=("dx", "impl", "bz", "interpret"))
+def wave_step(u, u_prev, c2dt2, *, dx: float = 1.0, impl: str = "ref",
+              bz: int = 8, interpret: bool = True):
+    if impl == "ref":
+        return wave_step_ref(u, u_prev, c2dt2, dx=dx)
+    if impl == "pallas":
+        return wave_step_pallas(u, u_prev, c2dt2, dx=dx, bz=bz,
+                                interpret=interpret)
+    raise ValueError(impl)

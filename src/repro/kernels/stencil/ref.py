@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the Minimod acoustic-isotropic 25-point stencil.
+
+8th-order central differences in space (radius 4 per axis -> 25-point star),
+2nd order in time:
+
+    u_next = 2 u - u_prev + (c dt)^2 * laplacian(u)
+
+Boundaries are zero-padded (homogeneous Dirichlet), matching Minimod's
+damping-free interior kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["COEFFS", "laplacian_ref", "wave_step_ref"]
+
+# 8th-order second-derivative coefficients (center + 4 neighbors per side)
+COEFFS = (-205.0 / 72.0, 8.0 / 5.0, -1.0 / 5.0, 8.0 / 315.0, -1.0 / 560.0)
+RADIUS = 4
+
+
+def laplacian_ref(u, *, dx: float = 1.0):
+    """25-point star laplacian with zero boundary halo."""
+    up = jnp.pad(u, RADIUS)
+    z, y, x = u.shape
+    c0, *cs = COEFFS
+    lap = 3.0 * c0 * u
+    for r, c in zip(range(1, RADIUS + 1), cs):
+        for axis in range(3):
+            lo = [slice(RADIUS, RADIUS + z), slice(RADIUS, RADIUS + y),
+                  slice(RADIUS, RADIUS + x)]
+            hi = list(lo)
+            lo[axis] = slice(RADIUS - r, RADIUS - r + u.shape[axis])
+            hi[axis] = slice(RADIUS + r, RADIUS + r + u.shape[axis])
+            lap = lap + c * (up[tuple(lo)] + up[tuple(hi)])
+    return lap / (dx * dx)
+
+
+def wave_step_ref(u, u_prev, c2dt2, *, dx: float = 1.0):
+    """One leapfrog step; c2dt2 = (c·dt)² (scalar or (Z,Y,X) velocity model)."""
+    return (2.0 * u - u_prev + c2dt2 * laplacian_ref(u, dx=dx)).astype(u.dtype)

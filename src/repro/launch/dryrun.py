@@ -1,0 +1,296 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ---------------------------------------------------------------------------
+# Multi-pod dry-run: .lower().compile() every (arch × shape × mesh) cell on
+# placeholder devices — no allocation, ShapeDtypeStruct in, compiled SPMD
+# executable out.  Proves the distribution config is coherent and yields the
+# memory/cost/collective numbers EXPERIMENTS.md §Dry-run / §Roofline read.
+#
+# The two lines above MUST precede any other import (jax locks the device
+# count on first init).
+# ---------------------------------------------------------------------------
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, Shape, skip_reason
+from repro.models import api as model_api
+from repro.models import schema as sch
+from repro.models.config import ModelConfig, ParallelCtx
+from repro.serve.step import build_decode_step, build_prefill_step
+from repro.train.optim import adafactor, adafactor_dim_axes, adamw, \
+    cosine_schedule
+from repro.train.step import build_train_step, opt_state_specs
+
+ADAFACTOR_CUTOFF = 30e9   # params ≥ 30B train with Adafactor (HBM plan)
+
+
+def pick_optimizer(cfg: ModelConfig, mesh, rules=None):
+    n = cfg.param_count()
+    lr = cosine_schedule(3e-4)
+    if n >= ADAFACTOR_CUTOFF:
+        return adafactor(lr, dim_axes=adafactor_dim_axes(cfg, mesh, rules)), \
+            "adafactor"
+    return adamw(lr), "adamw"
+
+
+def default_microbatch(cfg: ModelConfig, shape: Shape, mesh) -> int:
+    """Grad-accumulation so the remat carry fits the HBM plan
+    (~1 sequence of 4k tokens per microstep for the big archs)."""
+    dp = 1
+    for ax in ("pod", "data"):
+        dp *= mesh.shape.get(ax, 1)
+    b_loc = max(shape.global_batch // dp, 1)
+    tokens_per_seq = shape.seq_len
+    target_tokens = 8192 if cfg.d_model <= 4096 else 4096
+    seqs = max(target_tokens // tokens_per_seq, 1)
+    mb = max(b_loc // seqs, 1)
+    while b_loc % mb:
+        mb -= 1
+    return mb
+
+
+def make_ctx(cfg: ModelConfig, shape: Shape, mesh, knobs: dict) -> ParallelCtx:
+    mb = knobs.pop("microbatch", None) or default_microbatch(cfg, shape, mesh)
+    return ParallelCtx.from_mesh(mesh, remat=True, microbatch=mb, **knobs)
+
+
+def seq_sharded_for(cfg: ModelConfig, shape: Shape) -> bool:
+    """Context(S)-shard the KV cache over 'data' when batch can't use it."""
+    return shape.kind == "decode" and shape.global_batch == 1 and \
+        cfg.family == "hybrid"
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               knobs: Optional[dict] = None, verbose: bool = True):
+    """Returns (record dict, compiled) or a skip record."""
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if reason is not None:
+        return ({"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "status": "skip", "reason": reason}, None)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    knobs = dict(knobs or {})
+    ctx = make_ctx(cfg, shape, mesh, knobs)
+
+    from jax.sharding import NamedSharding
+
+    def with_sharding(structs, specs):
+        """Attach the runtime's placement to every lowered struct, so the
+        compiled module's argument layouts (and memory analysis) match the
+        PGAS plan instead of a compiler guess."""
+        return jax.tree.map(
+            lambda s, sp: jax.ShapeDtypeStruct(
+                s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+            structs, specs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    from repro.distributed.sharding import rules_for_ctx
+
+    rules = rules_for_ctx(ctx)
+    pspecs_all = sch.partition_specs(cfg, mesh, rules)
+    pstructs = with_sharding(sch.param_structs(cfg), pspecs_all)
+    t0 = time.time()
+
+    if shape.kind == "train":
+        opt, opt_name = pick_optimizer(cfg, mesh, rules)
+        step = build_train_step(cfg, mesh, ctx, opt, optimizer_name=opt_name,
+                                global_batch=shape.global_batch)
+        from repro.train.step import opt_state_specs as _oss
+        ostructs = with_sharding(opt.state_structs(sch.param_structs(cfg)),
+                                 _oss(cfg, mesh, opt_name, rules))
+        bs_raw, bs_specs = model_api.batch_structs(
+            cfg, mesh, shape.global_batch, shape.seq_len)
+        bstructs = with_sharding(bs_raw, bs_specs)
+        lowered = step.lower(pstructs, ostructs, bstructs,
+                             jax.ShapeDtypeStruct((), jnp.int32))
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * cfg.active_param_count() * tokens
+    elif shape.kind == "prefill":
+        if cfg.family == "audio":
+            # encoder "prefill" = the forward pass at full length
+            ctx2 = dataclasses.replace(ctx, inference=True, remat=False)
+            from jax.sharding import PartitionSpec as P
+            from jax import shard_map
+            from repro.models.transformer import transformer_forward
+
+            pspecs = sch.partition_specs(cfg, mesh)
+            bs_raw, bspecs = model_api.batch_structs(
+                cfg, mesh, shape.global_batch, shape.seq_len)
+            bstructs = with_sharding(bs_raw, bspecs)
+
+            def enc(params, batch):
+                h, _ = transformer_forward(params, None, cfg, ctx2,
+                                           embeds=batch["embeds"])
+                return h
+
+            ba = model_api._batch_axes(mesh, shape.global_batch)
+            step = jax.jit(shard_map(
+                enc, mesh=mesh, in_specs=(pspecs, bspecs),
+                out_specs=P(ba if ba else None)))
+            lowered = step.lower(pstructs, bstructs)
+        else:
+            seqsh = False
+            step = build_prefill_step(
+                cfg, mesh, ctx, B=shape.global_batch,
+                S_prompt=shape.seq_len, S_cache=shape.seq_len,
+                seq_sharded=seqsh)
+            cs_raw, cs_specs = model_api.cache_structs(
+                cfg, mesh, ctx, shape.global_batch, shape.seq_len,
+                seq_sharded=seqsh)
+            cstructs = with_sharding(cs_raw, cs_specs)
+            ba = model_api._batch_axes(mesh, shape.global_batch)
+            from jax.sharding import PartitionSpec as _P
+            tstruct = jax.ShapeDtypeStruct(
+                (shape.global_batch,
+                 shape.seq_len - (cfg.prefix_tokens or 0)), jnp.int32,
+                sharding=NamedSharding(mesh, _P(ba if ba else None)))
+            lowered = step.lower(pstructs, tstruct, cstructs)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * cfg.active_param_count() * tokens
+    else:  # decode
+        seqsh = seq_sharded_for(cfg, shape)
+        step = build_decode_step(cfg, mesh, ctx, B=shape.global_batch,
+                                 S=shape.seq_len, seq_sharded=seqsh)
+        cs_raw, cs_specs = model_api.cache_structs(
+            cfg, mesh, ctx, shape.global_batch, shape.seq_len,
+            seq_sharded=seqsh)
+        cstructs = with_sharding(cs_raw, cs_specs)
+        ba = model_api._batch_axes(mesh, shape.global_batch)
+        from jax.sharding import PartitionSpec as _P
+        tstruct = jax.ShapeDtypeStruct(
+            (shape.global_batch, 1), jnp.int32,
+            sharding=NamedSharding(mesh, _P(ba if ba else None)))
+        lowered = step.lower(pstructs, tstruct, cstructs)
+        tokens = shape.global_batch
+        model_flops = 2.0 * cfg.active_param_count() * tokens
+
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                    "..", "..", ".."))
+    from benchmarks.roofline import collective_bytes_from_hlo, roofline
+
+    rep = roofline(arch, shape_name, mesh_name, chips, cost, hlo, model_flops)
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", None),
+        },
+        "knobs": {"microbatch": ctx.microbatch,
+                  "dp_backend": ctx.dp_backend,
+                  "grad_codec": ctx.grad_codec,
+                  "explicit_dp": ctx.explicit_dp,
+                  "expert2d": ctx.expert2d,
+                  "layout": ctx.layout,
+                  "fsdp_params": ctx.fsdp_params,
+                  "gather_codec": ctx.gather_codec,
+                  "use_ring_matmul": ctx.use_ring_matmul},
+        **rep.row(),
+    }
+    if verbose:
+        total_hbm = sum(v for v in record["memory"].values() if v) / 2**30
+        print(f"[{arch} × {shape_name} × {mesh_name}] OK  "
+              f"lower {t_lower:.0f}s compile {t_compile:.0f}s  "
+              f"HBM/device ≈ {total_hbm:.2f} GiB  "
+              f"dominant={rep.dominant}  "
+              f"t=(c {rep.t_compute:.4f}, m {rep.t_memory:.4f}, "
+              f"x {rep.t_collective:.4f})s  "
+              f"useful={rep.useful_flops_fraction:.2f}")
+        print("  memory_analysis:", record["memory"])
+        print("  cost_analysis: flops/chip=%.3e bytes/chip=%.3e" %
+              (rep.flops_per_chip, rep.bytes_per_chip))
+        print("  collectives/chip:", rep.coll_bytes_per_chip)
+    return record, compiled
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=configs.all_archs(), default=None)
+    ap.add_argument("--shape", choices=list(SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch × shape) cell")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--dp-backend", default="hierarchical",
+                    choices=["flat", "hierarchical"])
+    ap.add_argument("--grad-codec", default="none", choices=["none", "int8"])
+    ap.add_argument("--ring-matmul", action="store_true")
+    ap.add_argument("--implicit-dp", action="store_true")
+    ap.add_argument("--expert2d", action="store_true",
+                    help="MoE experts sharded over model x data (no d-gathers)")
+    ap.add_argument("--no-fsdp-params", action="store_true",
+                    help="inference WS: dense weights TP-sharded, no ZeRO-3")
+    ap.add_argument("--gather-codec", default="none", choices=["none", "int8"],
+                    help="int8-wire ZeRO-3 weight gathers (exact grad RS)")
+    ap.add_argument("--layout", default="tp", choices=["tp", "dp_only"])
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args(argv)
+
+    knobs = {"dp_backend": args.dp_backend, "grad_codec": args.grad_codec,
+             "use_ring_matmul": args.ring_matmul,
+             "explicit_dp": not args.implicit_dp,
+             "expert2d": args.expert2d, "layout": args.layout,
+             "fsdp_params": not args.no_fsdp_params,
+             "gather_codec": args.gather_codec,
+             "microbatch": args.microbatch}
+
+    archs = configs.all_archs() if args.all or not args.arch else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else \
+        [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                cell = f"{arch}__{shp}__{'multi' if mp else 'single'}"
+                try:
+                    rec, _ = lower_cell(arch, shp, multi_pod=mp,
+                                        knobs=dict(knobs))
+                except Exception as e:  # noqa: BLE001 — report, keep going
+                    rec = {"arch": arch, "shape": shp,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "fail", "error": f"{type(e).__name__}: {e}"}
+                    failures.append(cell)
+                    print(f"[{cell}] FAIL: {rec['error'][:300]}")
+                with open(os.path.join(args.out,
+                                       f"{cell}__{args.tag}.json"), "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+    if failures:
+        print(f"\n{len(failures)} cells FAILED: {failures}")
+        sys.exit(1)
+    print("\nall requested cells lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production + smoke meshes.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before any jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_smoke_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod prepends a 2-pod axis (512)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_smoke_mesh(ndev: int = 8, *, pods: bool = True):
+    """Small CPU mesh for tests/examples (8 virtual devices by default)."""
+    if pods and ndev % 4 == 0:
+        shape, axes = (2, ndev // 4, 2), ("pod", "data", "model")
+    else:
+        shape, axes = (max(ndev // 2, 1), min(ndev, 2)), ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

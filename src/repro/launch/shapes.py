@@ -1,0 +1,47 @@
+"""Assigned input-shape cells and their applicability rules.
+
+LM transformer shapes are seq_len × global_batch.  decode_* / long_* lower
+``serve_step`` (one new token against a seq_len KV cache), not train_step.
+long_500k needs sub-quadratic attention: runs only for SSM/hybrid archs;
+encoder-only archs have no decode step at all.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.models import api as model_api
+from repro.models.config import ModelConfig
+
+__all__ = ["SHAPES", "Shape", "applicable", "skip_reason"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def skip_reason(cfg: ModelConfig, shape: Shape) -> Optional[str]:
+    if shape.kind == "decode" and not model_api.has_decode(cfg):
+        return "encoder-only arch: no decode step"
+    if shape.kind == "prefill" and cfg.family == "audio":
+        return None  # encoder prefill = a plain forward pass
+    if shape.name == "long_500k" and not model_api.supports_long_context(cfg):
+        return "full-attention arch: long_500k needs sub-quadratic decode state"
+    return None
+
+
+def applicable(cfg: ModelConfig, shape: Shape) -> bool:
+    return skip_reason(cfg, shape) is None

@@ -1,0 +1,8 @@
+"""Pure-JAX model zoo for the assigned architectures.
+
+All forwards are *manual-SPMD*: they run inside ``shard_map`` and issue every
+cross-device transfer explicitly through OMPCCL / RMA verbs, so the DiOMP
+runtime owns the full communication schedule (DESIGN.md §4).
+"""
+
+from .config import ModelConfig, ParallelCtx  # noqa: F401

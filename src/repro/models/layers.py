@@ -1,0 +1,756 @@
+"""Manual-SPMD layer library.
+
+Every function here runs *inside* ``shard_map`` on device-local shards and
+issues all cross-device traffic explicitly through OMPCCL / RMA verbs — the
+DiOMP discipline: communication is owned by the runtime's verbs, never
+implicit.  Layout conventions (DESIGN.md §4):
+
+* activations: (B_loc, T, d) — batch sharded over (pod, data); d full;
+  replicated over "model";
+* weights: TP dim sharded over "model" (column/row Megatron style), the
+  other big dim sharded over "data" (ZeRO-3 / FSDP) and all-gathered at use
+  (optionally via the Cannon-style ring to overlap transfer with compute);
+* attention: head-parallel when heads divide MAX_TP, token-parallel
+  otherwise; decode caches are head-sharded, context(seq)-sharded, or
+  replicated per the same divisibility rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import ompccl
+from repro.core.groups import DiompGroup
+from repro.core.rma import ompx_put
+from repro.kernels.flash_attention.ops import flash_attention
+from .config import ModelConfig, ParallelCtx
+from .schema import MAX_TP, head_parallel, kv_sharded, vocab_sharded
+
+__all__ = [
+    "rmsnorm", "layernorm", "rope", "gather_fsdp", "tp_allreduce",
+    "col_matmul", "row_matmul", "embed_lookup", "ce_loss",
+    "attention_block", "mla_block", "mlp_block", "moe_block",
+    "cp_decode_attention",
+]
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps: float = 1e-5, plus_one: bool = False):
+    xf = x.astype(F32)
+    inv = lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    s = scale.astype(F32)
+    if plus_one:
+        s = 1.0 + s
+    return (xf * inv * s).astype(x.dtype)
+
+
+def layernorm(x, scale_bias, eps: float = 1e-5):
+    """scale_bias: (2, d) — row 0 scale, row 1 bias."""
+    xf = x.astype(F32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    return (y * scale_bias[0].astype(F32) + scale_bias[1].astype(F32)).astype(x.dtype)
+
+
+def rope(x, positions, *, theta: float = 10_000.0, fraction: float = 1.0):
+    """x: (B, T, H, D); positions: (T,) or (B, T) (per-slot decode offsets)."""
+    D = x.shape[-1]
+    rot = int(D * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=F32) / half)
+    pos = positions.astype(F32)
+    if pos.ndim == 1:
+        pos = pos[None, :]                                      # (1, T)
+    ang = pos[..., None] * freqs[None, None, :]                 # (B|1, T, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = xr[..., :half].astype(F32), xr[..., half:].astype(F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# communication helpers (all traffic through OMPCCL / RMA)
+# ---------------------------------------------------------------------------
+
+def gather_fsdp(w, ctx: ParallelCtx, dim: int = 0):
+    """ZeRO-3 weight all-gather over the data axis (no-op if fsdp == 1).
+
+    AD transposes this to a reduce-scatter of the weight gradient over the
+    same axis — the intra-pod half of the hierarchical gradient reduction.
+
+    ``ctx.gather_codec == "int8"``: the wire moves int8 + one f32 scale per
+    shard (2x fewer bytes than bf16).  Remote shards are dequantized; my own
+    shard is spliced back at full precision through a straight-through
+    estimator, so gradients flow to the unquantized weights and the grad
+    reduce-scatter stays exact.
+    """
+    if ctx.fsdp <= 1 or not ctx.fsdp_params:
+        return w                      # inference WS: weights arrive whole
+    if ctx.gather_codec == "int8":
+        return _q8_gather(w, ctx, dim)
+    return ompccl.allgather(w, ctx.fsdp_group, axis=dim,
+                            invariant=ctx.inference)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _q8_gather(w, ctx, dim):
+    """int8-wire ZeRO-3 gather (ZeRO++ qwZ-style).
+
+    Forward: quantize the local shard, all-gather int8 + per-shard scales,
+    dequantize, splice my own shard back at full precision.  Backward: the
+    exact reduce-scatter of the cotangent (identical to plain all_gather's
+    transpose) — the grad wire stays uncompressed and exact.
+    """
+    from repro.distributed.compression import quantize_int8
+
+    q, s = quantize_int8(w)
+    qq = ompccl.allgather(q, ctx.fsdp_group, axis=dim,
+                          invariant=ctx.inference)
+    ss = ompccl.allgather(s.reshape(1), ctx.fsdp_group, axis=0,
+                          invariant=ctx.inference)         # (fsdp,)
+    n = ss.shape[0]
+    shard = qq.shape[dim] // n
+    scale_shape = [1] * qq.ndim
+    scale_shape[dim] = n
+    scales = jnp.repeat(ss.reshape(scale_shape), shard, axis=dim)
+    full = (qq.astype(F32) * scales).astype(w.dtype)
+    idx = lax.axis_index(ctx.fsdp_group.axes[0])
+    return lax.dynamic_update_slice_in_dim(full, w, idx * shard, axis=dim)
+
+
+def _q8_gather_fwd(w, ctx, dim):
+    return _q8_gather(w, ctx, dim), None
+
+
+def _q8_gather_bwd(ctx, dim, _res, g):
+    return (ompccl.reducescatter(g, ctx.fsdp_group, axis=dim)
+            .astype(g.dtype),)
+
+
+_q8_gather.defvjp(_q8_gather_fwd, _q8_gather_bwd)
+
+
+def ring_fsdp_matmul(x, w_local, ctx: ParallelCtx):
+    """Cannon-style overlap of the ZeRO-3 gather: y = x @ W, W row-sharded.
+
+    Instead of all-gathering W then one GEMM, rotate W shards around the
+    data-axis ring; each step's ompx_put overlaps the concurrent partial
+    GEMM (paper §4.4 generalized to the weight gather).
+    """
+    if ctx.fsdp <= 1 or not ctx.fsdp_params:
+        return jnp.dot(x, w_local, preferred_element_type=F32).astype(x.dtype)
+    from repro.core.vma import zeros_varying
+
+    group = ctx.fsdp_group
+    n = lax.axis_size(group.axes[0])
+    idx = lax.axis_index(group.axes[0])
+    dshard = w_local.shape[0]
+    acc = zeros_varying(x.shape[:-1] + (w_local.shape[1],), F32, x)
+    chunk = w_local
+    for s in range(n):
+        src = (idx - s) % n
+        xs = lax.dynamic_slice_in_dim(x, src * dshard, dshard, axis=-1)
+        acc += jnp.dot(xs, chunk, preferred_element_type=F32)
+        if s != n - 1:
+            chunk = ompx_put(chunk, group, shift=1)
+    return acc.astype(x.dtype)
+
+
+def tp_allreduce(x, ctx: ParallelCtx):
+    if ctx.tp <= 1:
+        return x
+    return ompccl.allreduce(x, ctx.tp_group)
+
+
+def col_matmul(x, w_local, ctx: ParallelCtx, bias_local=None):
+    """Megatron column-parallel: x (…, d) × W (d/fsdp, out/tp) -> (…, out/tp)."""
+    if ctx.use_ring_matmul:
+        y = ring_fsdp_matmul(x, w_local, ctx)
+    else:
+        w = gather_fsdp(w_local, ctx, dim=0)
+        y = jnp.dot(x, w, preferred_element_type=F32).astype(x.dtype)
+    if bias_local is not None:
+        y = y + bias_local.astype(y.dtype)
+    return y
+
+
+def row_matmul(x, w_local, ctx: ParallelCtx):
+    """Megatron row-parallel: x (…, in/tp) × W (in/tp, d/fsdp) -> allreduced (…, d)."""
+    w = gather_fsdp(w_local, ctx, dim=1)
+    y = jnp.dot(x, w, preferred_element_type=F32).astype(x.dtype)
+    return tp_allreduce(y, ctx)
+
+
+# ---------------------------------------------------------------------------
+# embedding / loss (vocab-sharded over the TP group)
+# ---------------------------------------------------------------------------
+
+def embed_lookup(tokens, table_local, cfg: ModelConfig, ctx: ParallelCtx):
+    """tokens: (B, T) int32; table_local: (V/tp, d) or (V, d)."""
+    if not vocab_sharded(cfg) or ctx.tp <= 1:
+        return table_local[tokens]
+    vloc = table_local.shape[0]
+    off = lax.axis_index(ctx.tp_group.axes[0]) * vloc
+    local = tokens - off
+    hit = (local >= 0) & (local < vloc)
+    e = table_local[jnp.clip(local, 0, vloc - 1)]
+    e = jnp.where(hit[..., None], e, jnp.zeros_like(e))
+    return tp_allreduce(e, ctx)
+
+
+def ce_loss(h, head_local, targets, cfg: ModelConfig, ctx: ParallelCtx,
+            weights=None):
+    """Cross-entropy with vocab-sharded logits.
+
+    h: (B, T, d); head_local: (d, V/tp) (or (d, V) unsharded); targets (B, T).
+    The softmax statistics are reduced across the TP group with explicit
+    OMPCCL max/sum collectives (the paper's device-side collectives in the
+    loss path).  Returns mean loss (f32).
+    """
+    logits = jnp.dot(h.astype(F32), head_local.astype(F32))   # (B, T, V/tp)
+    sharded = vocab_sharded(cfg) and ctx.tp > 1
+    m = lax.stop_gradient(logits).max(axis=-1)
+    if sharded:
+        m = ompccl.allreduce(m, ctx.tp_group, op="max")
+    m = lax.stop_gradient(m)  # the max shift carries no gradient (and pmax
+    # has no AD rule); the CE gradient is exact regardless of the shift
+    z = jnp.exp(logits - m[..., None]).sum(axis=-1)
+    if sharded:
+        z = ompccl.allreduce(z, ctx.tp_group)
+    if sharded:
+        vloc = head_local.shape[1]
+        off = lax.axis_index(ctx.tp_group.axes[0]) * vloc
+        local = targets - off
+        hit = (local >= 0) & (local < vloc)
+        tgt = jnp.take_along_axis(
+            logits, jnp.clip(local, 0, vloc - 1)[..., None], axis=-1
+        )[..., 0]
+        tgt = jnp.where(hit, tgt, 0.0)
+        tgt = ompccl.allreduce(tgt, ctx.tp_group)
+    else:
+        tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = jnp.log(z) + m - tgt
+    if weights is not None:
+        return (nll * weights).sum() / jnp.maximum(weights.sum(), 1.0)
+    return nll.mean()
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KVCache:
+    """Decode-time cache; a pytree (flax-free).  ``pos`` is a traced scalar."""
+
+    k: jax.Array            # (B, S_cache_local, KH_local, D)
+    v: jax.Array
+    pos: jax.Array          # ()
+    seq_sharded: bool = False   # context-parallel cache (S split over a group)
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.pos), (self.seq_sharded,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, seq_sharded=aux[0])
+
+
+jax.tree_util.register_pytree_node(
+    KVCache, KVCache.tree_flatten, KVCache.tree_unflatten
+)
+
+
+def cp_decode_attention(q, cache: KVCache, group: DiompGroup, *, scale):
+    """Decode attention over a context(S)-sharded KV cache.
+
+    q: (B, 1, H, D); cache.k/v: (B, S/g, KH, D) — each group member holds an
+    S-chunk.  Partial (max, sum, acc) per chunk are combined with OMPCCL
+    max/sum collectives — distributed flash-decode.
+    """
+    B, _, H, D = q.shape
+    s_loc = cache.k.shape[1]
+    KH = cache.k.shape[2]
+    Dv = cache.v.shape[-1]
+    G = H // KH
+    ax = group.axes[0]
+    chunk_off = lax.axis_index(ax) * s_loc
+
+    qf = q.astype(F32).reshape(B, KH, G, D) * scale
+    kf = cache.k.astype(F32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, kf)                  # (B, KH, G, S/g)
+    k_pos = chunk_off + jnp.arange(s_loc)
+    # cache.pos has already been advanced past the newly written entry, so
+    # exactly the first ``pos`` slots are valid
+    vis = k_pos[None, None, None, :] < cache.pos
+    s = jnp.where(vis, s, -jnp.inf)
+
+    m_loc = s.max(axis=-1)
+    m = ompccl.allreduce(m_loc, group, op="max")
+    m_safe = jnp.where(jnp.isneginf(m), 0.0, m)
+    p = jnp.where(vis, jnp.exp(s - m_safe[..., None]), 0.0)
+    l = ompccl.allreduce(p.sum(axis=-1), group)
+    acc = jnp.einsum("bhgs,bshd->bhgd", p, cache.v.astype(F32))
+    acc = ompccl.allreduce(acc, group)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, 1, H, Dv).astype(q.dtype)
+
+
+def _update_cache(cache: KVCache, k_new, v_new, group: Optional[DiompGroup]):
+    """Write one decode step's K/V at cache.pos (context-sharded aware).
+
+    ``cache.pos`` may be a scalar (uniform batch) or a (B,) vector
+    (continuous batching: per-slot positions).
+    """
+    if jnp.ndim(cache.pos) == 1:  # per-slot positions
+        def write(c, new, p):
+            return lax.dynamic_update_slice(c, new.astype(c.dtype), (p, 0, 0))
+
+        k = jax.vmap(write)(cache.k, k_new, cache.pos)
+        v = jax.vmap(write)(cache.v, v_new, cache.pos)
+        return KVCache(k, v, cache.pos + 1, seq_sharded=cache.seq_sharded)
+    if cache.seq_sharded:
+        assert group is not None
+        s_loc = cache.k.shape[1]
+        lo = lax.axis_index(group.axes[0]) * s_loc
+        local = jnp.clip(cache.pos - lo, 0, s_loc - 1)
+        in_range = (cache.pos >= lo) & (cache.pos < lo + s_loc)
+        k_w = lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                       (0, local, 0, 0))
+        v_w = lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                       (0, local, 0, 0))
+        k = jnp.where(in_range, k_w, cache.k)
+        v = jnp.where(in_range, v_w, cache.v)
+    else:
+        k = lax.dynamic_update_slice(cache.k, k_new.astype(cache.k.dtype),
+                                     (0, cache.pos, 0, 0))
+        v = lax.dynamic_update_slice(cache.v, v_new.astype(cache.v.dtype),
+                                     (0, cache.pos, 0, 0))
+    return KVCache(k, v, cache.pos + 1, seq_sharded=cache.seq_sharded)
+
+
+def local_kv_heads(cfg: ModelConfig, ctx: ParallelCtx) -> int:
+    """KV heads each device keeps (cache + attention operand width)."""
+    if kv_sharded(cfg):
+        return cfg.kv_heads // ctx.tp
+    if head_parallel(cfg) and ctx.tp > 1:
+        H_loc = cfg.num_heads // ctx.tp
+        group = cfg.num_heads // cfg.kv_heads
+        assert H_loc % group == 0 or group % H_loc == 0, (H_loc, group)
+        return max(1, H_loc // group)
+    return cfg.kv_heads
+
+
+def _slice_kv(kv, cfg: ModelConfig, ctx: ParallelCtx):
+    """With heads sharded but KV replicated, keep only the KV heads my local
+    q-head block maps to (q head h -> kv head h // (H/KV))."""
+    KV_keep = local_kv_heads(cfg, ctx)
+    if KV_keep == kv.shape[2]:
+        return kv
+    H_loc = cfg.num_heads // ctx.tp
+    group = cfg.num_heads // cfg.kv_heads
+    first_q = lax.axis_index(ctx.tp_group.axes[0]) * H_loc
+    return lax.dynamic_slice_in_dim(kv, first_q // group, KV_keep, axis=2)
+
+
+def attention_block(
+    x, lp: Dict[str, jax.Array], cfg: ModelConfig, ctx: ParallelCtx,
+    *,
+    positions=None,
+    prefix_len: int = 0,
+    cache: Optional[KVCache] = None,
+    causal: Optional[bool] = None,
+):
+    """GQA attention with residual-input x (B, T, d); returns (out, cache').
+
+    Three execution strategies (DESIGN.md §5):
+    * head-parallel  — q heads divide MAX_TP: heads sharded over "model";
+    * token-parallel — otherwise (e.g. paligemma H=8): weights replicated
+      over "model", the T axis is sliced instead;
+    * decode         — T == 1 with a cache: head-sharded, replicated, or
+      context(S)-sharded cache (cp_decode_attention).
+    """
+    B, T, d = x.shape
+    hp = head_parallel(cfg)
+    kvs = kv_sharded(cfg)
+    hd = cfg.head_dim
+    H_loc = cfg.num_heads // ctx.tp if hp else cfg.num_heads
+    KV_loc = cfg.kv_heads // ctx.tp if kvs else cfg.kv_heads
+    causal = cfg.causal if causal is None else causal
+    if positions is None:
+        positions = jnp.arange(T)
+
+    bq = lp.get("bq")
+    bk = lp.get("bk")
+    bv = lp.get("bv")
+
+    decode = cache is not None and T == 1
+    token_parallel = (not hp) and (not decode) and T % ctx.tp == 0 and ctx.tp > 1
+
+    if token_parallel:
+        t_loc = T // ctx.tp
+        t0 = lax.axis_index(ctx.tp_group.axes[0]) * t_loc
+        x_me = lax.dynamic_slice_in_dim(x, t0, t_loc, axis=1)
+        pos_me = lax.dynamic_slice_in_dim(positions, t0, t_loc, axis=0)
+    else:
+        x_me, pos_me = x, positions
+
+    q = col_matmul(x_me, lp["wq"], ctx, bq).reshape(*x_me.shape[:2], H_loc, hd)
+    k = col_matmul(x_me, lp["wk"], ctx, bk).reshape(*x_me.shape[:2], KV_loc, hd)
+    v = col_matmul(x_me, lp["wv"], ctx, bv).reshape(*x_me.shape[:2], KV_loc, hd)
+    if hp and not kvs and ctx.tp > 1:
+        # heads sharded, KV weights replicated: keep only my groups' KV heads
+        k = _slice_kv(k, cfg, ctx)
+        v = _slice_kv(v, cfg, ctx)
+    if cfg.rope_fraction > 0:
+        q = rope(q, pos_me, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+        k = rope(k, pos_me, theta=cfg.rope_theta, fraction=cfg.rope_fraction)
+
+    new_cache = cache
+    if decode:
+        new_cache = _update_cache(
+            cache, k, v,
+            ctx.fsdp_group if cache.seq_sharded else None,
+        )
+        if cache.seq_sharded:
+            attn = cp_decode_attention(q, new_cache, ctx.fsdp_group,
+                                       scale=hd ** -0.5)
+        else:
+            attn = flash_attention(
+                q, new_cache.k, new_cache.v, causal=True,
+                q_offset=new_cache.pos - 1, valid_len=new_cache.pos,
+            )  # pos may be scalar or (B,) — the ref kernel broadcasts
+    elif token_parallel:
+        # KV must cover the full sequence: gather over the TP group
+        k_full = ompccl.allgather(k, ctx.tp_group, axis=1,
+                                  invariant=ctx.inference)
+        v_full = ompccl.allgather(v, ctx.tp_group, axis=1,
+                                  invariant=ctx.inference)
+        attn = flash_attention(
+            q, k_full, v_full, causal=causal, q_offset=t0,
+            prefix_len=prefix_len,
+        )
+        if cache is not None:  # prefill: persist the gathered KV
+            new_cache = KVCache(
+                lax.dynamic_update_slice(
+                    cache.k, k_full.astype(cache.k.dtype), (0, 0, 0, 0)),
+                lax.dynamic_update_slice(
+                    cache.v, v_full.astype(cache.v.dtype), (0, 0, 0, 0)),
+                jnp.asarray(T, jnp.int32), seq_sharded=False,
+            )
+    else:
+        attn = flash_attention(q, k, v, causal=causal, prefix_len=prefix_len)
+        if cache is not None:  # prefill into a decode cache
+            new_cache = KVCache(
+                lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                         (0, 0, 0, 0)),
+                lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                         (0, 0, 0, 0)),
+                jnp.asarray(T, jnp.int32), seq_sharded=False,
+            )
+
+    attn2 = attn.reshape(*attn.shape[:2], H_loc * hd)
+    if token_parallel:
+        out_me = jnp.dot(attn2, gather_fsdp(lp["wo"], ctx, dim=1),
+                         preferred_element_type=F32).astype(x.dtype)
+        out = ompccl.allgather(out_me, ctx.tp_group, axis=1,
+                               invariant=ctx.inference)   # tokens back
+    elif hp:
+        out = row_matmul(attn2, lp["wo"], ctx)
+    else:  # decode on replicated heads: wo replicated over model
+        out = jnp.dot(attn2, gather_fsdp(lp["wo"], ctx, dim=1),
+                      preferred_element_type=F32).astype(x.dtype)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MLACache:
+    """Latent cache: c_kv (B, S, kr) + rope'd shared key (B, S, dr)."""
+
+    c: jax.Array
+    kr: jax.Array
+    pos: jax.Array
+
+    def tree_flatten(self):
+        return (self.c, self.kr, self.pos), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+jax.tree_util.register_pytree_node(
+    MLACache, MLACache.tree_flatten, MLACache.tree_unflatten
+)
+
+
+def mla_block(
+    x, lp, cfg: ModelConfig, ctx: ParallelCtx,
+    *, positions=None, cache: Optional[MLACache] = None,
+):
+    """DeepSeek-V3 multi-head latent attention.  Returns (out, cache').
+
+    Train/prefill: decompress per-head K/V from the latent and run flash
+    attention.  Decode: *absorbed* form — attention runs in the latent space
+    against the (replicated, tiny) latent cache; only the final per-head
+    up-projection touches head dims.  TP: heads sharded (128 % 16 == 0);
+    the latent path is replicated (that is MLA's point: the cache is small).
+    """
+    B, T, d = x.shape
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kr_rank = cfg.kv_lora_rank
+    H_loc = cfg.num_heads // ctx.tp if head_parallel(cfg) else cfg.num_heads
+    if positions is None:
+        positions = jnp.arange(T)
+    scale = (dn + dr) ** -0.5
+
+    cq = rmsnorm(col_matmul(x, lp["wq_a"], ctx), lp["q_norm"], cfg.norm_eps)
+    q = col_matmul(cq, lp["wq_b"], ctx).reshape(B, T, H_loc, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, theta=cfg.rope_theta)
+
+    ckv = col_matmul(x, lp["wkv_a"], ctx)                     # (B, T, kr+dr)
+    c = rmsnorm(ckv[..., :kr_rank], lp["kv_norm"], cfg.norm_eps)
+    k_rope = rope(ckv[..., None, kr_rank:], positions, theta=cfg.rope_theta)
+
+    wkv_b = gather_fsdp(lp["wkv_b"], ctx, dim=0)              # (kr, H_loc*(dn+dv))
+    wkv_b = wkv_b.reshape(kr_rank, H_loc, dn + dv)
+
+    new_cache = cache
+    if cache is not None and T == 1:
+        # absorbed decode
+        if jnp.ndim(cache.pos) == 1:  # per-slot positions
+            wr = lambda cc, new, p: lax.dynamic_update_slice(
+                cc, new.astype(cc.dtype), (p, 0))
+            new_cache = MLACache(
+                jax.vmap(wr)(cache.c, c, cache.pos),
+                jax.vmap(wr)(cache.kr, k_rope[:, :, 0], cache.pos),
+                cache.pos + 1,
+            )
+        else:
+            new_cache = MLACache(
+                lax.dynamic_update_slice(cache.c, c.astype(cache.c.dtype),
+                                         (0, cache.pos, 0)),
+                lax.dynamic_update_slice(cache.kr, k_rope[:, :, 0].astype(
+                    cache.kr.dtype), (0, cache.pos, 0)),
+                cache.pos + 1,
+            )
+        q_lat = jnp.einsum("bthn,khn->bthk", q_nope.astype(F32),
+                           wkv_b[..., :dn].astype(F32))        # (B,1,H,kr)
+        s = jnp.einsum("bthk,bsk->bhs", q_lat,
+                       new_cache.c.astype(F32)) + jnp.einsum(
+            "bthr,bsr->bhs", q_rope.astype(F32), new_cache.kr.astype(F32))
+        s = s * scale
+        k_pos = jnp.arange(new_cache.c.shape[1])
+        vis = k_pos[None, None, :] < jnp.reshape(new_cache.pos, (-1, 1, 1))
+        s = jnp.where(vis, s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1, where=vis)
+        ctx_lat = jnp.einsum("bhs,bsk->bhk", p, new_cache.c.astype(F32))
+        attn = jnp.einsum("bhk,khn->bhn", ctx_lat,
+                          wkv_b[..., dn:].astype(F32))         # (B,H,dv)
+        attn = attn[:, None].astype(x.dtype)                   # (B,1,H,dv)
+    else:
+        kv = jnp.einsum("btk,khn->bthn", c.astype(F32),
+                        wkv_b.astype(F32)).astype(x.dtype)     # decompress
+        k_nope, v = kv[..., :dn], kv[..., dn:]
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, T, H_loc, dr))], axis=-1)
+        qkr = jnp.concatenate([q_nope, q_rope], axis=-1)
+        attn = flash_attention(qkr, k, v, causal=True, scale=scale)
+        if cache is not None:  # prefill the latent cache
+            new_cache = MLACache(
+                lax.dynamic_update_slice(cache.c, c.astype(cache.c.dtype),
+                                         (0, 0, 0)),
+                lax.dynamic_update_slice(
+                    cache.kr, k_rope[:, :, 0].astype(cache.kr.dtype), (0, 0, 0)),
+                jnp.asarray(T, jnp.int32),
+            )
+
+    out = row_matmul(attn.reshape(B, -1, H_loc * dv), lp["wo"], ctx)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_block(x, lp, ctx: ParallelCtx, *, act: str = "silu",
+              names=("w_gate", "w_up", "w_down")):
+    """SwiGLU/GeGLU column->row parallel MLP."""
+    g, u, dwn = names
+    h = col_matmul(x, lp[g], ctx)
+    h = jax.nn.silu(h) if act == "silu" else jax.nn.gelu(h)
+    h = h * col_matmul(x, lp[u], ctx)
+    return row_matmul(h, lp[dwn], ctx)
+
+
+def gelu_mlp_block(x, lp, ctx: ParallelCtx):
+    """Plain 2-matmul GELU MLP (hubert encoder): reuses w_up/w_down."""
+    h = jax.nn.gelu(col_matmul(x, lp["w_up"], ctx))
+    return row_matmul(h, lp["w_down"], ctx)
+
+
+# ---------------------------------------------------------------------------
+# MoE (expert-parallel over the "model" axis, all_to_all dispatch)
+# ---------------------------------------------------------------------------
+
+def moe_block(x, lp, cfg: ModelConfig, ctx: ParallelCtx):
+    """Top-k expert-parallel FFN (GShard-style capacity dispatch).
+
+    EP layouts:
+    * default    — experts sharded over "model" (E/tp per chip); expert
+      weights keep a ZeRO-3 d-shard that is all-gathered at use;
+    * expert2d   — experts sharded over ("model","data") (beyond-paper,
+      DESIGN.md §Perf): each chip owns whole experts with full d/ff, the
+      dispatch all-to-all runs over the combined EP group, and the
+      per-microbatch weight gathers disappear.
+
+    Regimes per call:
+    * "a2a"        — tokens sliced over "model", one ompx_alltoall out and
+      back (train / prefill);
+    * "replicated" — few tokens (decode): dispatch replicated across the EP
+      group (expert2d first all-gathers the data-sharded tokens), experts
+      sliced, partial-combine psum;
+    * "local"      — tp == 1 or E unshardable.
+
+    Capacity = ceil(T_loc*k/E)*capacity_factor; overflow drops (combine
+    weights renormalized) — the deviation from DeepSeek's dropless kernel is
+    recorded in DESIGN.md.
+    """
+    B, T, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    tp = ctx.tp
+    ep2d = ctx.expert2d and E % max(ctx.ep_size, 1) == 0 and ctx.ep_size > 1
+    ep = ctx.ep_size if ep2d else tp
+    E_loc = E // ep if (E % ep == 0 and ep > 1) else E
+    if E % ep == 0 and ep > 1 and (B * T) % tp == 0 and B * T >= tp:
+        regime = "a2a"
+    elif E % ep == 0 and ep > 1:
+        regime = "replicated"
+    else:
+        regime = "local"
+        E_loc = E
+
+    flat = x.reshape(B * T, d)
+    toks_local = flat                     # shared-expert input (my tokens)
+    if regime == "a2a":
+        t_loc = (B * T) // tp             # tokens sliced over "model" only
+        t0 = lax.axis_index(ctx.tp_group.axes[0]) * t_loc
+        toks = lax.dynamic_slice_in_dim(flat, t0, t_loc, axis=0)
+    elif regime == "replicated" and ep2d and ctx.fsdp > 1:
+        # decode: tokens are data-sharded; gather so dispatch is identical
+        # across the combined EP group (tiny at decode: B*T tokens)
+        toks = ompccl.allgather(flat, ctx.fsdp_group, axis=0,
+                                invariant=ctx.inference)
+        t_loc = B * T * ctx.fsdp
+    else:
+        toks, t_loc = flat, B * T
+
+    router = lp["router"].astype(F32)                         # (d, E) replicated
+    logits = jnp.dot(toks.astype(F32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = lax.top_k(probs, k)                        # (t_loc, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    cap = int((t_loc * k / E) * cfg.capacity_factor + 1)
+    cap = max(cap, 4)
+
+    # slot assignment: position of each (token, choice) within its expert
+    e_flat = top_e.reshape(-1)                                # (t_loc*k,)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)       # (t_loc*k, E)
+    slot = (jnp.cumsum(onehot, axis=0) - 1) * onehot          # running index
+    slot = slot.sum(-1)                                       # (t_loc*k,)
+    keep = slot < cap
+    addr = e_flat * cap + jnp.clip(slot, 0, cap - 1)
+
+    from repro.core.vma import zeros_varying
+
+    buf = zeros_varying((E * cap, d), x.dtype, x)
+    src = jnp.repeat(toks, k, axis=0)                         # (t_loc*k, d)
+    buf = buf.at[jnp.where(keep, addr, E * cap - 1)].add(
+        jnp.where(keep[:, None], src, 0.0).astype(x.dtype), mode="drop")
+
+    if regime == "a2a":
+        sendbuf = buf.reshape(ep, E_loc * cap, d)
+        recv = ompccl.alltoall(sendbuf, ctx.ep_group,
+                               split_axis=0, concat_axis=0)    # (ep, E_loc*cap, d)
+        expert_in = recv.reshape(ep, E_loc, cap, d).transpose(1, 0, 2, 3)
+        expert_in = expert_in.reshape(E_loc, ep * cap, d)
+    elif regime == "replicated":
+        # dispatch is replicated across the EP group; slice my expert block
+        off = ompccl.group_rank(ctx.ep_group) * E_loc * cap
+        expert_in = lax.dynamic_slice_in_dim(
+            buf, off, E_loc * cap, axis=0).reshape(E_loc, cap, d)
+    else:
+        expert_in = buf.reshape(E_loc, cap, d)
+
+    if ep2d:
+        # expert2d: weights already hold full d/ff — no ZeRO-3 gather
+        wg, wu, wd = lp["w_gate_e"], lp["w_up_e"], lp["w_down_e"]
+    else:
+        wg = gather_fsdp(lp["w_gate_e"], ctx, dim=1)          # (E_loc, d, ffm)
+        wu = gather_fsdp(lp["w_up_e"], ctx, dim=1)
+        wd = gather_fsdp(lp["w_down_e"], ctx, dim=2)          # (E_loc, ffm, d)
+    h = jnp.einsum("ecd,edf->ecf", expert_in, wg)
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", expert_in, wu)
+    out_e = jnp.einsum("ecf,efd->ecd", h, wd).astype(x.dtype)
+
+    gates = (keep[:, None] * top_w.reshape(-1)[:, None]).astype(x.dtype)
+    if regime == "a2a":
+        back = out_e.reshape(E_loc, ep, cap, d).transpose(1, 0, 2, 3)
+        back = back.reshape(ep, E_loc * cap, d)
+        ret = ompccl.alltoall(back, ctx.ep_group, split_axis=0, concat_axis=0)
+        ret = ret.reshape(E * cap, d)
+        picked = ret[addr] * gates
+        combined = picked.reshape(t_loc, k, d).sum(axis=1)
+    elif regime == "replicated":
+        # partial combine: only my experts contribute; psum over the group
+        off = ompccl.group_rank(ctx.ep_group) * E_loc * cap
+        local = addr - off
+        mine = (local >= 0) & (local < E_loc * cap)
+        ret_me = out_e.reshape(E_loc * cap, d)
+        picked = jnp.where(
+            mine[:, None],
+            ret_me[jnp.clip(local, 0, E_loc * cap - 1)], 0.0).astype(x.dtype)
+        combined = (picked * gates).reshape(t_loc, k, d).sum(axis=1)
+        combined = ompccl.allreduce(combined, ctx.ep_group)
+        if ep2d and ctx.fsdp > 1:   # back to my data-shard's rows
+            r0 = lax.axis_index(ctx.fsdp_group.axes[0]) * (B * T)
+            combined = lax.dynamic_slice_in_dim(combined, r0, B * T, axis=0)
+    else:
+        ret = out_e.reshape(E * cap, d)
+        picked = ret[addr] * gates
+        combined = picked.reshape(t_loc, k, d).sum(axis=1)
+
+    if "w_gate_s" in lp:  # shared experts (DeepSeek)
+        shared_in = toks if regime == "a2a" else toks_local
+        shared = mlp_block(shared_in, lp, ctx,
+                           names=("w_gate_s", "w_up_s", "w_down_s"))
+        combined = combined + shared
+
+    if regime == "a2a":
+        out = ompccl.allgather(combined, ctx.tp_group, axis=0,
+                               invariant=ctx.inference)  # tokens back
+    else:
+        out = combined
+    return out.reshape(B, T, d)

@@ -1,0 +1,203 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent decay.
+
+Manual-SPMD layout: heads (d / rwkv_head_dim) sharded over "model"; the
+d→d projections are Megatron column shards; channel-mix is column→row with
+an explicit reduce; per-channel decay/bonus vectors live in projection
+output space so they shard with the heads.  The WKV recurrence runs through
+the unified :mod:`repro.kernels.linear_scan` (chunked Pallas kernel on TPU,
+jnp scan oracle elsewhere): state S_t = diag(w_t)·S_{t-1} + k_tᵀv_t, readout
+r_t·(S_{t-1} + diag(u)·k_tᵀv_t).
+
+Simplification vs the full Finch release (recorded in DESIGN.md): the five
+token-shift mix coefficients are static (no per-token LoRA on the mu's);
+the decay LoRA (w0 + tanh(x·A)·B) is kept — it is the paper's headline
+"data-dependent decay".
+
+Decode state per layer: token-shift carries (x_tm, x_cm) and the WKV state
+(B, H_loc, hd, hd) — O(1) in sequence length, which is why rwkv6 runs the
+long_500k shape natively.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import ompccl
+from repro.core.vma import zeros_varying
+from repro.kernels.linear_scan.ops import linear_scan
+from .config import ModelConfig, ParallelCtx
+from .layers import (F32, ce_loss, col_matmul, embed_lookup, gather_fsdp,
+                     layernorm, rmsnorm, row_matmul, tp_allreduce)
+
+__all__ = ["rwkv_forward", "rwkv_loss", "rwkv_init_state", "rwkv_decode"]
+
+
+def _token_shift(x, prev_last):
+    """x_{t-1} along T; position 0 uses prev_last (B, d) (zeros at start)."""
+    shifted = jnp.concatenate([prev_last[:, None, :], x[:, :-1]], axis=1)
+    return shifted
+
+
+def _per_head_norm(y, scale_loc, eps):
+    """GroupNorm(H) analogue: layernorm within each head's hd channels."""
+    yf = y.astype(F32)
+    mu = yf.mean(-1, keepdims=True)
+    var = ((yf - mu) ** 2).mean(-1, keepdims=True)
+    out = (yf - mu) * lax.rsqrt(var + eps)
+    B, T, H_loc, hd = y.shape
+    return (out * scale_loc.reshape(H_loc, hd).astype(F32)).astype(y.dtype)
+
+
+def rwkv_block(x, lp, cfg: ModelConfig, ctx: ParallelCtx,
+               state: Optional[dict] = None, *, scan_impl: str = "ref"):
+    """One RWKV6 block.  Returns (x', new_state)."""
+    B, T, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    H_loc = H // ctx.tp
+    d_loc = d // ctx.tp
+
+    # ---- time mix -----------------------------------------------------------
+    xs = layernorm(x, lp["ln1"], cfg.norm_eps)
+    prev = state["x_tm"] if state is not None else zeros_varying(
+        (B, d), xs.dtype, xs)
+    shifted = _token_shift(xs, prev)
+    mu = lp["tm_mu"].astype(F32)                       # (5, d)
+    delta = shifted.astype(F32) - xs.astype(F32)
+    mix = lambda j: (xs.astype(F32) + mu[j] * delta).astype(x.dtype)
+    xr, xk, xv, xw, xg = mix(0), mix(1), mix(2), mix(3), mix(4)
+
+    r = col_matmul(xr, lp["tm_wr"], ctx)               # (B, T, d_loc)
+    k = col_matmul(xk, lp["tm_wk"], ctx)
+    v = col_matmul(xv, lp["tm_wv"], ctx)
+    g = jax.nn.silu(col_matmul(xg, lp["tm_wg"], ctx).astype(F32))
+
+    # data-dependent decay (LoRA): w = exp(-exp(w0 + tanh(xw A) B))
+    low = jnp.tanh(jnp.dot(xw.astype(F32), lp["tm_wA"].astype(F32)))
+    w_log = lp["tm_w0"].astype(F32) + jnp.dot(low, lp["tm_wB"].astype(F32))
+    w = jnp.exp(-jnp.exp(w_log))                       # (B, T, d_loc) in (0,1)
+
+    def heads(t):  # (B, T, d_loc) -> (B*H_loc, T, hd)
+        return t.reshape(B, T, H_loc, hd).transpose(0, 2, 1, 3).reshape(
+            B * H_loc, T, hd)
+
+    s0 = state["S"].reshape(B * H_loc, hd, hd) if state is not None else None
+    y, s_fin = linear_scan(
+        heads(v.astype(F32)), heads(k.astype(F32)), heads(w),
+        heads(r.astype(F32)), s0, readout_pre=True,
+        impl=scan_impl if state is None else "ref")
+    # diag(u) bonus: y_t += v_t * sum_n(r_t u k_t)
+    u = lp["tm_u"].astype(F32).reshape(H_loc, hd)
+    rk = (r.astype(F32) * k.astype(F32)).reshape(B, T, H_loc, hd)
+    bonus = (rk * u).sum(-1)                           # (B, T, H_loc)
+    y = y.reshape(B, H_loc, T, hd).transpose(0, 2, 1, 3)
+    y = y + bonus[..., None] * v.astype(F32).reshape(B, T, H_loc, hd)
+
+    y = _per_head_norm(y.astype(x.dtype), lp["tm_lnx"], cfg.norm_eps)
+    y = (y.reshape(B, T, d_loc).astype(F32) * g).astype(x.dtype)
+    x = x + row_matmul(y, lp["tm_wo"], ctx)
+
+    # ---- channel mix ----------------------------------------------------------
+    xs2 = layernorm(x, lp["ln2"], cfg.norm_eps)
+    prev2 = state["x_cm"] if state is not None else zeros_varying(
+        (B, d), xs2.dtype, xs2)
+    shifted2 = _token_shift(xs2, prev2)
+    cmu = lp["cm_mu"].astype(F32)                      # (2, d)
+    xk2 = (xs2.astype(F32) + cmu[0] * (shifted2.astype(F32) - xs2.astype(F32))
+           ).astype(x.dtype)
+    xr2 = (xs2.astype(F32) + cmu[1] * (shifted2.astype(F32) - xs2.astype(F32))
+           ).astype(x.dtype)
+    kk = col_matmul(xk2, lp["cm_wk"], ctx).astype(F32)
+    kk = jnp.square(jax.nn.relu(kk)).astype(x.dtype)
+    vv = row_matmul(kk, lp["cm_wv"], ctx)              # (B, T, d) full
+    rr = jax.nn.sigmoid(col_matmul(xr2, lp["cm_wr"], ctx).astype(F32))
+    if ctx.tp > 1:
+        off = lax.axis_index(ctx.tp_group.axes[0]) * d_loc
+        vv_loc = lax.dynamic_slice_in_dim(vv, off, d_loc, axis=-1)
+        out2 = ompccl.allgather((rr * vv_loc.astype(F32)).astype(x.dtype),
+                                ctx.tp_group, axis=2, invariant=ctx.inference)
+    else:
+        out2 = (rr * vv.astype(F32)).astype(x.dtype)
+    x = x + out2
+
+    new_state = None
+    if state is not None:
+        new_state = {
+            "x_tm": xs[:, -1, :],
+            "x_cm": xs2[:, -1, :],
+            "S": s_fin.reshape(B, H_loc, hd, hd),
+        }
+    return x, new_state
+
+
+def rwkv_forward(params, tokens, cfg: ModelConfig, ctx: ParallelCtx,
+                 state: Optional[dict] = None, *, scan_impl: str = "ref"):
+    """Returns (hidden (B, T, d), new_state or None).
+
+    ``state`` (stacked per layer) enables chunked prefill / decode; None for
+    training.
+    """
+    x = embed_lookup(tokens, params["embed/table"], cfg, ctx)
+    x = layernorm(x, params["embed_norm"], cfg.norm_eps)
+    L = cfg.num_layers
+    plen = len("layers/")
+    stack = {k[plen:]: v for k, v in params.items() if k.startswith("layers/")}
+
+    in_vma = getattr(jax.typeof(x), "vma", frozenset())
+    axes = set(in_vma)
+    if not ctx.inference:
+        if ctx.tp > 1:
+            axes.add("model")
+        if ctx.fsdp > 1:
+            axes.add("data")
+    carry_axes = tuple(a for a in ctx.world.lax_axes if a in axes)
+
+    def body(carry, xs):
+        h = carry
+        if state is None:
+            lp, st = xs, None
+        else:
+            lp, st = xs
+        h2, st2 = rwkv_block(h, lp, cfg, ctx, st, scan_impl=scan_impl)
+        h2 = ompccl.ensure_varying(h2, carry_axes)
+        if st2 is None:
+            st2 = 0.0  # placeholder ys
+        return h2, st2
+
+    if ctx.remat and state is None:
+        body = jax.checkpoint(body)
+    xs = stack if state is None else (stack, state)
+    x = ompccl.ensure_varying(x, carry_axes)
+    x, new_states = lax.scan(body, x, xs)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x, (new_states if state is not None else None)
+
+
+def rwkv_loss(params, batch, cfg: ModelConfig, ctx: ParallelCtx):
+    h, _ = rwkv_forward(params, batch["tokens"], cfg, ctx)
+    return ce_loss(h[:, :-1], params["lm_head"], batch["tokens"][:, 1:],
+                   cfg, ctx)
+
+
+def rwkv_init_state(cfg: ModelConfig, ctx: ParallelCtx, B_loc: int,
+                    dtype=jnp.bfloat16):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H_loc = d // hd // ctx.tp
+    L = cfg.num_layers
+    return {
+        "x_tm": jnp.zeros((L, B_loc, d), dtype),
+        "x_cm": jnp.zeros((L, B_loc, d), dtype),
+        "S": jnp.zeros((L, B_loc, H_loc, hd, hd), jnp.float32),
+    }
+
+
+def rwkv_decode(params, tokens, cfg, ctx, state):
+    """One decode step (B, 1) -> (local logits, new state)."""
+    h, state = rwkv_forward(params, tokens, cfg, ctx, state)
+    logits = jnp.dot(h.astype(F32), params["lm_head"].astype(F32))
+    return logits, state

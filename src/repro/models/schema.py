@@ -1,0 +1,286 @@
+"""Parameter schema — one declarative table per architecture.
+
+The schema is the bridge between the model zoo and the DiOMP runtime: every
+parameter declares its global shape and *logical* placement axes once, and
+from that single declaration we derive
+
+* materialized init (smoke tests / examples),
+* ``ShapeDtypeStruct`` stand-ins (the dry-run never allocates),
+* ``PartitionSpec`` in_specs for the manual shard_map step,
+* PGAS registration rows (GlobalMemory arena planning).
+
+Shardability rules are decided against the *production* TP width
+(``MAX_TP = 16``): a dim is sharded over "model" only if it stays divisible
+there (then it is automatically divisible on the smaller smoke meshes).
+Q/KV heads that do not divide fall back to replicated weights + the
+token-parallel attention path (DESIGN.md §5, e.g. paligemma's 8 heads).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+__all__ = [
+    "MAX_TP", "ParamSpec", "build_schema", "init_params", "param_structs",
+    "partition_specs", "head_parallel", "kv_sharded", "vocab_sharded",
+]
+
+MAX_TP = 16  # the production "model" axis width
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: str = "bfloat16"
+    init: str = "normal"          # normal | zeros | ones
+    scale: float = 0.02
+    per_expert: bool = False      # for active-param accounting
+
+
+# -- shardability predicates (shared with layers.py) -------------------------
+
+def head_parallel(cfg: ModelConfig) -> bool:
+    return cfg.num_heads > 0 and cfg.num_heads % MAX_TP == 0
+
+
+def kv_sharded(cfg: ModelConfig) -> bool:
+    return cfg.kv_heads > 0 and cfg.kv_heads % MAX_TP == 0
+
+
+def vocab_sharded(cfg: ModelConfig) -> bool:
+    return cfg.vocab_size % MAX_TP == 0
+
+
+def _heads_ax(cfg) -> Optional[str]:
+    return "heads" if head_parallel(cfg) else None
+
+
+def _kv_ax(cfg) -> Optional[str]:
+    return "kv_heads" if kv_sharded(cfg) else None
+
+
+def _vocab_ax(cfg) -> Optional[str]:
+    return "vocab" if vocab_sharded(cfg) else None
+
+
+# -- per-family builders ------------------------------------------------------
+
+def _dense_layer(cfg: ModelConfig, L: int, d_ff: int, prefix: str,
+                 s: Dict[str, ParamSpec]) -> None:
+    """One stacked block of standard GQA decoder/encoder layers."""
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.kv_heads, cfg.head_dim
+    ha, ka = _heads_ax(cfg), _kv_ax(cfg)
+    s[f"{prefix}/attn_norm"] = ParamSpec((L, d), (None, None), init="ones")
+    s[f"{prefix}/wq"] = ParamSpec((L, d, H * hd), (None, "embed_fsdp", ha))
+    s[f"{prefix}/wk"] = ParamSpec((L, d, KV * hd), (None, "embed_fsdp", ka))
+    s[f"{prefix}/wv"] = ParamSpec((L, d, KV * hd), (None, "embed_fsdp", ka))
+    if cfg.qkv_bias:
+        s[f"{prefix}/bq"] = ParamSpec((L, H * hd), (None, ha), init="zeros")
+        s[f"{prefix}/bk"] = ParamSpec((L, KV * hd), (None, ka), init="zeros")
+        s[f"{prefix}/bv"] = ParamSpec((L, KV * hd), (None, ka), init="zeros")
+    s[f"{prefix}/wo"] = ParamSpec((L, H * hd, d), (None, ha, "embed_fsdp"))
+    s[f"{prefix}/mlp_norm"] = ParamSpec((L, d), (None, None), init="ones")
+    s[f"{prefix}/w_gate"] = ParamSpec((L, d, d_ff), (None, "embed_fsdp", "mlp"))
+    s[f"{prefix}/w_up"] = ParamSpec((L, d, d_ff), (None, "embed_fsdp", "mlp"))
+    s[f"{prefix}/w_down"] = ParamSpec((L, d_ff, d), (None, "mlp", "embed_fsdp"))
+
+
+def _mla_layer(cfg: ModelConfig, L: int, prefix: str,
+               s: Dict[str, ParamSpec]) -> None:
+    """DeepSeek multi-head latent attention block (+ its FFN slot is added
+    separately as dense or MoE)."""
+    d, H = cfg.d_model, cfg.num_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ha = _heads_ax(cfg)
+    s[f"{prefix}/attn_norm"] = ParamSpec((L, d), (None, None), init="ones")
+    s[f"{prefix}/wq_a"] = ParamSpec((L, d, qr), (None, "embed_fsdp", None))
+    s[f"{prefix}/q_norm"] = ParamSpec((L, qr), (None, None), init="ones")
+    s[f"{prefix}/wq_b"] = ParamSpec((L, qr, H * (dn + dr)), (None, "embed_fsdp", ha))
+    s[f"{prefix}/wkv_a"] = ParamSpec((L, d, kr + dr), (None, "embed_fsdp", None))
+    s[f"{prefix}/kv_norm"] = ParamSpec((L, kr), (None, None), init="ones")
+    s[f"{prefix}/wkv_b"] = ParamSpec((L, kr, H * (dn + dv)), (None, "embed_fsdp", ha))
+    s[f"{prefix}/wo"] = ParamSpec((L, H * dv, d), (None, ha, "embed_fsdp"))
+
+
+def _moe_ffn(cfg: ModelConfig, L: int, prefix: str,
+             s: Dict[str, ParamSpec]) -> None:
+    d, E, ffm = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    s[f"{prefix}/mlp_norm"] = ParamSpec((L, d), (None, None), init="ones")
+    s[f"{prefix}/router"] = ParamSpec((L, d, E), (None, None, None),
+                                      dtype="float32", scale=0.006)
+    s[f"{prefix}/w_gate_e"] = ParamSpec(
+        (L, E, d, ffm), (None, "expert", "embed_fsdp", None), per_expert=True)
+    s[f"{prefix}/w_up_e"] = ParamSpec(
+        (L, E, d, ffm), (None, "expert", "embed_fsdp", None), per_expert=True)
+    s[f"{prefix}/w_down_e"] = ParamSpec(
+        (L, E, ffm, d), (None, "expert", None, "embed_fsdp"), per_expert=True)
+    if cfg.shared_experts:
+        ffs = ffm * cfg.shared_experts
+        s[f"{prefix}/w_gate_s"] = ParamSpec((L, d, ffs), (None, "embed_fsdp", "mlp"))
+        s[f"{prefix}/w_up_s"] = ParamSpec((L, d, ffs), (None, "embed_fsdp", "mlp"))
+        s[f"{prefix}/w_down_s"] = ParamSpec((L, ffs, d), (None, "mlp", "embed_fsdp"))
+
+
+def _rwkv_layer(cfg: ModelConfig, L: int, s: Dict[str, ParamSpec]) -> None:
+    d, ff, lora = cfg.d_model, cfg.d_ff, 64
+    s["layers/ln1"] = ParamSpec((L, 2, d), (None, None, None), init="ones")
+    s["layers/ln2"] = ParamSpec((L, 2, d), (None, None, None), init="ones")
+    # time-mix: token-shift mixing coefficients for (r, k, v, w, g)
+    s["layers/tm_mu"] = ParamSpec((L, 5, d), (None, None, None), init="ones",
+                                  scale=0.5)
+    s["layers/tm_w0"] = ParamSpec((L, d), (None, "heads"), init="zeros")
+    s["layers/tm_wA"] = ParamSpec((L, d, lora), (None, None, None), scale=0.01)
+    s["layers/tm_wB"] = ParamSpec((L, lora, d), (None, None, "heads"), scale=0.01)
+    s["layers/tm_u"] = ParamSpec((L, d), (None, "heads"), init="zeros")
+    for nm in ("wr", "wk", "wv", "wg"):
+        s[f"layers/tm_{nm}"] = ParamSpec((L, d, d), (None, "embed_fsdp", "heads"))
+    s["layers/tm_lnx"] = ParamSpec((L, d), (None, "heads"), init="ones")
+    s["layers/tm_wo"] = ParamSpec((L, d, d), (None, "heads", "embed_fsdp"))
+    # channel-mix
+    s["layers/cm_mu"] = ParamSpec((L, 2, d), (None, None, None), init="ones",
+                                  scale=0.5)
+    s["layers/cm_wk"] = ParamSpec((L, d, ff), (None, "embed_fsdp", "mlp"))
+    s["layers/cm_wv"] = ParamSpec((L, ff, d), (None, "mlp", "embed_fsdp"))
+    s["layers/cm_wr"] = ParamSpec((L, d, d), (None, "embed_fsdp", "heads"))
+
+
+def _mamba_layer(cfg: ModelConfig, L: int, s: Dict[str, ParamSpec]) -> None:
+    d = cfg.d_model
+    din = 2 * d
+    nh = din // 64
+    st, cw = cfg.ssm_state, cfg.conv_width
+    s["layers/norm"] = ParamSpec((L, d), (None, None), init="ones")
+    s["layers/w_x"] = ParamSpec((L, d, din), (None, "embed_fsdp", "heads"))
+    s["layers/w_z"] = ParamSpec((L, d, din), (None, "embed_fsdp", "heads"))
+    s["layers/w_bc"] = ParamSpec((L, d, 2 * st), (None, "embed_fsdp", None))
+    s["layers/w_dt"] = ParamSpec((L, d, nh), (None, "embed_fsdp", "heads"))
+    s["layers/dt_bias"] = ParamSpec((L, nh), (None, "heads"), init="zeros")
+    s["layers/conv_w"] = ParamSpec((L, cw, din), (None, None, "heads"), scale=0.1)
+    s["layers/conv_b"] = ParamSpec((L, din), (None, "heads"), init="zeros")
+    s["layers/A_log"] = ParamSpec((L, nh), (None, "heads"), init="zeros")
+    s["layers/D"] = ParamSpec((L, nh), (None, "heads"), init="ones")
+    s["layers/out_norm"] = ParamSpec((L, din), (None, "heads"), init="ones")
+    s["layers/w_out"] = ParamSpec((L, din, d), (None, "heads", "embed_fsdp"))
+
+
+# -- the public schema builder ------------------------------------------------
+
+def build_schema(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    s: Dict[str, ParamSpec] = {}
+    d, V = cfg.d_model, cfg.vocab_size
+    va = _vocab_ax(cfg)
+    s["embed/table"] = ParamSpec((V, d), (va, None), scale=1.0)
+    s["final_norm"] = ParamSpec((d,), (None,), init="ones")
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        _dense_layer(cfg, cfg.num_layers, cfg.d_ff, "layers", s)
+        if cfg.family == "audio":
+            s["embed_norm"] = ParamSpec((2, d), (None, None), init="ones")
+            s["head"] = ParamSpec((d, V), ("embed_fsdp", None))
+        elif cfg.family == "vlm":
+            pass  # tied embeddings: logits reuse embed/table
+        else:
+            s["lm_head"] = ParamSpec((d, V), (None, va))
+    elif cfg.family == "moe":
+        kd = cfg.first_k_dense
+        Lm = cfg.num_layers - kd
+        if cfg.attention == "mla":
+            if kd:
+                _mla_layer(cfg, kd, "dense_layers", s)
+                s["dense_layers/mlp_norm"] = ParamSpec((kd, d), (None, None), init="ones")
+                s["dense_layers/w_gate"] = ParamSpec((kd, d, cfg.d_ff), (None, "embed_fsdp", "mlp"))
+                s["dense_layers/w_up"] = ParamSpec((kd, d, cfg.d_ff), (None, "embed_fsdp", "mlp"))
+                s["dense_layers/w_down"] = ParamSpec((kd, cfg.d_ff, d), (None, "mlp", "embed_fsdp"))
+            _mla_layer(cfg, Lm, "layers", s)
+        else:
+            # GQA MoE (qwen3): attention part of _dense_layer, FFN replaced
+            H, KV, hd = cfg.num_heads, cfg.kv_heads, cfg.head_dim
+            ha, ka = _heads_ax(cfg), _kv_ax(cfg)
+            s["layers/attn_norm"] = ParamSpec((Lm, d), (None, None), init="ones")
+            s["layers/wq"] = ParamSpec((Lm, d, H * hd), (None, "embed_fsdp", ha))
+            s["layers/wk"] = ParamSpec((Lm, d, KV * hd), (None, "embed_fsdp", ka))
+            s["layers/wv"] = ParamSpec((Lm, d, KV * hd), (None, "embed_fsdp", ka))
+            s["layers/wo"] = ParamSpec((Lm, H * hd, d), (None, ha, "embed_fsdp"))
+        _moe_ffn(cfg, Lm, "layers", s)
+        s["lm_head"] = ParamSpec((d, V), (None, va))
+        if cfg.mtp:
+            s["mtp/proj"] = ParamSpec((2 * d, d), ("embed_fsdp", None))
+            s["mtp/norm_h"] = ParamSpec((d,), (None,), init="ones")
+            s["mtp/norm_e"] = ParamSpec((d,), (None,), init="ones")
+            _mla_layer(cfg, 1, "mtp/layer", s)
+            s["mtp/layer/mlp_norm"] = ParamSpec((1, d), (None, None), init="ones")
+            ffs = cfg.moe_d_ff * max(cfg.shared_experts, 1)
+            s["mtp/layer/w_gate"] = ParamSpec((1, d, ffs), (None, "embed_fsdp", "mlp"))
+            s["mtp/layer/w_up"] = ParamSpec((1, d, ffs), (None, "embed_fsdp", "mlp"))
+            s["mtp/layer/w_down"] = ParamSpec((1, ffs, d), (None, "mlp", "embed_fsdp"))
+    elif cfg.family == "ssm":  # rwkv6
+        s["embed_norm"] = ParamSpec((2, d), (None, None), init="ones")
+        _rwkv_layer(cfg, cfg.num_layers, s)
+        s["lm_head"] = ParamSpec((d, V), (None, va))
+    elif cfg.family == "hybrid":  # zamba2
+        _mamba_layer(cfg, cfg.num_layers, s)
+        # the SHARED attention+MLP block (one param set, reused)
+        H, KV, hd = cfg.num_heads, cfg.kv_heads, cfg.head_dim
+        ha, ka = _heads_ax(cfg), _kv_ax(cfg)
+        s["shared/attn_norm"] = ParamSpec((d,), (None,), init="ones")
+        s["shared/wq"] = ParamSpec((d, H * hd), ("embed_fsdp", ha))
+        s["shared/wk"] = ParamSpec((d, KV * hd), ("embed_fsdp", ka))
+        s["shared/wv"] = ParamSpec((d, KV * hd), ("embed_fsdp", ka))
+        s["shared/wo"] = ParamSpec((H * hd, d), (ha, "embed_fsdp"))
+        s["shared/mlp_norm"] = ParamSpec((d,), (None,), init="ones")
+        s["shared/w_gate"] = ParamSpec((d, cfg.d_ff), ("embed_fsdp", "mlp"))
+        s["shared/w_up"] = ParamSpec((d, cfg.d_ff), ("embed_fsdp", "mlp"))
+        s["shared/w_down"] = ParamSpec((cfg.d_ff, d), ("mlp", "embed_fsdp"))
+        s["lm_head"] = ParamSpec((d, V), (None, va))
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return s
+
+
+# -- derivations ---------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, jax.Array]:
+    """Materialize parameters (reduced configs / smoke tests only)."""
+    schema = build_schema(cfg)
+    out = {}
+    keys = jax.random.split(key, len(schema))
+    for k, (name, spec) in zip(keys, sorted(schema.items())):
+        dt = jnp.dtype(spec.dtype)
+        if spec.init == "zeros":
+            out[name] = jnp.zeros(spec.shape, dt)
+        elif spec.init == "ones":
+            out[name] = jnp.ones(spec.shape, dt)
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            std = min(spec.scale, 1.0 / math.sqrt(max(fan_in, 1)))
+            out[name] = (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dt)
+    return out
+
+
+def param_structs(cfg: ModelConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract stand-ins for the dry-run — zero allocation."""
+    return {
+        name: jax.ShapeDtypeStruct(spec.shape, jnp.dtype(spec.dtype))
+        for name, spec in build_schema(cfg).items()
+    }
+
+
+def partition_specs(cfg: ModelConfig, mesh, rules=None) -> Dict[str, object]:
+    """PartitionSpec per param (shard_map in_specs / NamedSharding)."""
+    from repro.distributed.sharding import DEFAULT_RULES, logical_to_spec
+
+    rules = rules or DEFAULT_RULES
+    return {
+        name: logical_to_spec(spec.axes, mesh, rules)
+        for name, spec in build_schema(cfg).items()
+    }

@@ -1,0 +1,230 @@
+"""Mamba2 (SSD) blocks + the Zamba2 hybrid (mamba stack + shared attention).
+
+Mamba2 state update per head:  h_t = exp(A·Δt)·h_{t-1} + Δt·B_tᵀx_t,
+y_t = C_t·h_t + D·x_t — the unified linear_scan with scalar per-head decay
+broadcast over the state dim, post-readout.
+
+Zamba2 wiring (DESIGN.md §5): an unrolled python loop over mamba layers with
+the SHARED attention+MLP block (one parameter set — the PGAS runtime
+registers it once and every invocation reads the same region) applied after
+every ``attn_every`` mamba layers.  Each application keeps its own KV cache
+slot at decode time.
+
+TP: the inner dim (2·d) is sharded over "model" via the head dim; B/C
+projections are small and replicated; the gated output norm reduces its
+statistics across TP with an explicit OMPCCL psum so the math is
+partition-invariant.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import ompccl
+from repro.core.vma import zeros_varying
+from repro.kernels.linear_scan.ops import linear_scan
+from .config import ModelConfig, ParallelCtx
+from .layers import (F32, KVCache, attention_block, ce_loss, col_matmul,
+                     embed_lookup, gather_fsdp, mlp_block, rmsnorm,
+                     row_matmul, local_kv_heads)
+
+__all__ = ["zamba_forward", "zamba_loss", "zamba_init_state", "zamba_decode"]
+
+
+def _rmsnorm_tp(x, scale_loc, ctx: ParallelCtx, eps: float):
+    """RMSNorm over a TP-sharded channel dim: stats psum'd across TP."""
+    xf = x.astype(F32)
+    sq = (xf * xf).sum(-1, keepdims=True)
+    n = x.shape[-1] * ctx.tp
+    if ctx.tp > 1:
+        sq = ompccl.allreduce(sq, ctx.tp_group)
+    inv = lax.rsqrt(sq / n + eps)
+    return (xf * inv * scale_loc.astype(F32)).astype(x.dtype)
+
+
+def _causal_conv(x, w_loc, b_loc, state: Optional[jax.Array]):
+    """Depthwise causal conv along T.  x: (B, T, C_loc); w: (cw, C_loc).
+
+    Returns (y, new_state) where state carries the trailing cw-1 inputs.
+    """
+    B, T, C = x.shape
+    cw = w_loc.shape[0]
+    if state is None:
+        hist = zeros_varying((B, cw - 1, C), x.dtype, x)
+    else:
+        hist = state
+    xp = jnp.concatenate([hist, x], axis=1)            # (B, T+cw-1, C)
+    y = zeros_varying((B, T, C), F32, x)
+    for i in range(cw):
+        y = y + w_loc[i].astype(F32) * xp[:, i:i + T].astype(F32)
+    y = y + b_loc.astype(F32)
+    new_state = xp[:, -(cw - 1):] if cw > 1 else hist
+    return y.astype(x.dtype), new_state
+
+
+def mamba_block(x, lp, cfg: ModelConfig, ctx: ParallelCtx,
+                state: Optional[dict] = None, *, scan_impl: str = "ref"):
+    """One Mamba2 block.  Returns (x', new_state)."""
+    B, T, d = x.shape
+    din = 2 * d
+    din_loc = din // ctx.tp
+    hd = 64
+    nh_loc = din_loc // hd
+    st = cfg.ssm_state
+
+    h = rmsnorm(x, lp["norm"], cfg.norm_eps)
+    x_in = col_matmul(h, lp["w_x"], ctx)               # (B, T, din_loc)
+    z = col_matmul(h, lp["w_z"], ctx)                  # (B, T, din_loc)
+    bc = jnp.dot(h, gather_fsdp(lp["w_bc"], ctx, dim=0),
+                 preferred_element_type=F32)           # replicated (B, T, 2st)
+    B_, C_ = bc[..., :st], bc[..., st:]
+    dt = jax.nn.softplus(
+        col_matmul(h, lp["w_dt"], ctx).astype(F32)
+        + lp["dt_bias"].astype(F32))                   # (B, T, nh_loc)
+
+    x_c, conv_state = _causal_conv(
+        x_in, lp["conv_w"], lp["conv_b"],
+        state["conv"] if state is not None else None)
+    x_c = jax.nn.silu(x_c.astype(F32))
+
+    A = -jnp.exp(lp["A_log"].astype(F32))              # (nh_loc,)
+    a = jnp.exp(A * dt)                                # (B, T, nh_loc)
+
+    xh = x_c.reshape(B, T, nh_loc, hd)
+    p = xh * dt[..., None]                             # (B, T, nh, hd)
+
+    def flat_h(t):  # (B, T, nh, k) -> (B*nh, T, k)
+        return t.transpose(0, 2, 1, 3).reshape(B * nh_loc, T, -1)
+
+    q_in = jnp.broadcast_to(B_[:, :, None, :], (B, T, nh_loc, st))
+    r_in = jnp.broadcast_to(C_[:, :, None, :], (B, T, nh_loc, st))
+    a_in = jnp.broadcast_to(a[..., None], (B, T, nh_loc, st))
+
+    s0 = state["S"].reshape(B * nh_loc, hd, st) if state is not None else None
+    y, s_fin = linear_scan(
+        flat_h(p), flat_h(q_in), flat_h(a_in), flat_h(r_in), s0,
+        readout_pre=False, impl=scan_impl if state is None else "ref")
+    y = y.reshape(B, nh_loc, T, hd).transpose(0, 2, 1, 3)
+    y = y + lp["D"].astype(F32)[None, None, :, None] * xh
+
+    y = y.reshape(B, T, din_loc)
+    y = _rmsnorm_tp(y.astype(x.dtype), lp["out_norm"], ctx, cfg.norm_eps)
+    y = (y.astype(F32) * jax.nn.silu(z.astype(F32))).astype(x.dtype)
+    out = row_matmul(y, lp["w_out"], ctx)
+
+    new_state = None
+    if state is not None:
+        new_state = {"conv": conv_state,
+                     "S": s_fin.reshape(B, nh_loc, hd, st)}
+    return x + out, new_state
+
+
+def _shared_params(params):
+    return {k[len("shared/"):]: v for k, v in params.items()
+            if k.startswith("shared/")}
+
+
+def zamba_forward(params, tokens, cfg: ModelConfig, ctx: ParallelCtx,
+                  cache: Optional[dict] = None, *, seq_sharded: bool = False,
+                  scan_impl: str = "ref"):
+    """Zamba2: L mamba blocks, shared attn+MLP after every attn_every.
+
+    ``cache``: {"mamba": stacked mamba states, "k"/"v": (n_app, B, S, KH, D),
+    "pos": ()} — None for training.  Returns (hidden, new_cache).
+    """
+    x = embed_lookup(tokens, params["embed/table"], cfg, ctx)
+    L = cfg.num_layers
+    every = max(cfg.attn_every, 1)
+    shared = _shared_params(params)
+    sl = lambda t, i: jax.tree.map(lambda a: a[i], t)
+    plen = len("layers/")
+    stack = {k[plen:]: v for k, v in params.items() if k.startswith("layers/")}
+
+    pos = cache["pos"] if cache is not None else None
+    positions = (jnp.full((1,), pos, jnp.int32) if cache is not None
+                 and tokens.shape[1] == 1 else None)
+
+    new_mamba, new_k, new_v = [], [], []
+    app = 0
+    for i in range(L):
+        st = sl(cache["mamba"], i) if cache is not None else None
+
+        def blk(h, st=st, i=i):
+            return mamba_block(h, sl(stack, i), cfg, ctx, st,
+                               scan_impl=scan_impl)
+
+        if ctx.remat and cache is None:
+            blk = jax.checkpoint(blk)
+        x, st2 = blk(x)
+        if cache is not None:
+            new_mamba.append(st2)
+        if (i + 1) % every == 0:
+            kv_cache = None
+            if cache is not None:
+                kv_cache = KVCache(cache["k"][app], cache["v"][app], pos,
+                                   seq_sharded=seq_sharded)
+
+            def shared_blk(h, kv_cache=kv_cache):
+                hn = rmsnorm(h, shared["attn_norm"], cfg.norm_eps)
+                attn, kv2 = attention_block(
+                    hn, shared, cfg, ctx, positions=positions, cache=kv_cache)
+                h = h + attn
+                hn = rmsnorm(h, shared["mlp_norm"], cfg.norm_eps)
+                return h + mlp_block(hn, shared, ctx), kv2
+
+            if ctx.remat and cache is None:
+                shared_blk = jax.checkpoint(shared_blk)
+            x, kv2 = shared_blk(x)
+            if cache is not None:
+                new_k.append(kv2.k)
+                new_v.append(kv2.v)
+            app += 1
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *new_mamba),
+            "k": jnp.stack(new_k),
+            "v": jnp.stack(new_v),
+            "pos": pos + tokens.shape[1],
+        }
+    return x, new_cache
+
+
+def zamba_loss(params, batch, cfg: ModelConfig, ctx: ParallelCtx):
+    h, _ = zamba_forward(params, batch["tokens"], cfg, ctx)
+    return ce_loss(h[:, :-1], params["lm_head"], batch["tokens"][:, 1:],
+                   cfg, ctx)
+
+
+def zamba_init_state(cfg: ModelConfig, ctx: ParallelCtx, B_loc: int, S: int,
+                     *, seq_sharded: bool = False, dtype=jnp.bfloat16):
+    d = cfg.d_model
+    din_loc = 2 * d // ctx.tp
+    nh_loc = din_loc // 64
+    L = cfg.num_layers
+    every = max(cfg.attn_every, 1)
+    n_app = L // every
+    KH_loc = local_kv_heads(cfg, ctx)
+    S_loc = S // ctx.fsdp if seq_sharded else S
+    return {
+        "mamba": {
+            "conv": jnp.zeros((L, B_loc, cfg.conv_width - 1, din_loc), dtype),
+            "S": jnp.zeros((L, B_loc, nh_loc, 64, cfg.ssm_state), jnp.float32),
+        },
+        "k": jnp.zeros((n_app, B_loc, S_loc, KH_loc, cfg.head_dim), dtype),
+        "v": jnp.zeros((n_app, B_loc, S_loc, KH_loc, cfg.head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def zamba_decode(params, tokens, cfg, ctx, cache, *, seq_sharded=False):
+    h, cache = zamba_forward(params, tokens, cfg, ctx, cache,
+                             seq_sharded=seq_sharded)
+    logits = jnp.dot(h.astype(F32), params["lm_head"].astype(F32))
+    return logits, cache

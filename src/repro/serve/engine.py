@@ -1,0 +1,141 @@
+"""Continuous-batching serving engine (slot-based, vLLM-shaped).
+
+A fixed pool of B slots; requests admit into free slots via the PagedKV
+allocator (PGAS asymmetric regions — the paper's second-level-pointer
+machinery as a page table), every engine step advances *all* active slots
+by one token (per-slot ``pos`` vector in the cache), finished slots release
+their pages and refill from the queue.  Prompts stream through the decode
+path token-by-token (teacher-forced prefill), so a newly admitted request
+coexists with slots that are mid-generation — continuous batching.
+
+The engine is single-controller host code: the paper's "single-process
+multi-GPU" deployment — the host orchestrates, OMPCCL moves data, and host
+threads (StreamPool) stay free for tokenize/detokenize work.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.groups import DiompGroup
+from repro.core.pgas import GlobalMemory
+from repro.models.config import ModelConfig, ParallelCtx
+from repro.models.transformer import init_cache
+from .kvcache import PagedKVAllocator, Request
+from .step import build_decode_step
+
+__all__ = ["ServeEngine", "GenRequest"]
+
+
+@dataclasses.dataclass
+class GenRequest:
+    prompt: np.ndarray          # (len,) int32
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    fed: int = 0                # prompt tokens consumed so far
+    kv: Optional[Request] = None
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, mesh, ctx: ParallelCtx, params, *,
+                 slots: int = 4, max_len: int = 256,
+                 memory: Optional[GlobalMemory] = None):
+        self.cfg, self.mesh, self.ctx = cfg, mesh, ctx
+        self.params = params
+        self.B, self.S = slots, max_len
+        self.memory = memory or GlobalMemory(mesh.devices.size, 1 << 26,
+                                             allocator="buddy")
+        kv_bpt = 2 * 2 * max(cfg.kv_heads, 1) * max(cfg.head_dim, 1) \
+            * cfg.num_layers
+        self.alloc = PagedKVAllocator(
+            self.memory, DiompGroup(tuple(mesh.axis_names), name="world"),
+            page_tokens=64, kv_bytes_per_token=max(kv_bpt, 64))
+        self.decode_step = build_decode_step(cfg, mesh, ctx, B=slots,
+                                             S=max_len, donate=False)
+        # global-view cache (cache_structs shapes); in_specs shard it
+        from repro.models import api as model_api
+        structs, _ = model_api.cache_structs(cfg, mesh, ctx, self.B, self.S)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), structs)
+        cache["pos"] = jnp.zeros((self.B,), jnp.int32)
+        self.cache = cache
+        self.queue: Deque[GenRequest] = deque()
+        self.active: Dict[int, GenRequest] = {}
+        self.free_slots = list(range(slots))
+        self.pending = np.zeros((slots, 1), np.int32)
+        self.steps = 0
+
+    # -- API --------------------------------------------------------------
+    def submit(self, prompt, max_new: int = 32) -> GenRequest:
+        r = GenRequest(prompt=np.asarray(prompt, np.int32), max_new=max_new)
+        self.queue.append(r)
+        return r
+
+    def run(self, max_steps: int = 10_000):
+        for _ in range(max_steps):
+            self._admit()
+            if not self.active:
+                if not self.queue:
+                    break
+                continue
+            self._set_inputs()
+            logits = self._device_step()
+            self._harvest(logits)
+        return self
+
+    # -- internals ----------------------------------------------------------
+    def _admit(self):
+        while self.queue and self.free_slots:
+            req = self.queue[0]
+            kv = self.alloc.admit(len(req.prompt),
+                                  len(req.prompt) + req.max_new)
+            if kv is None:
+                break                      # KV OOM — wait for a release
+            self.queue.popleft()
+            req.kv = kv
+            req.slot = self.free_slots.pop()
+            kv.pos = 0
+            self.active[req.slot] = req
+
+    def _set_inputs(self):
+        for slot, req in self.active.items():
+            if req.fed < len(req.prompt):
+                self.pending[slot, 0] = req.prompt[req.fed]
+            else:
+                self.pending[slot, 0] = req.out[-1]
+
+    def _device_step(self):
+        logits, self.cache = self.decode_step(
+            self.params, jnp.asarray(self.pending), self.cache)
+        self.steps += 1
+        return np.asarray(jax.device_get(logits))
+
+    def _harvest(self, logits):
+        for slot, req in list(self.active.items()):
+            req.kv.pos += 1
+            self.alloc.extend(req.kv)
+            if req.fed < len(req.prompt):
+                req.fed += 1
+                if req.fed < len(req.prompt):
+                    continue               # still prefilling: ignore logits
+            req.out.append(int(logits[slot, 0].argmax()))
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.alloc.release(req.kv)
+                del self.active[slot]
+                self.free_slots.append(slot)
+                # reset this slot's device position for the next request
+                self.cache["pos"] = self.cache["pos"].at[slot].set(0)
+
+    @property
+    def kv_stats(self):
+        s = dict(self.alloc.stats)
+        s["ptr_cache_hit_rate"] = self.memory.ptr_cache.hit_rate
+        return s

@@ -1,0 +1,107 @@
+"""Serve-step builders: shard_map'd prefill and decode steps per family.
+
+The decode step is THE unit the decode_32k / long_500k dry-run cells lower:
+one new token against a full KV cache, with the cache sharded per the
+runtime's placement rules (heads over "model"; batch over DP axes; the S
+axis over "data" for the context-parallel long shapes).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import ompccl
+from repro.models import api as model_api
+from repro.models import schema as sch
+from repro.models.config import ModelConfig, ParallelCtx
+
+__all__ = ["build_decode_step", "build_prefill_step"]
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx, *,
+                      B: int, S: int, seq_sharded: bool = False,
+                      donate: bool = True):
+    """jitted (params, tokens (B,1), cache) -> (logits (B,1,V), cache')."""
+    import dataclasses
+
+    from repro.distributed.sharding import rules_for_ctx
+
+    ctx = dataclasses.replace(ctx, inference=True, remat=False)
+    decode = model_api.decode_fn(cfg)
+    pspecs = sch.partition_specs(cfg, mesh, rules_for_ctx(ctx))
+    _, cspecs = model_api.cache_structs(cfg, mesh, ctx, B, S,
+                                        seq_sharded=seq_sharded)
+    ba = model_api._batch_axes(mesh, B)
+    bpart = ba if ba else None
+    vs = "model" if sch.vocab_sharded(cfg) else None
+
+    def step(params, tokens, cache):
+        logits, cache = decode(params, tokens, cfg, ctx, cache,
+                               seq_sharded=seq_sharded)
+        return logits, cache
+
+    mapped = shard_map(
+        step, mesh=mesh,
+        in_specs=(pspecs, P(bpart), cspecs),
+        out_specs=(P(bpart, None, vs), cspecs),
+    )
+    kwargs = {"donate_argnums": (2,)} if donate else {}
+    return jax.jit(mapped, **kwargs)
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx, *,
+                       B: int, S_prompt: int, S_cache: int,
+                       seq_sharded: bool = False, donate: bool = True):
+    """jitted (params, tokens (B,Sp), cache) -> (last logits, cache')."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.models.transformer import transformer_prefill
+    from repro.models.rwkv import rwkv_forward
+    from repro.models.ssm import zamba_forward
+
+    from repro.distributed.sharding import rules_for_ctx
+
+    ctx = dataclasses.replace(ctx, inference=True, remat=False)
+    pspecs = sch.partition_specs(cfg, mesh, rules_for_ctx(ctx))
+    _, cspecs = model_api.cache_structs(cfg, mesh, ctx, B, S_cache,
+                                        seq_sharded=seq_sharded)
+    ba = model_api._batch_axes(mesh, B)
+    bpart = ba if ba else None
+    vs = "model" if sch.vocab_sharded(cfg) else None
+
+    if cfg.family in model_api.TRANSFORMER_FAMILIES:
+        def step(params, tokens, cache):
+            logits, cache = transformer_prefill(
+                params, tokens, cfg, ctx, cache, seq_sharded=seq_sharded)
+            return logits, cache
+    elif cfg.family == "ssm":
+        def step(params, tokens, cache):
+            h, cache = rwkv_forward(params, tokens, cfg, ctx, cache)
+            logits = jnp.dot(h[:, -1:].astype(jnp.float32),
+                             params["lm_head"].astype(jnp.float32))
+            return logits, cache
+    elif cfg.family == "hybrid":
+        def step(params, tokens, cache):
+            h, cache = zamba_forward(params, tokens, cfg, ctx, cache,
+                                     seq_sharded=seq_sharded)
+            logits = jnp.dot(h[:, -1:].astype(jnp.float32),
+                             params["lm_head"].astype(jnp.float32))
+            return logits, cache
+    else:
+        raise ValueError(cfg.family)
+
+    mapped = shard_map(
+        step, mesh=mesh,
+        in_specs=(pspecs, P(bpart), cspecs),
+        out_specs=(P(bpart, None, vs), cspecs),
+    )
+    kwargs = {"donate_argnums": (2,)} if donate else {}
+    return jax.jit(mapped, **kwargs)

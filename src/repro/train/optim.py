@@ -1,0 +1,177 @@
+"""Optimizers on local parameter shards (flax/optax-free).
+
+Because every parameter enters the step pre-sharded (ZeRO-3 over "data",
+TP over "model"), the optimizer state automatically inherits the same
+sharding — ZeRO-1 falls out of the PGAS placement for free.  AdamW for the
+small archs, Adafactor (factored second moment, no first moment) for the
+≥30B ones where Adam state cannot fit the per-device HBM plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "adafactor", "cosine_schedule", "Optimizer",
+           "global_norm", "clip_by_global_norm"]
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable           # params -> opt_state
+    update: Callable         # (grads, state, params, step) -> (updates, state)
+    state_structs: Callable  # param_structs -> state structs (dry-run)
+
+
+def cosine_schedule(peak_lr: float, warmup: int = 100, total: int = 10_000,
+                    floor: float = 0.1):
+    def lr(step):
+        step = step.astype(F32) if hasattr(step, "astype") else F32(step)
+        warm = peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(F32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype),
+                        tree), norm
+
+
+def adamw(lr_fn, *, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+        }
+
+    def update(grads, state, params, step):
+        t = step.astype(F32) + 1.0
+        lr = lr_fn(step)
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(F32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g.astype(F32) ** 2,
+                         state["v"], grads)
+        def upd(mm, vv, p):
+            mh = mm / (1 - b1 ** t)
+            vh = vv / (1 - b2 ** t)
+            return (-lr * (mh / (jnp.sqrt(vh) + eps)
+                           + weight_decay * p.astype(F32))).astype(p.dtype)
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v}
+
+    def structs(pstructs):
+        f = lambda s: jax.ShapeDtypeStruct(s.shape, F32)
+        return {"m": jax.tree.map(f, pstructs), "v": jax.tree.map(f, pstructs)}
+
+    return Optimizer(init, update, structs)
+
+
+def _factored_dims(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor(lr_fn, *, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              dim_axes: Dict[str, Tuple] = None) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern 2018), no momentum.
+
+    ``dim_axes[name] = (last_axes, prev_axes)`` — the mesh axes the last /
+    second-to-last param dims are sharded over (from the PGAS placement).
+    The factored row/col statistics are means over the *full* dims, so
+    sharded dims reduce through an explicit OMPCCL pmean; the result is
+    invariant over those axes, matching the factored state's sharding.
+    """
+    dim_axes = dim_axes or {}
+
+    def _pmean(x, axes):
+        if not axes:
+            return x
+        from repro.core import ompccl
+        from repro.core.groups import DiompGroup
+        return ompccl.allreduce(x, DiompGroup(tuple(axes)), op="mean")
+
+    def _state_for(p_shape):
+        if _factored_dims(p_shape):
+            return {"vr": jnp.zeros(p_shape[:-1], F32),
+                    "vc": jnp.zeros(p_shape[:-2] + p_shape[-1:], F32)}
+        return {"v": jnp.zeros(p_shape, F32)}
+
+    def init(params):
+        return {n: _state_for(p.shape) for n, p in params.items()}
+
+    def update(grads, state, params, step):
+        t = step.astype(F32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr = lr_fn(step)
+
+        def upd(name, g, st, p):
+            last_ax, prev_ax = dim_axes.get(name, ((), ()))
+            gf = g.astype(F32)
+            g2 = gf * gf + eps
+            if "vr" in st:
+                vr = beta * st["vr"] + (1 - beta) * _pmean(g2.mean(-1), last_ax)
+                vc = beta * st["vc"] + (1 - beta) * _pmean(g2.mean(-2), prev_ax)
+                vr_mean = _pmean(vr.mean(-1, keepdims=True), prev_ax)
+                denom = (vr / jnp.maximum(vr_mean, eps))[..., None] * \
+                    vc[..., None, :]
+                u = gf * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                new = {"vr": vr, "vc": vc}
+            else:
+                v = beta * st["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new = {"v": v}
+            rms = jnp.sqrt(_pmean(jnp.mean(u * u),
+                                  tuple(last_ax) + tuple(prev_ax)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (-lr * u).astype(p.dtype), new
+
+        out = {n: upd(n, grads[n], state[n], params[n]) for n in grads}
+        return ({n: o[0] for n, o in out.items()},
+                {n: o[1] for n, o in out.items()})
+
+    def structs(pstructs):
+        def f(s):
+            if _factored_dims(s.shape):
+                return {"vr": jax.ShapeDtypeStruct(s.shape[:-1], F32),
+                        "vc": jax.ShapeDtypeStruct(s.shape[:-2] + s.shape[-1:],
+                                                   F32)}
+            return {"v": jax.ShapeDtypeStruct(s.shape, F32)}
+        return {n: f(s) for n, s in pstructs.items()}
+
+    return Optimizer(init, update, structs)
+
+
+def adafactor_dim_axes(cfg, mesh, rules=None) -> Dict[str, Tuple]:
+    """Build adafactor's dim_axes table from the schema placement."""
+    from repro.models import schema as sch
+    from repro.distributed.sharding import DEFAULT_RULES, logical_to_spec
+
+    out = {}
+    for name, spec_meta in sch.build_schema(cfg).items():
+        spec = logical_to_spec(spec_meta.axes, mesh, rules or DEFAULT_RULES)
+        rank = len(spec_meta.shape)
+        parts = list(spec) + [None] * (rank - len(spec))
+
+        def axes_of(part):
+            if part is None:
+                return ()
+            return tuple(part) if isinstance(part, tuple) else (part,)
+
+        out[name] = (axes_of(parts[-1]) if rank >= 1 else (),
+                     axes_of(parts[-2]) if rank >= 2 else ())
+    return out

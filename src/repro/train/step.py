@@ -1,0 +1,253 @@
+"""Train-step builder: grad accumulation + explicit OMPCCL gradient reduction
++ optimizer, all inside one shard_map (the DiOMP unified-runtime discipline).
+
+Gradient-reduction strategy (DESIGN.md §4):
+
+* ``ctx.explicit_dp=True`` (DiOMP mode): parameters are ``pvary``'d over the
+  DP axes before differentiation, so AD yields *per-device* gradients with
+  no implicit cross-batch collectives; the reduction then runs explicitly
+  through OMPCCL with a selectable backend — flat psum / pod-hierarchical /
+  int8-compressed with error feedback.  ZeRO-3 params still reduce-scatter
+  over "data" inside AD (the all_gather transpose — structurally the
+  intra-pod half of the hierarchical algorithm), leaving only the tiny
+  inter-pod psum to OMPCCL.
+* ``ctx.explicit_dp=False`` (the MPI+X-shaped baseline): AD's automatic
+  pvary-transpose psums do the reduction implicitly inside XLA.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax, shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import ompccl
+from repro.distributed.compression import compressed_allreduce
+from repro.models import api as model_api
+from repro.models import schema as sch
+from repro.models.config import ModelConfig, ParallelCtx
+from .optim import Optimizer
+
+__all__ = ["build_train_step", "opt_state_specs", "reduce_gradients",
+           "sharded_global_norm"]
+
+F32 = jnp.float32
+
+
+def _spec_drop_dim(spec: P, rank: int, drop: int) -> P:
+    parts = list(spec) + [None] * (rank - len(spec))
+    del parts[drop]
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def opt_state_specs(cfg: ModelConfig, mesh: Mesh, optimizer_name: str,
+                    rules=None):
+    """PartitionSpecs for the optimizer state (mirrors param sharding)."""
+    pspecs = sch.partition_specs(cfg, mesh, rules)
+    schema = sch.build_schema(cfg)
+    if optimizer_name == "adamw":
+        return {"m": dict(pspecs), "v": dict(pspecs)}
+    out = {}
+    for name, spec in pspecs.items():
+        rank = len(schema[name].shape)
+        shape = schema[name].shape
+        if rank >= 2 and shape[-1] > 1 and shape[-2] > 1:
+            out[name] = {"vr": _spec_drop_dim(spec, rank, rank - 1),
+                         "vc": _spec_drop_dim(spec, rank, rank - 2)}
+        else:
+            out[name] = {"v": spec}
+    return out
+
+
+def _dup_factor(name: str, cfg: ModelConfig, mesh: Mesh) -> int:
+    """How many devices hold a copy of each element of param ``name``."""
+    from repro.distributed.sharding import DEFAULT_RULES, logical_to_spec
+
+    spec = logical_to_spec(sch.build_schema(cfg)[name].axes, mesh)
+    sharded = 1
+    for part in spec:
+        if part is None:
+            continue
+        for ax in (part if isinstance(part, tuple) else (part,)):
+            sharded *= mesh.shape[ax]
+    return mesh.devices.size // sharded
+
+
+def sharded_global_norm(grads, cfg: ModelConfig, ctx: ParallelCtx, mesh: Mesh,
+                        pspecs: Optional[dict] = None):
+    """Global L2 norm of a sharded gradient pytree.
+
+    Each param's local sum-of-squares is weighted by 1/duplication (so
+    replicated copies count once), then psum'd across the world group.
+    """
+    if pspecs is None:
+        from repro.distributed.sharding import rules_for_ctx
+        pspecs = sch.partition_specs(cfg, mesh, rules_for_ctx(ctx))
+    sizes = dict(mesh.shape)
+    total = jnp.zeros((), F32)
+    for name, g in grads.items():
+        sharded = 1
+        for part in pspecs[name]:
+            if part is None:
+                continue
+            for ax in (part if isinstance(part, tuple) else (part,)):
+                sharded *= sizes[ax]
+        dup = mesh.devices.size // sharded
+        total = total + jnp.sum(g.astype(F32) ** 2) / dup
+    total = ompccl.allreduce(total, ctx.world)
+    return jnp.sqrt(total)
+
+
+def reduce_gradients(grads: Dict[str, jax.Array], cfg: ModelConfig,
+                     ctx: ParallelCtx, errors: Optional[dict] = None,
+                     pspecs: Optional[dict] = None, mesh: Optional[Mesh] = None):
+    """Explicit DP mean-reduction per parameter through OMPCCL.
+
+    Input grads are per-device (params were pvary'd over DP).  A parameter
+    needs reduction only over the DP axes its own sharding does NOT use:
+    ZeRO-3 / expert2d shards already had their cross-shard sums folded in by
+    AD (the all_gather transpose / the all_to_all round trip).  Returns
+    (reduced_grads, new_errors).
+    """
+    from repro.core.groups import DiompGroup
+    from repro.distributed.sharding import rules_for_ctx
+
+    if pspecs is None:
+        pspecs = sch.partition_specs(cfg, mesh, rules_for_ctx(ctx))
+    new_errors = {}
+    out = {}
+    dp_axes = ctx.dp_group.axes
+    for name, g in grads.items():
+        spec_axes = set()
+        for part in pspecs[name]:
+            if part is None:
+                continue
+            spec_axes |= set(part if isinstance(part, tuple) else (part,))
+        need = tuple(a for a in dp_axes if a not in spec_axes)
+        g = g.astype(F32) / ctx.dp
+        if not need:
+            out[name] = g
+            continue
+        group = DiompGroup(need)
+        if ctx.grad_codec == "int8" and set(need) == set(dp_axes):
+            err = errors.get(name) if errors else None
+            g, e = compressed_allreduce(g * ctx.dp, group, error=err)
+            new_errors[name] = e
+        else:
+            backend = ("hierarchical"
+                       if ctx.dp_backend == "hierarchical"
+                       and "pod" in need and len(need) > 1 else "xla")
+            g = ompccl.allreduce(g, group, backend=backend)
+        out[name] = g
+    return out, new_errors
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
+                     optimizer: Optimizer, *, optimizer_name: str = "adamw",
+                     clip_norm: float = 1.0, donate: bool = True,
+                     global_batch: int = 0):
+    """Returns the jitted step:
+
+    step(params, opt_state, batch, step_idx) ->
+        (params', opt_state', metrics{loss, grad_norm})
+
+    ``global_batch`` determines the batch sharding (divisibility over the DP
+    axes); pass the real batch size — 0 falls back to dp-divisible.
+    """
+    from repro.distributed.sharding import rules_for_ctx
+
+    rules = rules_for_ctx(ctx)
+    loss_fn = model_api.loss_fn(cfg)
+    pspecs = sch.partition_specs(cfg, mesh, rules)
+    ospecs = opt_state_specs(cfg, mesh, optimizer_name, rules)
+    dp_axes = ctx.dp_group.axes
+    if not global_batch:  # default: assume a dp-divisible batch
+        global_batch = ctx.dp
+    _, bspecs = model_api.batch_structs(cfg, mesh, global_batch, 1,
+                                        dp_axes=dp_axes)
+
+    def step(params, opt_state, batch, step_idx):
+        # DiOMP mode: per-device grads, reduction owned by OMPCCL
+        p_diff = (ompccl.ensure_varying(params, dp_axes)
+                  if ctx.explicit_dp and dp_axes else params)
+
+        def local_loss(p, mb):
+            return loss_fn(p, mb, cfg, ctx)
+
+        b_local = jax.tree.leaves(batch)[0].shape[0]
+        k = max(min(ctx.microbatch, b_local), 1)
+        while b_local % k:          # clamp to a divisor of the local batch
+            k -= 1
+        if k > 1:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
+
+            # per-leaf carry vma: grads vary over the DP axes (iff params
+            # were pvary'd there) plus the param's own sharded axes
+            grad_dp = tuple(dp_axes) if ctx.explicit_dp else ()
+
+            def leaf_axes(name):
+                spec_axes = []
+                for part in pspecs[name]:
+                    if part is None:
+                        continue
+                    spec_axes += list(part if isinstance(part, tuple)
+                                      else (part,))
+                return tuple(dict.fromkeys(grad_dp + tuple(spec_axes)))
+
+            def norm_g(g):
+                return {n: ompccl.ensure_varying(v, leaf_axes(n))
+                        for n, v in g.items()}
+
+            all_axes = tuple(mesh.axis_names)
+
+            def micro(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(local_loss)(p_diff, mb)
+                g_acc = {n: g_acc[n] + g[n].astype(F32) for n in g_acc}
+                # scalar loss: canonicalize to all mesh axes (an unsharded-
+                # vocab CE stays model-varying; a sharded one does not)
+                return (ompccl.ensure_varying(loss_acc + l, all_axes),
+                        norm_g(g_acc)), None
+
+            zero_g = norm_g({n: jnp.zeros(p.shape, F32)
+                             for n, p in params.items()})
+            loss0 = ompccl.ensure_varying(jnp.zeros((), F32), all_axes)
+            (loss, grads), _ = lax.scan(micro, (loss0, zero_g), mbs)
+            loss = loss / k
+            grads = jax.tree.map(lambda g: g / k, grads)
+        else:
+            loss, grads = jax.value_and_grad(local_loss)(p_diff, batch)
+
+        if ctx.explicit_dp and dp_axes:
+            grads, _ = reduce_gradients(grads, cfg, ctx, pspecs=pspecs)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(F32) / ctx.dp, grads)
+
+        gnorm = sharded_global_norm(grads, cfg, ctx, mesh, pspecs=pspecs)
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+        updates, opt_state = optimizer.update(grads, opt_state, params,
+                                              step_idx)
+        params = jax.tree.map(lambda p, u: (p.astype(F32) + u.astype(F32)
+                                            ).astype(p.dtype), params, updates)
+        metrics = {
+            "loss": ompccl.allreduce(loss, ctx.world, op="mean"),
+            "grad_norm": gnorm,
+        }
+        return params, opt_state, metrics
+
+    mapped = shard_map(
+        step, mesh=mesh,
+        in_specs=(pspecs, ospecs, bspecs, P()),
+        out_specs=(pspecs, ospecs, {"loss": P(), "grad_norm": P()}),
+    )
+    jit_kwargs = {"donate_argnums": (0, 1)} if donate else {}
+    return jax.jit(mapped, **jit_kwargs)

@@ -1,0 +1,21 @@
+"""Shared fixtures.  8 virtual CPU devices for the multi-device tests —
+set BEFORE jax initializes (pytest imports conftest first)."""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+
+
+@pytest.fixture(scope="session")
+def ring8():
+    return jax.make_mesh((8,), ("x",),
+                         axis_types=(jax.sharding.AxisType.Auto,))

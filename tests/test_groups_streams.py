@@ -1,0 +1,85 @@
+"""DiOMP groups (split/merge/descriptors) + stream-pool policy + RMA rules."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core.groups import DiompGroup, GroupError, merge, world_group
+from repro.core.rma import RMAError, RMATracker
+from repro.core.streams import HybridPoller, StreamPool
+
+
+def test_group_split_merge(mesh8):
+    w = world_group(mesh8)
+    tp, rest = w.split("model")
+    assert tp.axes == ("model",) and rest.axes == ("pod", "data")
+    assert merge(rest, tp).axes == ("pod", "data", "model")
+    with pytest.raises(GroupError):
+        merge(tp, tp)
+    with pytest.raises(GroupError):
+        w.split("nonexistent")
+    assert w.axis_size(mesh8) == 8 and tp.axis_size(mesh8) == 2
+
+
+def test_group_descriptor_stable(mesh8):
+    a = DiompGroup(("model",))
+    b = DiompGroup(("model",))
+    assert a.descriptor() == b.descriptor()      # UniqueID handshake agrees
+    assert a.descriptor() != DiompGroup(("data",)).descriptor()
+
+
+def test_group_duplicate_axis_rejected():
+    with pytest.raises(GroupError):
+        DiompGroup(("model", "model"))
+
+
+def test_stream_pool_reuse_and_bound():
+    pool = StreamPool(max_active=2)
+    futs = [pool.submit(lambda i=i: i * i) for i in range(20)]
+    assert [f.result() for f in futs] == [i * i for i in range(20)]
+    # bounded: lazily created streams never exceeded the cap by much
+    assert pool.stats["created"] <= 2 + pool.stats["partial_syncs"]
+    assert pool.stats["reused"] > 0
+    pool.close()
+
+
+def test_stream_pool_partial_sync_under_pressure():
+    pool = StreamPool(max_active=2)
+    blocker = threading.Event()
+    slow = pool.submit(lambda: blocker.wait(5))
+    for _ in range(4):
+        pool.submit(time.sleep, 0.001)
+    assert pool.stats["partial_syncs"] >= 1
+    blocker.set()
+    pool.close()
+
+
+def test_hybrid_poller_fence():
+    done = {"a": False, "b": False}
+    p = HybridPoller(interval_s=1e-4)
+    p.register(lambda: done["a"])
+    p.register(lambda: done["b"])
+    threading.Timer(0.02, lambda: done.update(a=True)).start()
+    threading.Timer(0.04, lambda: done.update(b=True)).start()
+    p.fence(timeout_s=2)
+    assert p.polls >= 2
+
+
+def test_hybrid_poller_timeout():
+    p = HybridPoller(interval_s=1e-4)
+    p.register(lambda: False)
+    with pytest.raises(TimeoutError):
+        p.fence(timeout_s=0.05)
+
+
+def test_rma_tracker_discipline():
+    t = RMATracker()
+    t.register("win")
+    t.on_put("win")
+    with pytest.raises(RMAError):
+        t.on_read("win")             # read before fence: the bug class
+    t.on_fence("win")
+    t.on_read("win")                 # fine after the fence
+    with pytest.raises(RMAError):
+        t.on_put("nope")

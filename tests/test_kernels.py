@@ -1,0 +1,168 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.linear_scan.ops import linear_scan
+from repro.kernels.ring_matmul.ops import matmul
+from repro.kernels.stencil.ops import wave_step
+
+RNG = np.random.RandomState(0)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def _naive_attn(q, k, v, causal, q_offset, prefix_len):
+    B, Tq, H, D = q.shape
+    Tk, KH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KH
+    kx = np.repeat(k, G, axis=2).astype(np.float64)
+    vx = np.repeat(v, G, axis=2).astype(np.float64)
+    s = np.einsum("bqhd,bkhd->bhqk", q.astype(np.float64), kx) * D ** -0.5
+    qp = q_offset + np.arange(Tq)[:, None]
+    kp = np.arange(Tk)[None, :]
+    vis = np.ones((Tq, Tk), bool)
+    if causal:
+        vis = (kp <= qp) | ((kp < prefix_len) & (qp < prefix_len))
+    s = np.where(vis[None, None], s, -np.inf)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = np.where(vis[None, None], p, 0)
+    return np.einsum("bhqk,bkhd->bqhd", p / p.sum(-1, keepdims=True), vx)
+
+
+SWEEP = [
+    # B, Tq, Tk, H, KH, D, Dv, causal, off, pfx, dtype
+    (2, 16, 16, 4, 2, 64, 64, True, 0, 0, np.float32),
+    (1, 8, 24, 4, 1, 32, 32, True, 16, 0, np.float32),
+    (2, 12, 12, 6, 6, 64, 64, False, 0, 0, np.float32),
+    (1, 20, 20, 8, 2, 64, 64, True, 0, 5, np.float32),
+    (1, 1, 33, 4, 2, 64, 64, True, 32, 0, np.float32),
+    (1, 16, 16, 4, 2, 32, 16, True, 0, 0, np.float32),   # MLA: Dv != D
+    (2, 16, 16, 4, 4, 64, 64, True, 0, 0, np.float16),
+]
+
+
+@pytest.mark.parametrize("case", SWEEP, ids=[str(i) for i in range(len(SWEEP))])
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+def test_flash_attention_sweep(case, impl):
+    B, Tq, Tk, H, KH, D, Dv, causal, off, pfx, dt = case
+    q = RNG.randn(B, Tq, H, D).astype(dt)
+    k = RNG.randn(B, Tk, KH, D).astype(dt)
+    v = RNG.randn(B, Tk, KH, Dv).astype(dt)
+    want = _naive_attn(q, k, v, causal, off, pfx)
+    got = flash_attention(q, k, v, causal=causal, q_offset=off,
+                          prefix_len=pfx, impl=impl, block=8, interpret=True)
+    tol = 2e-2 if dt == np.float16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float64), want, atol=tol,
+                               rtol=tol)
+
+
+def test_flash_vector_positions():
+    """Per-slot decode offsets (continuous batching)."""
+    B, Tk, H, D = 3, 16, 4, 32
+    q = RNG.randn(B, 1, H, D).astype(np.float32)
+    k = RNG.randn(B, Tk, H, D).astype(np.float32)
+    v = RNG.randn(B, Tk, H, D).astype(np.float32)
+    pos = np.array([3, 7, 15])
+    got = flash_attention(q, k, v, causal=True, q_offset=pos,
+                          valid_len=pos + 1, impl="ref", block=8)
+    for b in range(B):
+        want = _naive_attn(q[b:b + 1], k[b:b + 1, : pos[b] + 1],
+                           v[b:b + 1, : pos[b] + 1], True, int(pos[b]), 0)
+        np.testing.assert_allclose(np.asarray(got)[b:b + 1], want, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# linear scan (rwkv6 / mamba2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("BH,T,M,N,pre,chunk", [
+    (3, 64, 16, 8, True, 16),
+    (2, 128, 32, 32, False, 64),
+    (1, 32, 8, 24, True, 32),
+    (4, 96, 64, 64, False, 32),
+    (2, 64, 64, 16, True, 64),
+])
+def test_linear_scan_sweep(BH, T, M, N, pre, chunk):
+    p = RNG.randn(BH, T, M).astype(np.float32) * 0.5
+    q = RNG.randn(BH, T, N).astype(np.float32) * 0.5
+    a = RNG.uniform(0.7, 0.999, (BH, T, N)).astype(np.float32)
+    r = RNG.randn(BH, T, N).astype(np.float32) * 0.5
+    y_ref, s_ref = linear_scan(p, q, a, r, readout_pre=pre, impl="ref")
+    y_pal, s_pal = linear_scan(p, q, a, r, readout_pre=pre, impl="pallas",
+                               chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(s_pal), np.asarray(s_ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_linear_scan_state_carry():
+    """Chunked prefill: state from chunk 1 feeds chunk 2 == one long scan."""
+    BH, T, M, N = 2, 64, 8, 8
+    p = RNG.randn(BH, T, M).astype(np.float32)
+    q = RNG.randn(BH, T, N).astype(np.float32)
+    a = RNG.uniform(0.8, 0.99, (BH, T, N)).astype(np.float32)
+    r = RNG.randn(BH, T, N).astype(np.float32)
+    y_full, s_full = linear_scan(p, q, a, r, impl="ref")
+    h = T // 2
+    y1, s1 = linear_scan(p[:, :h], q[:, :h], a[:, :h], r[:, :h], impl="ref")
+    y2, s2 = linear_scan(p[:, h:], q[:, h:], a[:, h:], r[:, h:], s1,
+                         impl="ref")
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_full)[:, h:],
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# blocked matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N,bm,bk,bn,dt", [
+    (64, 96, 48, 32, 32, 32, np.float32),
+    (100, 130, 70, 32, 64, 32, np.float32),
+    (256, 512, 256, 128, 128, 128, np.float32),
+    (64, 64, 64, 32, 32, 32, np.float16),
+    (33, 65, 17, 32, 32, 32, np.float32),       # ragged padding
+])
+def test_matmul_sweep(M, K, N, bm, bk, bn, dt):
+    x = RNG.randn(M, K).astype(dt)
+    w = RNG.randn(K, N).astype(dt)
+    got = matmul(x, w, impl="pallas", bm=bm, bk=bk, bn=bn, interpret=True)
+    want = x.astype(np.float64) @ w.astype(np.float64)
+    tol = 2e-2 if dt == np.float16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float64), want,
+                               rtol=tol, atol=tol * np.abs(want).max())
+
+
+# ---------------------------------------------------------------------------
+# stencil
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Z,Y,X,bz", [
+    (24, 20, 28, 8),
+    (16, 16, 16, 16),
+    (17, 12, 20, 8),        # ragged Z
+])
+def test_stencil_sweep(Z, Y, X, bz):
+    u = RNG.randn(Z, Y, X).astype(np.float32)
+    up = RNG.randn(Z, Y, X).astype(np.float32)
+    got = wave_step(u, up, 0.1, impl="pallas", bz=bz, interpret=True)
+    want = wave_step(u, up, 0.1, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_stencil_velocity_model():
+    """Spatially-varying c^2·dt^2 (the Minimod subsurface model)."""
+    u = RNG.randn(16, 16, 16).astype(np.float32)
+    up = RNG.randn(16, 16, 16).astype(np.float32)
+    c2 = RNG.uniform(0.05, 0.2, (16, 16, 16)).astype(np.float32)
+    got = wave_step(u, up, c2, impl="pallas", bz=8, interpret=True)
+    want = wave_step(u, up, c2, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)

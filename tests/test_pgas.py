@@ -1,0 +1,108 @@
+"""PGAS heap: allocators, symmetric/asymmetric regions, pointer cache.
+
+Property tests (hypothesis) assert the allocator invariants the paper's
+runtime depends on: free+live extents tile the arena exactly, symmetric
+offsets stay identical across ranks, second-level pointers resolve to the
+right payloads, and frees invalidate cached remote pointers.
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.groups import DiompGroup
+from repro.core.pgas import (AllocError, BuddyAllocator, GlobalMemory,
+                             LinearAllocator)
+
+G = DiompGroup(("x",), name="x")
+
+
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 5000)),
+                min_size=1, max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_linear_allocator_invariants(ops):
+    a = LinearAllocator(1 << 16)
+    live = []
+    for is_alloc, size in ops:
+        if is_alloc or not live:
+            try:
+                live.append(a.alloc(size))
+            except AllocError:
+                pass
+        else:
+            a.free(live.pop(len(live) // 2))
+        a.check_invariants()
+    assert a.bytes_in_use + a.bytes_free == a.capacity
+
+
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 4096)),
+                min_size=1, max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_buddy_allocator_invariants(ops):
+    a = BuddyAllocator(1 << 16)
+    live = []
+    for is_alloc, size in ops:
+        if is_alloc or not live:
+            try:
+                live.append(a.alloc(size))
+            except AllocError:
+                pass
+        else:
+            a.free(live.pop(0))
+        a.check_invariants()
+
+
+def test_buddy_coalescing_full_cycle():
+    a = BuddyAllocator(1 << 12)
+    offs = [a.alloc(256) for _ in range(16)]
+    for o in offs:
+        a.free(o)
+    # after freeing everything, one max-order block must be available again
+    assert a.alloc(1 << 12) == 0
+
+
+def test_symmetric_offsets_identical():
+    gm = GlobalMemory(4, 1 << 16)
+    r1 = gm.alloc_symmetric("a", 1000, G)
+    r2 = gm.alloc_symmetric("b", 500, G)
+    assert len(set(r1.offsets)) == 1 and len(set(r2.offsets)) == 1
+    assert r1.remote_address(3) == (3, r1.offsets[0])
+
+
+def test_asymmetric_requires_slp():
+    gm = GlobalMemory(4, 1 << 16)
+    slp = gm.alloc_asymmetric("kv", [100, 200, 300, 400], G)
+    with pytest.raises(AllocError):
+        slp.region.remote_address(2)     # direct offset translation forbidden
+    assert gm.translate(slp, 2) == (2, slp.region.offsets[2])
+
+
+def test_remote_ptr_cache_hits_and_invalidation():
+    gm = GlobalMemory(4, 1 << 16)
+    slp = gm.alloc_asymmetric("kv", [64, 128, 256, 512], G)
+    gm.translate(slp, 1)
+    gm.translate(slp, 1)
+    gm.translate(slp, 2)
+    assert gm.ptr_cache.hits == 1 and gm.ptr_cache.misses == 2
+    gm.free(slp)
+    assert not gm.ptr_cache._cache          # invalidated with the region
+    with pytest.raises(AllocError):
+        gm.free(slp)                        # double free
+
+
+def test_alloc_rollback_on_oom():
+    gm = GlobalMemory(2, 4096)
+    gm.alloc_symmetric("big", 3500, G)
+    before = gm.bytes_in_use()
+    with pytest.raises(AllocError):
+        gm.alloc_symmetric("too-big", 3000, G)
+    assert gm.bytes_in_use() == before      # nothing leaked
+    gm.check_invariants()
+
+
+def test_mapping_table_contents():
+    gm = GlobalMemory(2, 1 << 16)
+    gm.alloc_symmetric("w", 128, G, logical_axes=("embed", "mlp"),
+                       dtype="bfloat16")
+    (row,) = gm.mapping_table()
+    assert row["name"] == "w" and row["symmetric"]
+    assert row["logical_axes"] == ("embed", "mlp")

@@ -1,0 +1,118 @@
+"""End-to-end behaviour: the unified runtime (paper Fig. 1b) + property
+tests on runtime invariants + the dry-run/roofline toolchain on a small
+config."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.groups import DiompGroup
+from repro.core.runtime import DiompRuntime
+from repro.models import schema as sch
+from repro import configs
+
+
+def test_runtime_unified_table(mesh8):
+    rt = DiompRuntime(mesh8, segment_bytes=1 << 22)
+    row = rt.register("w", (256, 128), "bfloat16", ("embed_fsdp", "mlp"))
+    assert row.symmetric and str(row.spec) == "PartitionSpec('data', 'model')"
+    kv = rt.register("kv", (8, 64), "bfloat16", (None, None),
+                     symmetric=False, sizes=[64 * (i + 1) for i in range(8)])
+    assert not kv.symmetric
+    # one mapping table drives placement AND the heap plan (Fig. 1b)
+    assert {r.name for r in rt.table()} == {"w", "kv"}
+    assert rt.bytes_in_use() > 0
+    sh = rt.sharding_for("w")
+    assert sh.mesh.shape == mesh8.shape
+    rt.release("kv")
+    assert {r.name for r in rt.table()} == {"w"}
+    rt.fence()
+    rt.close()
+
+
+def test_runtime_rejects_duplicates(mesh8):
+    rt = DiompRuntime(mesh8, segment_bytes=1 << 20)
+    rt.register("x", (16,), "float32", (None,))
+    with pytest.raises(ValueError):
+        rt.register("x", (16,), "float32", (None,))
+    rt.close()
+
+
+@given(st.lists(st.integers(1, 1 << 16), min_size=1, max_size=20))
+@settings(max_examples=30, deadline=None)
+def test_runtime_heap_accounting(sizes):
+    """Register/release cycles never leak arena bytes (property)."""
+    import jax as _jax
+    mesh = _jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                          axis_types=(_jax.sharding.AxisType.Auto,) * 3)
+    rt = DiompRuntime(mesh, segment_bytes=1 << 22)
+    for i, s in enumerate(sizes):
+        rt.register(f"t{i}", (s,), "float32", (None,))
+    for i in range(len(sizes)):
+        rt.release(f"t{i}")
+    assert rt.bytes_in_use() == 0
+    rt.memory.check_invariants()
+    rt.close()
+
+
+def test_param_counts_match_published():
+    expect = {
+        "deepseek-v3-671b": (650e9, 700e9),
+        "qwen3-moe-235b-a22b": (220e9, 245e9),
+        "qwen1-5-110b": (100e9, 120e9),
+        "command-r-plus-104b": (95e9, 115e9),
+        "glm4-9b": (8e9, 11e9),
+        "rwkv6-7b": (6e9, 8.5e9),
+        "stablelm-3b": (2e9, 3.5e9),
+        "paligemma-3b": (2e9, 3.2e9),
+        "zamba2-1-2b": (0.9e9, 1.6e9),
+        "hubert-xlarge": (0.8e9, 1.6e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = configs.get(arch).param_count()
+        assert lo <= n <= hi, (arch, n)
+
+
+def test_hlo_analyzer_on_known_program():
+    """The loop-aware analyzer reproduces a hand-computable program."""
+    import sys, os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.hlo_analysis import analyze_hlo
+
+    def f(x, w):
+        def body(carry, _):
+            return carry @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=5)
+        return y
+
+    x = jnp.ones((64, 64), jnp.float32)
+    w = jnp.ones((64, 64), jnp.float32)
+    txt = jax.jit(f).lower(x, w).compile().as_text()
+    hc = analyze_hlo(txt)
+    want = 5 * 2 * 64 ** 3           # 5 loop trips x one 64^3 matmul
+    assert abs(hc.flops - want) / want < 0.01, hc.flops
+
+
+@pytest.mark.slow
+def test_dryrun_smoke_cell(tmp_path):
+    """lower+compile one REAL production cell via the dry-run entry point
+    (subprocess: it must own the 512-device XLA_FLAGS before jax init)."""
+    import subprocess, sys, os, json
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "stablelm-3b",
+         "--shape", "decode_32k", "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=900,
+        cwd=os.path.join(os.path.dirname(__file__), ".."), env=env)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    files = list(tmp_path.glob("*.json"))
+    assert files
+    rec = json.loads(files[0].read_text())
+    assert rec["status"] == "ok"
+    assert rec["chips"] == 256
+    assert rec["t_compute_s"] > 0 or rec["t_memory_s"] > 0
