@@ -16,10 +16,10 @@ import math
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.core import ompccl
+import repro as diomp
+from repro.core.compat import shard_map
 from repro.core.groups import DiompGroup
 from repro.distributed.hierarchical import inter_pod_traffic_bytes
 
@@ -30,25 +30,28 @@ SIZES = [131_072, 1_048_576, 8_388_608, 67_108_864]
 
 def run(quick: bool = False):
     mesh = smoke_mesh()
+    dctx = diomp.init(mesh=mesh)
     g = DiompGroup(("pod", "data"), name="dp")
+    # one communicator handle per backend: same group, same shared call
+    # log, different wire algorithm — the OMPCCL vendor-dispatch claim
+    comm_flat = dctx.communicator(g)
+    comm_hier = dctx.communicator(g, backend="hierarchical")
     rows = []
     sizes = SIZES[:3] if quick else SIZES
     for nbytes in sizes:
         n = nbytes // 4
         x = np.random.RandomState(0).randn(8, max(n // 8, 1)).astype(np.float32)
-        spec = P(("pod", "data", "model"))
 
         flat_ar = jax.jit(shard_map(
-            lambda v: ompccl.allreduce(v.reshape(-1), g).reshape(v.shape),
+            lambda v: comm_flat.allreduce(v.reshape(-1)).reshape(v.shape),
             mesh=mesh, in_specs=P(("pod", "data"), "model"),
             out_specs=P(None, "model")))
         hier_ar = jax.jit(shard_map(
-            lambda v: ompccl.allreduce(v.reshape(-1), g,
-                                       backend="hierarchical").reshape(v.shape),
+            lambda v: comm_hier.allreduce(v.reshape(-1)).reshape(v.shape),
             mesh=mesh, in_specs=P(("pod", "data"), "model"),
             out_specs=P(None, "model")))
         flat_bc = jax.jit(shard_map(
-            lambda v: ompccl.bcast(v, g, root=0),
+            lambda v: comm_flat.bcast(v, root=0),
             mesh=mesh, in_specs=P(("pod", "data"), "model"),
             out_specs=P(None, "model")))
 
@@ -74,6 +77,7 @@ def run(quick: bool = False):
     print(f"[bench_collectives] -> {path}")
     for r in rows:
         print("  ", r)
+    print("  communicator call log:", dctx.stats())
     return rows
 
 

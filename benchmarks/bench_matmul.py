@@ -14,9 +14,9 @@ from __future__ import annotations
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro.core.compat import make_mesh, shard_map
 from repro.core.groups import DiompGroup
 from repro.kernels.ring_matmul.ops import ring_allgather_matmul
 
@@ -31,8 +31,7 @@ def run(quick: bool = False, N: int = 1024):
     base = None
     rows = []
     for ndev in (1, 2, 4, 8):
-        mesh = jax.make_mesh((ndev,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((ndev,), ("x",), axis_types="auto")
         g = DiompGroup(("x",), name="ring")
         for overlap in (False, True):
             f = jax.jit(shard_map(

@@ -15,10 +15,10 @@ import inspect
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import ompccl, rma
+from repro.core.compat import axis_size, make_mesh, shard_map
 from repro.core.groups import DiompGroup
 from repro.kernels.stencil.ref import RADIUS, wave_step_ref
 
@@ -33,7 +33,7 @@ def _halo_diomp(u, g):
 
 def _halo_two_sided(u, g):
     """MPI style (paper Listing 2): explicit sends, receives and Waitall."""
-    n = jax.lax.axis_size(g.axes[0])
+    n = axis_size(g.axes[0])
     idx = jax.lax.axis_index(g.axes[0])
     down = jax.lax.slice_in_dim(u, u.shape[0] - RADIUS, u.shape[0], axis=0)
     up = jax.lax.slice_in_dim(u, 0, RADIUS, axis=0)
@@ -63,8 +63,7 @@ def run(quick: bool = False, grid: int = 64, steps: int = 5):
     rows = []
     base = {}
     for ndev in (1, 2, 4, 8):
-        mesh = jax.make_mesh((ndev,), ("z",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((ndev,), ("z",), axis_types="auto")
         g = DiompGroup(("z",), name="z")
         u0 = np.zeros((grid, grid, grid), np.float32)
         u0[grid // 2, grid // 2, grid // 2] = 1.0

@@ -15,10 +15,10 @@ from __future__ import annotations
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import ompccl, rma
+from repro.core.compat import make_mesh, shard_map
 from repro.core.groups import DiompGroup
 from repro.core.ompccl import LinkModel
 
@@ -28,8 +28,7 @@ SIZES = [4, 256, 4096, 65_536, 1_048_576, 8_388_608, 67_108_864]  # bytes
 
 
 def run(quick: bool = False):
-    mesh = jax.make_mesh((8,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("x",), axis_types="auto")
     g = DiompGroup(("x",), name="ring")
     link = LinkModel()
     rows = []

@@ -9,6 +9,8 @@ from typing import Callable, Dict, List
 
 import jax
 
+from repro.core.compat import make_mesh
+
 OUT_DIR = os.environ.get("BENCH_OUT", "experiments/bench")
 
 
@@ -37,5 +39,4 @@ def write_csv(name: str, rows: List[Dict]) -> str:
 
 
 def smoke_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types="auto")

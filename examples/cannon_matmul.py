@@ -16,11 +16,11 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.core.compat import axis_size, make_mesh, shard_map
 from repro.core.groups import DiompGroup
 from repro.core.rma import ompx_put
 from repro.kernels.ring_matmul.ops import matmul
@@ -33,7 +33,7 @@ def cannon(a_stripe, b_stripe, g):
     putting it onward around the ring (paper Listing-1 style: put + fence
     folded into the compiled dataflow).
     """
-    n = jax.lax.axis_size(g.axes[0])
+    n = axis_size(g.axes[0])
     idx = jax.lax.axis_index(g.axes[0])
     ns = b_stripe.shape[0]
     acc = jnp.zeros((a_stripe.shape[0], b_stripe.shape[1]), jnp.float32)
@@ -51,8 +51,7 @@ def cannon(a_stripe, b_stripe, g):
 def main():
     N = int(sys.argv[1]) if len(sys.argv) > 1 else 768
     ndev = 8
-    mesh = jax.make_mesh((ndev,), ("ring",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((ndev,), ("ring",), axis_types="auto")
     g = DiompGroup(("ring",), name="ring")
     rng = np.random.RandomState(0)
     A = rng.randn(N, N).astype(np.float32)

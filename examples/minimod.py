@@ -20,11 +20,11 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.core.compat import make_mesh, shard_map
 from repro.core.groups import DiompGroup
 from repro.core.rma import halo_exchange
 from repro.kernels.stencil.ref import RADIUS, wave_step_ref
@@ -40,8 +40,7 @@ def main():
     args = ap.parse_args()
 
     ndev = 8
-    mesh = jax.make_mesh((ndev,), ("z",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((ndev,), ("z",), axis_types="auto")
     g = DiompGroup(("z",), name="z")
     G = args.grid
     u0 = np.zeros((G, G, G), np.float32)

@@ -13,13 +13,12 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
 import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import ompccl, rma
+from repro.core.compat import shard_map
 from repro.core.groups import DiompGroup, merge
 from repro.core.runtime import DiompRuntime
 from repro.launch.mesh import make_smoke_mesh
@@ -28,6 +27,8 @@ from repro.launch.mesh import make_smoke_mesh
 def main():
     mesh = make_smoke_mesh(8)
     rt = DiompRuntime(mesh, segment_bytes=1 << 24)
+    ctx = rt.ctx           # the DiompContext: groups + memory + streams +
+    #                        the OMPCCL communicator table, one object
     print("== unified runtime (paper Fig. 1b) ==")
     print(rt.report())
 
@@ -54,15 +55,18 @@ def main():
     print(f"\ngroups: world={world.axes} -> split: tp={tp.axes} "
           f"rest={rest.axes} -> merge: {back.axes}")
 
-    # -- one-sided RMA + OMPCCL collectives on device
+    # -- one-sided RMA + OMPCCL collectives through ONE communicator handle:
+    #    every op records against the context table and dispatches through
+    #    the handle's backend (here the flat XLA vendor path)
     g = DiompGroup(("model",), name="tp")
+    comm = ctx.communicator(g)
     x = np.arange(16, dtype=np.float32).reshape(8, 2)
 
     def demo(v):
-        put = rma.ompx_put(v, g, shift=1)          # one-sided put
-        put = rma.ompx_fence(put)                  # completion fence
-        red = ompccl.allreduce(v, g)               # ompx_allreduce
-        bc = ompccl.bcast(v, g, root=0)            # ompx_bcast
+        put = comm.put(v, shift=1)                 # one-sided put
+        put = comm.fence(put)                      # completion fence
+        red = comm.allreduce(v)                    # ompx_allreduce
+        bc = comm.bcast(v, root=0)                 # ompx_bcast
         return put, red, bc
 
     f = jax.jit(shard_map(
@@ -73,7 +77,15 @@ def main():
     print("\nompx_put(shift=1):\n", np.asarray(put))
     print("ompx_allreduce(tp):\n", np.asarray(red))
     print("ompx_bcast(root=0):\n", np.asarray(bc))
-    print("\ncommunicator call log:", rt.ccl.stats())
+
+    # backend choice is per-handle, and new backends plug in by name — the
+    # analytic one logs a link-model cost estimate per traced collective
+    acomm = ctx.communicator(g, backend="analytic")
+    jax.jit(shard_map(lambda v: acomm.allreduce(v), mesh=mesh,
+                      in_specs=P(("pod", "data"), "model"),
+                      out_specs=P(("pod", "data"), "model")))(x)
+    print("\nanalytic backend estimates:", acomm.backend.estimates)
+    print("communicator call log:", ctx.stats())
     rt.fence()
     rt.close()
     print("\nquickstart OK")

@@ -1,0 +1,31 @@
+"""DiOMP-on-JAX reproduction.
+
+The runtime entry point is the communicator-handle API::
+
+    import repro as diomp
+
+    ctx = diomp.init(mesh=mesh)          # the unified runtime table
+    comm = ctx.communicator(group)       # OMPCCL handle (collectives + RMA)
+
+Attribute access is lazy so importing :mod:`repro` stays side-effect-free
+(the dry-run must set XLA_FLAGS before anything touches jax).
+"""
+
+_CONTEXT_EXPORTS = (
+    "init",
+    "DiompContext",
+    "Communicator",
+    "default_context",
+    "use_default",
+    "reset_default_context",
+)
+
+__all__ = list(_CONTEXT_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _CONTEXT_EXPORTS:
+        from repro.core import context as _context
+
+        return getattr(_context, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

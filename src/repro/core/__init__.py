@@ -1,3 +1,4 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+# The DiOMP runtime core: context.py (DiompContext + communicator handles),
+# backends.py (pluggable CclBackend wire algorithms), groups.py, pgas.py,
+# streams.py, rma.py, runtime.py, and the paper-verbatim compat surfaces
+# ompccl.py / ompx.py.  compat.py shims jax version differences.

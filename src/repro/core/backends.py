@@ -1,0 +1,481 @@
+"""OMPCCL backends — first-class pluggable collective implementations.
+
+The paper's OMPCCL registers one communicator per DiOMP group and dispatches
+every collective to the vendor library behind a stable API (NCCL on CUDA,
+RCCL on ROCm; §3.3).  Here the "vendor libraries" are backend *classes*
+implementing the :class:`CclBackend` protocol:
+
+* :class:`XlaBackend`          — direct ``jax.lax`` collectives (flat
+  single-phase algorithms; XLA's collective runtime is the TPU vendor lib);
+* :class:`HierarchicalBackend` — pod-aware two-level algorithms from
+  :mod:`repro.distributed.hierarchical` (reduce-scatter intra-pod →
+  all-reduce inter-pod → all-gather intra-pod), the TPU analogue of NCCL's
+  topology-aware trees/rings;
+* :class:`CompressedBackend`   — int8 quantization + error feedback around
+  the wire collective (:mod:`repro.distributed.compression`);
+* :class:`AnalyticBackend`     — the XLA wire path plus a per-call analytic
+  cost estimate (the dry-run / roofline napkin math), logged host-side at
+  trace time.
+
+Backends register by name in a module registry so new ones plug in without
+touching any call site: ``@register_backend`` + ``ctx.communicator(group,
+backend="mine")``.  A backend instance never records call counts — that is
+the communicator handle's job (:mod:`repro.core.context`); backends own only
+the wire lowering, so every method here is safe to call from inside
+``shard_map`` tracing.
+
+The analytic link-cost models (ring/hierarchical time bounds) also live
+here; :mod:`repro.core.ompccl` re-exports them for the benchmark layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .compat import all_gather_invariant, axis_size, pcast, typeof
+from .groups import DiompGroup
+
+__all__ = [
+    "CclBackend",
+    "XlaBackend",
+    "HierarchicalBackend",
+    "CompressedBackend",
+    "AnalyticBackend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "BackendError",
+    "ensure_varying",
+    "group_rank",
+    "group_size",
+    "fence",
+    "LinkModel",
+    "ring_allreduce_time",
+    "ring_allgather_time",
+    "hierarchical_allreduce_time",
+]
+
+
+class BackendError(ValueError):
+    """Unknown backend name / invalid backend registration."""
+
+
+# ---------------------------------------------------------------------------
+# trace-level helpers shared by every backend
+# ---------------------------------------------------------------------------
+
+
+def _axes(group: DiompGroup) -> Tuple[str, ...]:
+    if group.is_self_group():
+        raise ValueError("collective on empty (self) group")
+    return group.lax_axes
+
+
+def ensure_varying(x, axes: Tuple[str, ...]):
+    """Promote x to be varying over ``axes`` (vma bookkeeping).
+
+    A collective over a group must see its operand varying on every group
+    axis; values that are invariant on some axis (e.g. a loss already
+    psum'd over "model") are pvary'd first — a pure type-level operation.
+    On pre-vma jax this is the identity.
+    """
+    def promote(v):
+        vma = getattr(typeof(v), "vma", frozenset())
+        missing = tuple(a for a in axes if a not in vma)
+        return pcast(v, missing, to="varying") if missing else v
+
+    return jax.tree.map(promote, x)
+
+
+def group_rank(group: DiompGroup):
+    """Linearized rank of the caller within the group (row-major over axes)."""
+    rank = jnp.int32(0)
+    for ax in group.axes:
+        rank = rank * axis_size(ax) + lax.axis_index(ax)
+    return rank
+
+
+def group_size(group: DiompGroup) -> int:
+    size = 1
+    for ax in group.axes:
+        size *= axis_size(ax)
+    return size
+
+
+def _ring_axis(group: DiompGroup) -> str:
+    if len(group.axes) != 1:
+        raise ValueError(
+            f"RMA rings need a single-axis group (one ICI ring), got {group.axes}"
+        )
+    return group.axes[0]
+
+
+def fence(*arrays):
+    """Complete all outstanding RMA before anything downstream runs.
+
+    ``lax.optimization_barrier`` prevents XLA from reordering/fusing across
+    the fence — the compiled counterpart of DiOMP's hybrid polling loop that
+    waits on both network and device events.  Returns the fenced arrays.
+    Backend-independent: the fence is an ordering property of the compiled
+    program, not of any one transport.
+    """
+    if not arrays:
+        return ()
+    fenced = lax.optimization_barrier(arrays)
+    return fenced[0] if len(arrays) == 1 else fenced
+
+
+# ---------------------------------------------------------------------------
+# the backend protocol + flat XLA implementation
+# ---------------------------------------------------------------------------
+
+
+class CclBackend:
+    """Protocol + default flat-XLA lowering for every OMPCCL verb.
+
+    Subclasses override individual collectives; anything not overridden
+    falls through to the flat single-phase algorithm, so a backend only has
+    to implement what it actually changes (exactly how OMPCCL falls back to
+    the generic path for ops a vendor library lacks).
+    """
+
+    #: registry name; subclasses must override.
+    name = "xla"
+
+    # -- collectives (usable inside shard_map) ------------------------------
+    def allreduce(self, x, group: DiompGroup, *, op: str = "sum"):
+        x = ensure_varying(x, _axes(group))
+        axes = _axes(group)
+        if op == "sum":
+            return lax.psum(x, axes)
+        if op == "max":
+            return lax.pmax(x, axes)
+        if op == "min":
+            return lax.pmin(x, axes)
+        if op == "mean":
+            return lax.pmean(x, axes)
+        raise ValueError(f"unsupported op {op!r}")
+
+    def bcast(self, x, group: DiompGroup, *, root: int = 0):
+        """Root's value delivered to every member.
+
+        SPMD formulation: zero out non-root contributions and sum through
+        ``self.allreduce`` — so a backend that only overrides allreduce
+        automatically broadcasts over its own wire algorithm (exact because
+        non-root terms are literal zeros; on the flat path XLA lowers it to
+        one all-reduce whose cost equals a broadcast tree).
+        """
+        x = ensure_varying(x, _axes(group))
+        rank = group_rank(group)
+        contribution = jnp.where(rank == root, x, jnp.zeros_like(x))
+        return self.allreduce(contribution, group)
+
+    def allgather(self, x, group: DiompGroup, *, axis: int = 0,
+                  tiled: bool = True, invariant: bool = False):
+        out = ensure_varying(x, _axes(group))
+        # gather across each mesh axis of the group, innermost last so that
+        # the concatenation order equals the group's row-major rank order
+        if invariant:
+            for ax in reversed(group.axes):
+                out = all_gather_invariant(out, ax, axis=axis, tiled=tiled)
+            return out
+        for ax in reversed(group.axes):
+            out = lax.all_gather(out, ax, axis=axis, tiled=tiled)
+        return out
+
+    def reducescatter(self, x, group: DiompGroup, *, axis: int = 0):
+        out = ensure_varying(x, _axes(group))
+        for ax in group.axes:
+            out = lax.psum_scatter(out, ax, scatter_dimension=axis, tiled=True)
+        return out
+
+    def alltoall(self, x, group: DiompGroup, *, split_axis: int = 0,
+                 concat_axis: int = 0):
+        x = ensure_varying(x, _axes(group))
+        return lax.all_to_all(
+            x, group.lax_axes, split_axis=split_axis, concat_axis=concat_axis,
+            tiled=True,
+        )
+
+    def permute(self, x, group: DiompGroup, *, shift: int = 1):
+        if len(group.axes) != 1:
+            raise ValueError("permute requires a single-axis group")
+        x = ensure_varying(x, _axes(group))
+        ax = group.axes[0]
+        n = axis_size(ax)
+        perm = [(i, (i + shift) % n) for i in range(n)]
+        return lax.ppermute(x, ax, perm)
+
+    def barrier(self, group: DiompGroup):
+        """A collective-ordering token: psum of a zero scalar across the
+        group.  Data-depending later ops on this token enforces collective
+        completion — the compiled-SPMD analogue of ompx_barrier(group)."""
+        return lax.psum(jnp.zeros((), jnp.float32), _axes(group))
+
+    # -- one-sided RMA ------------------------------------------------------
+    def put(self, x, group: DiompGroup, *, shift: int = 1):
+        """One-sided put of my shard to the rank ``shift`` ahead on the ring.
+
+        SPMD semantics: every rank's window receives the shard of the rank
+        ``shift`` *behind* it.  ``shift`` may be negative.  Lowers to a
+        single ``collective-permute`` (a remote DMA on ICI).
+        """
+        ax = _ring_axis(group)
+        n = axis_size(ax)
+        perm = [(i, (i + shift) % n) for i in range(n)]
+        return lax.ppermute(x, ax, perm)
+
+    def put_perm(self, x, group: DiompGroup, perm: Sequence[Tuple[int, int]]):
+        """General one-sided put along an arbitrary (src, dst) permutation."""
+        ax = _ring_axis(group)
+        return lax.ppermute(x, ax, list(perm))
+
+    def halo_exchange(self, x, group: DiompGroup, *, halo: int,
+                      axis: int = 0):
+        """Minimod's halo pattern (paper Listing 1) as one fused exchange.
+
+        Every rank puts its *left* boundary slab to the left neighbor's
+        right halo and its *right* boundary slab to the right neighbor's
+        left halo, then fences.  Returns ``(left_halo, right_halo)``; edge
+        ranks receive zeros (non-periodic stencil boundaries).
+        """
+        ax = _ring_axis(group)
+        n = axis_size(ax)
+        idx = lax.axis_index(ax)
+
+        left_slab = lax.slice_in_dim(x, 0, halo, axis=axis)
+        right_slab = lax.slice_in_dim(
+            x, x.shape[axis] - halo, x.shape[axis], axis=axis)
+
+        # put right_slab -> rank+1's left halo; left_slab -> rank-1's right
+        # halo.  Non-periodic: drop the wrap-around edge.
+        fwd = [(i, i + 1) for i in range(n - 1)]
+        bwd = [(i, i - 1) for i in range(1, n)]
+        from_left = lax.ppermute(right_slab, ax, fwd)
+        from_right = lax.ppermute(left_slab, ax, bwd)
+
+        from_left = jnp.where(idx == 0, jnp.zeros_like(from_left), from_left)
+        from_right = jnp.where(idx == n - 1, jnp.zeros_like(from_right),
+                               from_right)
+        return fence(from_left, from_right)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return f"{type(self).__name__}({self.name!r})"
+
+
+class XlaBackend(CclBackend):
+    """The flat vendor path: every verb is the base-class XLA lowering."""
+
+    name = "xla"
+
+
+class HierarchicalBackend(CclBackend):
+    """Pod-aware two-level algorithms (NCCL's topology-trees analogue)."""
+
+    name = "hierarchical"
+
+    def allreduce(self, x, group: DiompGroup, *, op: str = "sum"):
+        from repro.distributed.hierarchical import hierarchical_allreduce
+
+        x = ensure_varying(x, _axes(group))
+        return hierarchical_allreduce(x, group, op=op)
+
+    def allgather(self, x, group: DiompGroup, *, axis: int = 0,
+                  tiled: bool = True, invariant: bool = False):
+        if len(group.axes) >= 2 and tiled and not invariant:
+            from repro.distributed.hierarchical import hierarchical_allgather
+
+            x = ensure_varying(x, _axes(group))
+            return hierarchical_allgather(x, group, axis=axis)
+        return super().allgather(x, group, axis=axis, tiled=tiled,
+                                 invariant=invariant)
+
+
+class CompressedBackend(CclBackend):
+    """int8 + error-feedback wire compression around the reduce.
+
+    ``allreduce`` honors the CclBackend contract (returns the reduced
+    array); the quantization residual is discarded.  Error-feedback
+    training loops need the residual as a traced carry, so they call
+    :func:`repro.distributed.compression.compressed_allreduce` directly —
+    backend-instance state cannot thread a per-step carry.
+    """
+
+    name = "compressed"
+
+    def allreduce(self, x, group: DiompGroup, *, op: str = "sum",
+                  error=None):
+        from repro.distributed.compression import compressed_allreduce
+
+        if op != "sum":
+            raise ValueError(
+                f"compressed backend reduces op='sum' only, got {op!r} "
+                "(min/max do not decompose through quantized chunks)")
+        x = ensure_varying(x, _axes(group))
+        # compressed_allreduce returns the group MEAN; scale back to the
+        # sum the CclBackend contract promises
+        out, _residual = compressed_allreduce(x, group, error=error)
+        return jax.tree.map(lambda o: o * group_size(group), out)
+
+
+class AnalyticBackend(CclBackend):
+    """XLA wire path + a host-side analytic cost log per call.
+
+    Each collective traced through this backend appends an estimate row to
+    :attr:`estimates` (op, payload bytes, group size, modeled seconds on
+    the v5e link model) — the dry-run's napkin math, attached to the same
+    call stream the communicator records.  Estimation failures (e.g. a
+    pytree operand outside shard_map) degrade to ``est_s=None`` rather than
+    perturbing the traced program.
+    """
+
+    name = "analytic"
+
+    def __init__(self, link: Optional["LinkModel"] = None):
+        self.link = link or LinkModel()
+        self.estimates: List[dict] = []
+
+    def _payload_bytes(self, x) -> int:
+        total = 0
+        for leaf in jax.tree.leaves(x):
+            shape = getattr(leaf, "shape", ())
+            n = 1
+            for d in shape:
+                n *= int(d)
+            total += n * jnp.dtype(getattr(leaf, "dtype", jnp.float32)).itemsize
+        return total
+
+    def _note(self, op: str, x, group: DiompGroup, time_fn) -> None:
+        try:
+            nbytes = self._payload_bytes(x)
+            ndev = group_size(group)
+            est = time_fn(nbytes, ndev)
+        except Exception:  # noqa: BLE001 - cost model must never break trace
+            nbytes, ndev, est = None, None, None
+        self.estimates.append(
+            {"op": op, "bytes": nbytes, "ndev": ndev, "est_s": est})
+
+    def allreduce(self, x, group: DiompGroup, *, op: str = "sum"):
+        self._note("allreduce", x, group,
+                   lambda b, n: ring_allreduce_time(b, n, self.link))
+        return super().allreduce(x, group, op=op)
+
+    # bcast needs no override: the base class routes it through
+    # self.allreduce, which logs the underlying all-reduce estimate
+
+    def allgather(self, x, group: DiompGroup, *, axis: int = 0,
+                  tiled: bool = True, invariant: bool = False):
+        self._note("allgather", x, group,
+                   lambda b, n: ring_allgather_time(b * n, n, self.link))
+        return super().allgather(x, group, axis=axis, tiled=tiled,
+                                 invariant=invariant)
+
+    def reducescatter(self, x, group: DiompGroup, *, axis: int = 0):
+        self._note("reducescatter", x, group,
+                   lambda b, n: ring_allgather_time(b, n, self.link))
+        return super().reducescatter(x, group, axis=axis)
+
+    def alltoall(self, x, group: DiompGroup, *, split_axis: int = 0,
+                 concat_axis: int = 0):
+        self._note("alltoall", x, group,
+                   lambda b, n: ring_allgather_time(b, n, self.link))
+        return super().alltoall(x, group, split_axis=split_axis,
+                                concat_axis=concat_axis)
+
+    def put(self, x, group: DiompGroup, *, shift: int = 1):
+        self._note("put", x, group,
+                   lambda b, n: b / self.link.bandwidth_Bps
+                   + self.link.latency_s)
+        return super().put(x, group, shift=shift)
+
+
+# ---------------------------------------------------------------------------
+# backend registry (models OMPCCL's vendor-library dispatch table)
+# ---------------------------------------------------------------------------
+
+_BACKENDS: Dict[str, Type[CclBackend]] = {}
+
+
+def register_backend(cls: Type[CclBackend], *,
+                     name: Optional[str] = None,
+                     aliases: Sequence[str] = ()) -> Type[CclBackend]:
+    """Register a backend class under ``cls.name`` (usable as a decorator).
+
+    New backends plug in without touching a single call site: every
+    communicator handle resolves its backend through this table.
+    """
+    if not (isinstance(cls, type) and issubclass(cls, CclBackend)):
+        raise BackendError(f"{cls!r} is not a CclBackend subclass")
+    key = name or cls.name
+    if not key:
+        raise BackendError(f"{cls.__name__} has no backend name")
+    _BACKENDS[key] = cls
+    for alias in aliases:
+        _BACKENDS[alias] = cls
+    return cls
+
+
+def get_backend(name: str) -> Type[CclBackend]:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise BackendError(
+            f"unknown OMPCCL backend {name!r}; available: "
+            f"{sorted(set(_BACKENDS))}") from None
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(set(_BACKENDS)))
+
+
+register_backend(XlaBackend, aliases=("flat",))
+register_backend(HierarchicalBackend)
+register_backend(CompressedBackend)
+register_backend(AnalyticBackend)
+
+
+# ---------------------------------------------------------------------------
+# analytic cost model (used by benchmarks + the hillclimb napkin math)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """v5e ICI link model; one link per mesh-torus direction."""
+
+    bandwidth_Bps: float = 50e9  # ~50 GB/s per link direction
+    latency_s: float = 1e-6  # per-hop launch latency
+
+
+def ring_allreduce_time(bytes_: int, ndev: int, link: LinkModel = LinkModel()) -> float:
+    """2(n-1)/n · B / bw + 2(n-1) · lat — the classic ring bound."""
+    if ndev <= 1:
+        return 0.0
+    steps = 2 * (ndev - 1)
+    return steps * link.latency_s + (steps / ndev) * bytes_ / link.bandwidth_Bps
+
+
+def ring_allgather_time(bytes_out: int, ndev: int, link: LinkModel = LinkModel()) -> float:
+    if ndev <= 1:
+        return 0.0
+    steps = ndev - 1
+    return steps * link.latency_s + (steps / ndev) * bytes_out / link.bandwidth_Bps
+
+
+def hierarchical_allreduce_time(
+    bytes_: int,
+    intra: int,
+    inter: int,
+    intra_link: LinkModel = LinkModel(),
+    inter_link: LinkModel = LinkModel(bandwidth_Bps=25e9, latency_s=5e-6),
+) -> float:
+    """RS(intra) + AR(inter, on 1/intra of the data) + AG(intra)."""
+    t_rs = ring_allgather_time(bytes_, intra, intra_link)  # RS cost == AG cost
+    t_ar = ring_allreduce_time(bytes_ // max(intra, 1), inter, inter_link)
+    t_ag = ring_allgather_time(bytes_, intra, intra_link)
+    return t_rs + t_ar + t_ag

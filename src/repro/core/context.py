@@ -1,0 +1,392 @@
+"""DiompContext — the explicit entry point of the DiOMP runtime.
+
+The paper's runtime owns ONE table: every group maps to one registered
+communicator, and every collective/RMA call dispatches through it (§3.3,
+Fig. 1b).  :class:`DiompContext` realizes that claim as an object you create
+once per deployment::
+
+    import repro as diomp
+
+    ctx = diomp.init(mesh=mesh)                  # install process default
+    comm = ctx.communicator(group)               # the OMPCCL handle
+    y = comm.allreduce(x)                        # recorded + dispatched
+    h = ctx.communicator(dp, backend="hierarchical")
+    g = h.allreduce(grads)                       # pod-aware wire algorithm
+
+The context owns
+
+* the **group registry** (named :class:`~repro.core.groups.DiompGroup`
+  handles, descriptor-validated at registration — the UniqueID handshake),
+* the **GlobalMemory** PGAS arena plan,
+* the **StreamPool** + **HybridPoller** (bounded async host work, §3.2),
+* the **RMATracker** (host-side put/fence discipline),
+* the **communicator table**: one shared per-group call log, with one
+  :class:`Communicator` handle per (group, backend) pair so backend choice
+  propagates to *every* op issued through that handle.
+
+A process-default context backs the paper-verbatim free functions in
+:mod:`repro.core.ompccl` / :mod:`repro.core.rma` / :mod:`repro.core.ompx`,
+so listing-style code keeps working while new code holds explicit handles.
+"""
+
+from __future__ import annotations
+
+import contextvars
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+
+from . import backends as _backends
+from .backends import CclBackend, get_backend
+from .groups import DiompGroup, standard_groups
+from .pgas import GlobalMemory
+from .rma import RMATracker
+from .streams import HybridPoller, StreamPool
+
+__all__ = [
+    "Communicator",
+    "CommTable",
+    "DiompContext",
+    "init",
+    "default_context",
+    "default_communicator",
+    "install_default",
+    "use_default",
+    "reset_default_context",
+]
+
+BackendLike = Union[str, CclBackend, None]
+
+
+class Communicator:
+    """The OMPCCL communicator handle for one (group, backend) pair.
+
+    Every op is (1) recorded against the group's shared call log — the
+    faithful per-communicator call stream OMPCCL keeps, consumed by the
+    benchmark layer — and (2) dispatched through the backend instance, so
+    the backend choice made at handle creation governs *all* collectives
+    and RMA verbs issued through it.  All methods are usable inside
+    ``shard_map``.
+    """
+
+    __slots__ = ("group", "backend", "calls")
+
+    def __init__(self, group: DiompGroup, backend: CclBackend,
+                 calls: Dict[str, int]):
+        self.group = group
+        self.backend = backend
+        self.calls = calls  # shared across handles of the same group
+
+    def record(self, op: str) -> None:
+        self.calls[op] = self.calls.get(op, 0) + 1
+
+    # -- collectives --------------------------------------------------------
+    def allreduce(self, x, *, op: str = "sum"):
+        """ompx_allreduce: reduction across the group, result everywhere."""
+        self.record("allreduce")
+        return self.backend.allreduce(x, self.group, op=op)
+
+    def reduce(self, x, *, root: int = 0, op: str = "sum"):
+        """ompx_reduce: like allreduce but only ``root`` keeps the result
+        (others receive zeros), matching MPI_Reduce semantics in SPMD form.
+        Runs through this handle's backend, so hierarchical/compressed
+        wire paths apply here too."""
+        self.record("reduce")
+        full = self.allreduce(x, op=op)
+        rank = _backends.group_rank(self.group)
+        return jnp.where(rank == root, full, jnp.zeros_like(full))
+
+    def bcast(self, x, *, root: int = 0):
+        """ompx_bcast: root's value delivered to every group member."""
+        self.record("bcast")
+        return self.backend.bcast(x, self.group, root=root)
+
+    def allgather(self, x, *, axis: int = 0, tiled: bool = True,
+                  invariant: bool = False):
+        """ompx_allgather along a tensor axis (tiled: concatenates shards).
+
+        ``invariant=True`` uses the Varying->Invariant gather: same wire
+        bytes, but the type system records that every member ends with
+        identical data.  Inference paths use it."""
+        self.record("allgather")
+        return self.backend.allgather(x, self.group, axis=axis, tiled=tiled,
+                                      invariant=invariant)
+
+    def reducescatter(self, x, *, axis: int = 0):
+        """ompx_reducescatter: sum across group, scatter along ``axis``."""
+        self.record("reducescatter")
+        return self.backend.reducescatter(x, self.group, axis=axis)
+
+    def alltoall(self, x, *, split_axis: int = 0, concat_axis: int = 0):
+        """ompx_alltoall — the MoE dispatch primitive."""
+        self.record("alltoall")
+        return self.backend.alltoall(x, self.group, split_axis=split_axis,
+                                     concat_axis=concat_axis)
+
+    def permute(self, x, *, shift: int = 1):
+        """Ring permute within the group — the transport under ompx_put."""
+        self.record("permute")
+        return self.backend.permute(x, self.group, shift=shift)
+
+    def barrier(self):
+        """A collective-ordering token (the compiled ompx_barrier)."""
+        self.record("barrier")
+        return self.backend.barrier(self.group)
+
+    # -- one-sided RMA ------------------------------------------------------
+    def put(self, x, *, shift: int = 1):
+        """One-sided put to the rank ``shift`` ahead on the group's ring."""
+        self.record("put")
+        return self.backend.put(x, self.group, shift=shift)
+
+    def put_perm(self, x, perm: Sequence[Tuple[int, int]]):
+        """General one-sided put along an arbitrary (src, dst) permutation."""
+        self.record("put")
+        return self.backend.put_perm(x, self.group, perm)
+
+    def get(self, x, *, shift: int = 1):
+        """One-sided get of the shard owned by the rank ``shift`` ahead
+        (a read = a put with inverted permutation)."""
+        self.record("get")
+        return self.put(x, shift=-shift)
+
+    def fence(self, *arrays):
+        """Complete all outstanding RMA before anything downstream runs."""
+        return _backends.fence(*arrays)
+
+    def halo_exchange(self, x, *, halo: int, axis: int = 0):
+        """Minimod's halo pattern (paper Listing 1) as one fused exchange."""
+        self.record("halo_exchange")
+        return self.backend.halo_exchange(x, self.group, halo=halo, axis=axis)
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def backend_name(self) -> str:
+        return self.backend.name
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"Communicator(group={self.group.name}, "
+                f"backend={self.backend.name})")
+
+
+class CommTable:
+    """The context's communicator table (OMPCCL's per-group comm registry).
+
+    One call log per group descriptor — shared by every backend's handle
+    for that group, mirroring how OMPCCL keys NCCL communicators by group —
+    plus one cached backend instance per backend name (so stateful backends
+    like the analytic cost model accumulate across handles).
+    """
+
+    def __init__(self):
+        self._comms: Dict[Tuple[str, str], Communicator] = {}
+        self._calls: Dict[str, Dict[str, int]] = {}
+        self._backends: Dict[str, CclBackend] = {}
+
+    def backend_instance(self, backend: BackendLike,
+                         default: str = "xla") -> CclBackend:
+        if isinstance(backend, CclBackend):
+            return backend
+        name = backend or default
+        if name not in self._backends:
+            self._backends[name] = get_backend(name)()
+        return self._backends[name]
+
+    def communicator(self, group: DiompGroup,
+                     backend: BackendLike = None) -> Communicator:
+        if isinstance(backend, CclBackend):
+            # caller-owned instance: keyed by identity so two differently
+            # configured instances of one backend class never alias
+            inst, bkey = backend, f"instance:{id(backend)}"
+        else:
+            inst = self.backend_instance(backend)
+            bkey = inst.name
+        key = (group.descriptor(), bkey)
+        if key not in self._comms:
+            calls = self._calls.setdefault(key[0], {})
+            self._comms[key] = Communicator(group, inst, calls)
+        return self._comms[key]
+
+    def reset(self) -> None:
+        """Zero every call count IN PLACE.
+
+        Live Communicator handles keep writing into the same dicts, so a
+        reset never orphans a handle's recording (handles outlive resets in
+        the new API, unlike the per-call lookups of the free functions).
+        Backend instances — and e.g. the analytic backend's cost log — are
+        deliberately untouched.
+        """
+        for calls in self._calls.values():
+            calls.clear()
+
+    def stats(self) -> Dict[str, Dict[str, int]]:
+        """descriptor -> per-op call counts, aggregated over backends."""
+        return {k: dict(v) for k, v in self._calls.items() if v}
+
+
+class DiompContext:
+    """One deployment's unified runtime state (paper Fig. 1b, host side).
+
+    ``mesh`` may be None for a bootstrap context (collective recording and
+    dispatch need no mesh — groups resolve axis sizes at trace time); a
+    mesh-bearing context additionally validates its standard groups'
+    descriptors (the UniqueID handshake) and sizes its PGAS arena per
+    device.
+    """
+
+    def __init__(
+        self,
+        mesh=None,
+        *,
+        segment_bytes: int = 16 * 2**30,
+        allocator: str = "linear",
+        max_active_streams: int = 8,
+        default_backend: str = "xla",
+        comm_backend: str = "gasnet-ex",  # config fidelity; no-op on TPU
+    ):
+        self.mesh = mesh
+        self.comm_backend = comm_backend
+        self.default_backend = default_backend
+        self.ndev = int(mesh.devices.size) if mesh is not None else 1
+        self.memory = GlobalMemory(self.ndev, segment_bytes,
+                                   allocator=allocator)
+        self.groups: Dict[str, DiompGroup] = (
+            standard_groups(mesh) if mesh is not None else {})
+        self.streams = StreamPool(max_active=max_active_streams)
+        self.poller = HybridPoller()
+        self.rma = RMATracker()
+        self.comms = CommTable()
+        # bootstrap: validate every group's descriptor (UniqueID handshake)
+        self._descriptors = {
+            name: g.validate(mesh).descriptor()
+            for name, g in self.groups.items()
+        } if mesh is not None else {}
+
+    # -- group management ---------------------------------------------------
+    def group(self, name: str) -> DiompGroup:
+        return self.groups[name]
+
+    def add_group(self, name: str, group: DiompGroup) -> DiompGroup:
+        if self.mesh is not None:
+            group.validate(self.mesh)
+        self.groups[name] = group
+        self._descriptors[name] = group.descriptor()
+        return group
+
+    # -- the communicator-handle API ----------------------------------------
+    def communicator(self, group: Union[DiompGroup, str],
+                     backend: BackendLike = None) -> Communicator:
+        """The OMPCCL handle for ``group`` (by handle or registered name).
+
+        ``backend`` is a registry name (``"xla"``, ``"hierarchical"``,
+        ``"compressed"``, ``"analytic"``, or any plugin registered via
+        :func:`repro.core.backends.register_backend`) or a ready
+        :class:`CclBackend` instance; None uses the context default.
+        """
+        if isinstance(group, str):
+            group = self.groups[group]
+        return self.comms.communicator(
+            group, backend if backend is not None else self.default_backend)
+
+    def stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-group, per-op collective call counts (the OMPCCL call log)."""
+        return self.comms.stats()
+
+    def reset_stats(self) -> None:
+        self.comms.reset()
+
+    # -- synchronization -----------------------------------------------------
+    def fence(self, timeout_s: float = 120.0) -> None:
+        """Host-side ompx_fence: drain streams + every registered poll
+        source, then advance the RMA epoch."""
+        self.streams.synchronize_all()
+        self.poller.fence(timeout_s=timeout_s)
+        self.rma.on_fence()
+
+    def close(self) -> None:
+        self.streams.close()
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        shape = dict(self.mesh.shape) if self.mesh is not None else None
+        return (f"DiompContext(ndev={self.ndev}, mesh={shape}, "
+                f"groups={sorted(self.groups)}, "
+                f"default_backend={self.default_backend!r})")
+
+
+# ---------------------------------------------------------------------------
+# default context (backs the paper-verbatim ompx_* free functions)
+#
+# Two layers: a process-wide default (init / install_default — visible from
+# every thread, the deployment's one table) and a ContextVar overlay for
+# scoped use (use_default — token-paired and per-thread/per-task, so nested
+# or concurrent scopes can never permanently clobber the process default).
+# ---------------------------------------------------------------------------
+
+_default: Optional[DiompContext] = None
+_default_lock = threading.Lock()
+_scoped: "contextvars.ContextVar[Optional[DiompContext]]" = \
+    contextvars.ContextVar("diomp_scoped_context", default=None)
+
+
+def install_default(ctx: DiompContext) -> DiompContext:
+    """Install ``ctx`` as the process default (returns it)."""
+    global _default
+    with _default_lock:
+        _default = ctx
+    return ctx
+
+
+def init(mesh=None, **kwargs) -> DiompContext:
+    """Create a :class:`DiompContext` and install it as the process default.
+
+    ``diomp.init(mesh=...)`` is the one entry point the paper's listings
+    assume: after it, both explicit handles (``ctx.communicator(...)``) and
+    the compat free functions (``ompx_allreduce`` etc.) hit the same table.
+    """
+    return install_default(DiompContext(mesh=mesh, **kwargs))
+
+
+def default_context() -> DiompContext:
+    """The active context: the innermost ``use_default`` scope if one is
+    open on this thread, else the process default (bootstrapping a
+    meshless one on first use — collective recording needs no mesh)."""
+    scoped = _scoped.get()
+    if scoped is not None:
+        return scoped
+    global _default
+    if _default is None:
+        with _default_lock:
+            if _default is None:
+                _default = DiompContext(segment_bytes=1 << 20)
+    return _default
+
+
+@contextmanager
+def use_default(ctx: DiompContext):
+    """Make ``ctx`` the active context within the ``with`` block — for
+    query-style tooling (dry-run cells, serve engines, report generators)
+    that must not hijack the application's process default.  ContextVar-
+    scoped: concurrent scopes on other threads are unaffected, and exit
+    restores exactly what this scope shadowed."""
+    token = _scoped.set(ctx)
+    try:
+        yield ctx
+    finally:
+        _scoped.reset(token)
+
+
+def default_communicator(group: DiompGroup,
+                         backend: BackendLike = None) -> Communicator:
+    """The active context's communicator handle for ``group`` — the single
+    resolution point behind every paper-verbatim free function
+    (:mod:`repro.core.ompccl`, :mod:`repro.core.rma`)."""
+    return default_context().communicator(group, backend)
+
+
+def reset_default_context() -> None:
+    """Drop the process default (tests); the next use bootstraps afresh."""
+    global _default
+    with _default_lock:
+        _default = None

@@ -1,34 +1,36 @@
 """OMPCCL — the portable collective communication layer (paper §3.3).
 
-The paper's OMPCCL exposes device-side collectives (broadcast, reduce,
-all-reduce, ...) through one portable API and dispatches to the vendor library
-(NCCL / RCCL).  On TPU the "vendor library" is XLA's collective runtime; the
-portable API here is a set of functions that run **inside shard_map**, scoped
-by a :class:`~repro.core.groups.DiompGroup`, with a backend switch:
+The wire algorithms live in :mod:`repro.core.backends` (pluggable
+``CclBackend`` classes: flat XLA, pod-hierarchical, int8-compressed,
+analytic); the communicator handles and the per-group call log live in
+:mod:`repro.core.context`.  This module is the paper-verbatim *free
+function* surface: every call resolves the process-default
+:class:`~repro.core.context.DiompContext`, obtains the communicator handle
+for ``(group, backend)``, and dispatches through it — so listing-style code
+(`ompccl.allreduce(x, g)`) and handle-style code
+(`ctx.communicator(g).allreduce(x)`) hit the same table, record the same
+call stream, and honor the same backend choice.
 
-* ``xla``          — direct ``jax.lax`` collectives (flat algorithms);
-* ``hierarchical`` — pod-aware two-level algorithms from
-  :mod:`repro.distributed.hierarchical` (reduce-scatter intra-pod →
-  all-reduce inter-pod → all-gather intra-pod), the TPU analogue of
-  NCCL's topology-aware trees/rings;
-* ``compressed``   — int8 quantization + error feedback around the wire
-  collective (:mod:`repro.distributed.compression`).
-
-Every call is recorded against its communicator, mirroring how OMPCCL
-registers NCCL communicators per DiOMP group, and giving the benchmark layer a
-faithful call log.
+Unlike the pre-context API, ``backend=`` now propagates to **every**
+collective (including ``reduce`` and ``bcast``, which previously dropped
+it), because dispatch happens on the handle, not in per-op branches.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
-import jax
-import jax.numpy as jnp
-from jax import lax
-
+from .backends import (  # noqa: F401  (re-exports: benchmark/compat surface)
+    LinkModel,
+    ensure_varying,
+    group_rank,
+    group_size,
+    hierarchical_allreduce_time,
+    ring_allgather_time,
+    ring_allreduce_time,
+)
+from .context import (CommTable, Communicator, default_communicator as
+                      _comm, default_context)
 from .groups import DiompGroup
 
 __all__ = [
@@ -45,81 +47,37 @@ __all__ = [
     "barrier_value",
     "group_rank",
     "group_size",
+    "ensure_varying",
+    "LinkModel",
+    "ring_allreduce_time",
+    "ring_allgather_time",
+    "hierarchical_allreduce_time",
 ]
 
-
-# ---------------------------------------------------------------------------
-# communicator registry (models OMPCCL's UniqueID bootstrap + per-group comms)
-# ---------------------------------------------------------------------------
+# the handle-owning table class, under its historical name
+CclRegistry = CommTable
 
 
-@dataclasses.dataclass
-class Communicator:
-    group: DiompGroup
-    backend: str = "xla"
-    calls: Dict[str, int] = dataclasses.field(default_factory=dict)
+class _DefaultRegistryProxy:
+    """``ompccl.registry`` now proxies the default context's table.
 
-    def record(self, op: str) -> None:
-        self.calls[op] = self.calls.get(op, 0) + 1
+    Kept for callers that inspect ``registry.stats()`` / call
+    ``registry.reset()``; no library code reads it — every op goes through
+    a context communicator handle.
+    """
 
-
-class CclRegistry:
-    """Host-side table: group descriptor -> communicator (paper: UniqueID
-    generation + broadcast happens once per group at init)."""
-
-    def __init__(self):
-        self._comms: Dict[str, Communicator] = {}
-
-    def communicator(self, group: DiompGroup, backend: str = "xla") -> Communicator:
-        key = group.descriptor()
-        if key not in self._comms:
-            self._comms[key] = Communicator(group=group, backend=backend)
-        return self._comms[key]
+    def communicator(self, group: DiompGroup, backend: str = None
+                     ) -> Communicator:
+        return _comm(group, backend)
 
     def reset(self) -> None:
-        self._comms.clear()
+        default_context().reset_stats()
 
     def stats(self) -> Dict[str, Dict[str, int]]:
-        return {k: dict(c.calls) for k, c in self._comms.items()}
+        return default_context().stats()
 
 
-registry = CclRegistry()
-
-
-def _axes(group: DiompGroup) -> Tuple[str, ...]:
-    if group.is_self_group():
-        raise ValueError("collective on empty (self) group")
-    return group.lax_axes
-
-
-def ensure_varying(x, axes: Tuple[str, ...]):
-    """Promote x to be varying over ``axes`` (vma bookkeeping).
-
-    A collective over a group must see its operand varying on every group
-    axis; values that are invariant on some axis (e.g. a loss already
-    psum'd over "model") are pvary'd first — a pure type-level operation.
-    """
-    def promote(v):
-        vma = getattr(jax.typeof(v), "vma", frozenset())
-        missing = tuple(a for a in axes if a not in vma)
-        return lax.pcast(v, missing, to="varying") if missing else v
-
-    return jax.tree.map(promote, x)
-
-
-def group_rank(group: DiompGroup):
-    """Linearized rank of the caller within the group (row-major over axes)."""
-    rank = jnp.int32(0)
-    for ax in group.axes:
-        rank = rank * lax.axis_size(ax) + lax.axis_index(ax)
-    return rank
-
-
-def group_size(group: DiompGroup) -> int:
-    size = 1
-    for ax in group.axes:
-        size *= lax.axis_size(ax)
-    return size
+registry = _DefaultRegistryProxy()
 
 
 # ---------------------------------------------------------------------------
@@ -127,160 +85,48 @@ def group_size(group: DiompGroup) -> int:
 # ---------------------------------------------------------------------------
 
 
-def allreduce(x, group: DiompGroup, *, op: str = "sum", backend: str = "xla"):
+def allreduce(x, group: DiompGroup, *, op: str = "sum", backend: str = None):
     """ompx_allreduce: reduction across the group, result on every member."""
-    registry.communicator(group, backend).record("allreduce")
-    x = ensure_varying(x, _axes(group))
-    if backend == "hierarchical":
-        from repro.distributed.hierarchical import hierarchical_allreduce
-
-        return hierarchical_allreduce(x, group, op=op)
-    if backend == "compressed":
-        from repro.distributed.compression import compressed_allreduce
-
-        return compressed_allreduce(x, group)
-    axes = _axes(group)
-    if op == "sum":
-        return lax.psum(x, axes)
-    if op == "max":
-        return lax.pmax(x, axes)
-    if op == "min":
-        return lax.pmin(x, axes)
-    if op == "mean":
-        return lax.pmean(x, axes)
-    raise ValueError(f"unsupported op {op!r}")
+    return _comm(group, backend).allreduce(x, op=op)
 
 
-def reduce(x, group: DiompGroup, *, root: int = 0, op: str = "sum"):
+def reduce(x, group: DiompGroup, *, root: int = 0, op: str = "sum",
+           backend: str = None):
     """ompx_reduce: like allreduce but only ``root`` keeps the result
     (others receive zeros), matching MPI_Reduce semantics in SPMD form."""
-    registry.communicator(group).record("reduce")
-    full = allreduce(x, group, op=op)
-    rank = group_rank(group)
-    return jnp.where(rank == root, full, jnp.zeros_like(full))
+    return _comm(group, backend).reduce(x, root=root, op=op)
 
 
-def bcast(x, group: DiompGroup, *, root: int = 0):
-    """ompx_bcast: root's value delivered to every group member.
-
-    SPMD formulation: zero out non-root contributions and sum — on TPU this
-    lowers to a single all-reduce whose cost equals a broadcast tree (XLA
-    picks the algorithm; the semantics are exact because non-root terms are
-    literal zeros).
-    """
-    registry.communicator(group).record("bcast")
-    x = ensure_varying(x, _axes(group))
-    rank = group_rank(group)
-    contribution = jnp.where(rank == root, x, jnp.zeros_like(x))
-    return lax.psum(contribution, _axes(group))
+def bcast(x, group: DiompGroup, *, root: int = 0, backend: str = None):
+    """ompx_bcast: root's value delivered to every group member."""
+    return _comm(group, backend).bcast(x, root=root)
 
 
 def allgather(x, group: DiompGroup, *, axis: int = 0, tiled: bool = True,
-              invariant: bool = False):
-    """ompx_allgather along a tensor axis (tiled: concatenates shards).
-
-    ``invariant=True`` uses the Varying->Invariant gather: same wire bytes,
-    but the type system records that every member ends with identical data
-    (its transpose is a free dynamic-slice instead of a reduce-scatter).
-    Inference paths use it — no AD, exact replication typing.
-    """
-    registry.communicator(group).record("allgather")
-    out = ensure_varying(x, _axes(group))
-    # gather across each mesh axis of the group, innermost last so that the
-    # concatenation order equals the group's row-major rank order
-    if invariant:
-        from jax._src.lax.parallel import all_gather_invariant
-
-        for ax in reversed(group.axes):
-            out = all_gather_invariant(out, ax, axis=axis, tiled=tiled)
-        return out
-    for ax in reversed(group.axes):
-        out = lax.all_gather(out, ax, axis=axis, tiled=tiled)
-    return out
+              invariant: bool = False, backend: str = None):
+    """ompx_allgather along a tensor axis (tiled: concatenates shards)."""
+    return _comm(group, backend).allgather(x, axis=axis, tiled=tiled,
+                                           invariant=invariant)
 
 
-def reducescatter(x, group: DiompGroup, *, axis: int = 0):
+def reducescatter(x, group: DiompGroup, *, axis: int = 0,
+                  backend: str = None):
     """ompx_reducescatter: sum across group, scatter shards along ``axis``."""
-    registry.communicator(group).record("reducescatter")
-    out = ensure_varying(x, _axes(group))
-    for ax in group.axes:
-        out = lax.psum_scatter(out, ax, scatter_dimension=axis, tiled=True)
-    return out
+    return _comm(group, backend).reducescatter(x, axis=axis)
 
 
-def alltoall(x, group: DiompGroup, *, split_axis: int = 0, concat_axis: int = 0):
-    """ompx_alltoall — the MoE dispatch primitive.
-
-    Multi-axis groups act as one combined axis (row-major rank order), so the
-    split dim must be divisible by the full group size.
-    """
-    registry.communicator(group).record("alltoall")
-    x = ensure_varying(x, _axes(group))
-    return lax.all_to_all(
-        x, group.lax_axes, split_axis=split_axis, concat_axis=concat_axis,
-        tiled=True,
-    )
+def alltoall(x, group: DiompGroup, *, split_axis: int = 0,
+             concat_axis: int = 0, backend: str = None):
+    """ompx_alltoall — the MoE dispatch primitive."""
+    return _comm(group, backend).alltoall(x, split_axis=split_axis,
+                                          concat_axis=concat_axis)
 
 
-def permute(x, group: DiompGroup, *, shift: int = 1):
+def permute(x, group: DiompGroup, *, shift: int = 1, backend: str = None):
     """Ring permute within the group — the transport under ompx_put."""
-    registry.communicator(group).record("permute")
-    if len(group.axes) != 1:
-        raise ValueError("permute requires a single-axis group")
-    x = ensure_varying(x, _axes(group))
-    ax = group.axes[0]
-    n = lax.axis_size(ax)
-    perm = [(i, (i + shift) % n) for i in range(n)]
-    return lax.ppermute(x, ax, perm)
+    return _comm(group, backend).permute(x, shift=shift)
 
 
-def barrier_value(group: DiompGroup):
-    """A collective-ordering token: psum of a zero scalar across the group.
-
-    Data-depending later ops on this token enforces collective completion —
-    the compiled-SPMD analogue of ompx_barrier(group).
-    """
-    registry.communicator(group).record("barrier")
-    return lax.psum(jnp.zeros((), jnp.float32), _axes(group))
-
-
-# ---------------------------------------------------------------------------
-# analytic cost model (used by benchmarks + the hillclimb napkin math)
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class LinkModel:
-    """v5e ICI link model; one link per mesh-torus direction."""
-
-    bandwidth_Bps: float = 50e9  # ~50 GB/s per link direction
-    latency_s: float = 1e-6  # per-hop launch latency
-
-
-def ring_allreduce_time(bytes_: int, ndev: int, link: LinkModel = LinkModel()) -> float:
-    """2(n-1)/n · B / bw + 2(n-1) · lat — the classic ring bound."""
-    if ndev <= 1:
-        return 0.0
-    steps = 2 * (ndev - 1)
-    return steps * link.latency_s + (steps / ndev) * bytes_ / link.bandwidth_Bps
-
-
-def ring_allgather_time(bytes_out: int, ndev: int, link: LinkModel = LinkModel()) -> float:
-    if ndev <= 1:
-        return 0.0
-    steps = ndev - 1
-    return steps * link.latency_s + (steps / ndev) * bytes_out / link.bandwidth_Bps
-
-
-def hierarchical_allreduce_time(
-    bytes_: int,
-    intra: int,
-    inter: int,
-    intra_link: LinkModel = LinkModel(),
-    inter_link: LinkModel = LinkModel(bandwidth_Bps=25e9, latency_s=5e-6),
-) -> float:
-    """RS(intra) + AR(inter, on 1/intra of the data) + AG(intra)."""
-    t_rs = ring_allgather_time(bytes_, intra, intra_link)  # RS cost == AG cost
-    t_ar = ring_allreduce_time(bytes_ // max(intra, 1), inter, inter_link)
-    t_ag = ring_allgather_time(bytes_, intra, intra_link)
-    return t_rs + t_ar + t_ag
+def barrier_value(group: DiompGroup, *, backend: str = None):
+    """A collective-ordering token: psum of a zero scalar across the group."""
+    return _comm(group, backend).barrier()

@@ -9,7 +9,9 @@ a directive-based host language would lower to exactly these calls):
 
 This module re-exports the runtime under those names so code written
 against the paper's listings ports one-to-one (see examples/minimod.py for
-Listing 1 in this API).
+Listing 1 in this API).  Every name is bound to the process-default
+:class:`~repro.core.context.DiompContext` — identical results and per-op
+call counts to calling the communicator handles directly.
 """
 
 from __future__ import annotations

@@ -97,6 +97,31 @@ class LinearAllocator:
                 merged.append((off, ext))
         self._free = merged
 
+    def free_extents(self) -> List[Tuple[int, int]]:
+        """Sorted (offset, size) free extents — coordinated-alloc input."""
+        return list(self._free)
+
+    def alloc_at(self, offset: int, size: int) -> int:
+        """Place ``size`` bytes at exactly ``offset`` (coordinated symmetric
+        allocation: every rank commits the same offset)."""
+        size = _align_up(max(size, 1))
+        for i, (off, ext) in enumerate(self._free):
+            if off <= offset and offset + size <= off + ext:
+                pieces: List[Tuple[int, int]] = []
+                if offset > off:
+                    pieces.append((off, offset - off))
+                if off + ext > offset + size:
+                    pieces.append((offset + size, off + ext - offset - size))
+                self._free[i:i + 1] = pieces
+                self._live[offset] = size
+                return offset
+        raise AllocError(f"linear allocator: offset {offset} not free for "
+                         f"{size} bytes")
+
+    def alignment_for(self, size: int) -> int:
+        del size
+        return _ALIGN
+
     @property
     def bytes_in_use(self) -> int:
         return sum(self._live.values())
@@ -179,6 +204,42 @@ class BuddyAllocator:
             else:
                 break
         self._free[order].append(offset)
+
+    def free_extents(self) -> List[Tuple[int, int]]:
+        """Sorted (offset, size) of free blocks (uncoalesced: adjacent buddy
+        blocks of different parents cannot serve one allocation)."""
+        return sorted(
+            (off, self.MIN_BLOCK << o)
+            for o, blocks in enumerate(self._free)
+            for off in blocks
+        )
+
+    def alloc_at(self, offset: int, size: int) -> int:
+        """Claim the block at exactly ``offset`` (must be block-aligned for
+        the request's order), splitting a containing free block down."""
+        order = self._order_for(size)
+        bsize = self.MIN_BLOCK << order
+        if offset % bsize:
+            raise AllocError(f"buddy: offset {offset} misaligned for {size}")
+        for o in range(order, self._max_order + 1):
+            sz = self.MIN_BLOCK << o
+            cand = (offset // sz) * sz
+            if cand in self._free[o]:
+                self._free[o].remove(cand)
+                while o > order:  # split toward the requested offset
+                    o -= 1
+                    half = self.MIN_BLOCK << o
+                    if offset < cand + half:
+                        self._free[o].append(cand + half)
+                    else:
+                        self._free[o].append(cand)
+                        cand = cand + half
+                self._live[offset] = order
+                return offset
+        raise AllocError(f"buddy: offset {offset} not free for {size} bytes")
+
+    def alignment_for(self, size: int) -> int:
+        return self.MIN_BLOCK << self._order_for(size)
 
     @property
     def bytes_in_use(self) -> int:
@@ -328,7 +389,16 @@ class GlobalMemory:
         logical_axes: Tuple[Optional[str], ...] = (),
         dtype: str = "bfloat16",
     ) -> Region:
-        """Identical ``size`` bytes on every rank; offset-translatable."""
+        """Identical ``size`` bytes at the SAME offset on every rank —
+        the offset-translation property remote puts/gets rely on.
+
+        Fast path: arenas still in lockstep (collective alloc/free only)
+        hand out identical offsets independently.  Once asymmetric
+        allocations have diverged the arenas, the collective falls back to
+        a *coordinated* allocation: intersect every rank's free extents and
+        commit the first common offset on all ranks (the paper's "all
+        participating nodes coordinate").
+        """
         with self._lock:
             offsets = []
             done = []
@@ -339,10 +409,15 @@ class GlobalMemory:
             except AllocError:
                 for arena, off in zip(done, offsets):
                     arena.free(off)
-                raise
-            # symmetric property: identical offsets (arenas evolve in lockstep
-            # under collective alloc/free, like shmem symmetric heaps)
-            assert len(set(offsets)) == 1, "symmetric arenas diverged"
+                offsets, done = [], []
+            if offsets and len(set(offsets)) != 1:
+                # arenas diverged (asymmetric churn): retry coordinated
+                for arena, off in zip(done, offsets):
+                    arena.free(off)
+                offsets = []
+            if not offsets:
+                common = self._alloc_common_offset(size)
+                offsets = [common] * self.nranks
             region = Region(
                 rid=next(self._rid),
                 name=name,
@@ -355,6 +430,50 @@ class GlobalMemory:
             )
             self._regions[region.rid] = region
             return region
+
+    def _alloc_common_offset(self, size: int) -> int:
+        """Coordinated symmetric allocation across diverged arenas.
+
+        Intersects all ranks' free extents and commits the first aligned
+        offset every arena can honor; rolls back cleanly per candidate.
+        """
+
+        def intersect(a: List[Tuple[int, int]], b: List[Tuple[int, int]]):
+            out: List[Tuple[int, int]] = []
+            i = j = 0
+            while i < len(a) and j < len(b):
+                lo = max(a[i][0], b[j][0])
+                hi = min(a[i][0] + a[i][1], b[j][0] + b[j][1])
+                if lo < hi:
+                    out.append((lo, hi - lo))
+                if a[i][0] + a[i][1] < b[j][0] + b[j][1]:
+                    i += 1
+                else:
+                    j += 1
+            return out
+
+        exts = sorted(self._arenas[0].free_extents())
+        for arena in self._arenas[1:]:
+            exts = intersect(exts, sorted(arena.free_extents()))
+        align = max(arena.alignment_for(size) for arena in self._arenas)
+        needed = _align_up(max(size, 1), align)
+        for off, ext in exts:
+            cand = _align_up(off, align)
+            if cand + needed > off + ext:
+                continue
+            placed = []
+            try:
+                for arena in self._arenas:
+                    arena.alloc_at(cand, size)
+                    placed.append(arena)
+            except AllocError:
+                for arena in placed:
+                    arena.free(cand)
+                continue
+            return cand
+        raise AllocError(
+            f"no common symmetric offset for {size} bytes across "
+            f"{self.nranks} diverged arenas")
 
     def alloc_asymmetric(
         self,

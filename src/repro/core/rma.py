@@ -7,8 +7,12 @@ operations by polling network + device events in one loop (§3.2).
 TPU adaptation (recorded in DESIGN.md §2): ICI transfers are *compiled*, not
 runtime-initiated.  A one-sided put into a remote window is exactly what
 ``lax.ppermute`` (XLA ``collective-permute``) lowers to — a remote DMA write
-with no receiver-side participation.  We therefore express the RMA verbs as
-SPMD functions usable inside ``shard_map``:
+with no receiver-side participation.  The wire lowerings live on the
+:class:`~repro.core.backends.CclBackend` classes; this module is the
+paper-verbatim free-function surface, dispatching through the
+process-default :class:`~repro.core.context.DiompContext` communicator
+handle exactly like :mod:`repro.core.ompccl` — handle-style code calls
+``ctx.communicator(group).put(...)`` directly.
 
 * ``ompx_put(x, group, shift)``   — deposit my shard into the window of the
   rank ``shift`` positions ahead on the group's ring; returns what landed in
@@ -29,14 +33,10 @@ even though the compiled program would order correctly by dataflow.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
-from jax import lax
-
+from .backends import fence as _fence
 from .groups import DiompGroup
-from .ompccl import registry
 
 __all__ = [
     "ompx_put",
@@ -53,39 +53,32 @@ class RMAError(RuntimeError):
     """Programming-model violation (read before fence, unknown window)."""
 
 
-def _ring_axis(group: DiompGroup) -> str:
-    if len(group.axes) != 1:
-        raise ValueError(
-            f"RMA rings need a single-axis group (one ICI ring), got {group.axes}"
-        )
-    return group.axes[0]
+def _comm(group: DiompGroup, backend: str = None):
+    # deferred: context imports RMATracker from this module at load time
+    from .context import default_communicator
+
+    return default_communicator(group, backend)
 
 
-def ompx_put(x, group: DiompGroup, *, shift: int = 1):
+def ompx_put(x, group: DiompGroup, *, shift: int = 1, backend: str = None):
     """One-sided put of my shard to the rank ``shift`` ahead on the ring.
 
     SPMD semantics: every rank's window receives the shard of the rank
     ``shift`` *behind* it.  ``shift`` may be negative.  Lowers to a single
     ``collective-permute`` (a remote DMA on ICI).
     """
-    registry.communicator(group).record("put")
-    ax = _ring_axis(group)
-    n = lax.axis_size(ax)
-    perm = [(i, (i + shift) % n) for i in range(n)]
-    return lax.ppermute(x, ax, perm)
+    return _comm(group, backend).put(x, shift=shift)
 
 
-def ompx_get(x, group: DiompGroup, *, shift: int = 1):
+def ompx_get(x, group: DiompGroup, *, shift: int = 1, backend: str = None):
     """One-sided get of the shard owned by the rank ``shift`` ahead."""
-    registry.communicator(group).record("get")
-    return ompx_put(x, group, shift=-shift)
+    return _comm(group, backend).get(x, shift=shift)
 
 
-def ompx_put_perm(x, group: DiompGroup, perm: Sequence[Tuple[int, int]]):
+def ompx_put_perm(x, group: DiompGroup, perm: Sequence[Tuple[int, int]],
+                  *, backend: str = None):
     """General one-sided put along an arbitrary (src, dst) permutation."""
-    registry.communicator(group).record("put")
-    ax = _ring_axis(group)
-    return lax.ppermute(x, ax, list(perm))
+    return _comm(group, backend).put_perm(x, perm)
 
 
 def ompx_fence(*arrays):
@@ -95,13 +88,11 @@ def ompx_fence(*arrays):
     the fence — the compiled counterpart of DiOMP's hybrid polling loop that
     waits on both network and device events.  Returns the fenced arrays.
     """
-    if not arrays:
-        return ()
-    fenced = lax.optimization_barrier(arrays)
-    return fenced[0] if len(arrays) == 1 else fenced
+    return _fence(*arrays)
 
 
-def halo_exchange(x, group: DiompGroup, *, halo: int, axis: int = 0):
+def halo_exchange(x, group: DiompGroup, *, halo: int, axis: int = 0,
+                  backend: str = None):
     """Minimod's halo pattern (paper Listing 1) as one fused exchange.
 
     Every rank puts its *left* boundary slab to the left neighbor's right
@@ -110,26 +101,7 @@ def halo_exchange(x, group: DiompGroup, *, halo: int, axis: int = 0):
     in my window.  Edge ranks receive zeros (the paper's ``rank != 0`` /
     ``rank != nranks-1`` guards), matching non-periodic stencil boundaries.
     """
-    registry.communicator(group).record("halo_exchange")
-    ax = _ring_axis(group)
-    n = lax.axis_size(ax)
-    idx = lax.axis_index(ax)
-
-    # my boundary slabs
-    left_slab = lax.slice_in_dim(x, 0, halo, axis=axis)
-    right_slab = lax.slice_in_dim(x, x.shape[axis] - halo, x.shape[axis], axis=axis)
-
-    # put right_slab -> rank+1's left halo; left_slab -> rank-1's right halo.
-    # Non-periodic: drop the wrap-around edge (i = n-1 -> 0 and 0 -> n-1).
-    fwd = [(i, i + 1) for i in range(n - 1)]
-    bwd = [(i, i - 1) for i in range(1, n)]
-    from_left = lax.ppermute(right_slab, ax, fwd)   # lands in my left halo
-    from_right = lax.ppermute(left_slab, ax, bwd)   # lands in my right halo
-
-    # ranks with no neighbor on a side get explicit zeros
-    from_left = jnp.where(idx == 0, jnp.zeros_like(from_left), from_left)
-    from_right = jnp.where(idx == n - 1, jnp.zeros_like(from_right), from_right)
-    return ompx_fence(from_left, from_right)
+    return _comm(group, backend).halo_exchange(x, halo=halo, axis=axis)
 
 
 # ---------------------------------------------------------------------------

@@ -1,10 +1,11 @@
 """DiompRuntime — the unified runtime of paper Fig. 1(b).
 
-One object owns what MPI+libomptarget keep in separate, duplicated tables:
+A registration layer over one :class:`~repro.core.context.DiompContext`,
+which owns what MPI+libomptarget keep in separate, duplicated tables:
 
 * the **mesh** (the topology the PGAS space spans),
 * the **GlobalMemory** arena plan (symmetric/asymmetric regions),
-* the **groups** (communicators) and their OMPCCL registry,
+* the **groups** (communicators) and their OMPCCL communicator table,
 * the **StreamPool** (bounded async host work: checkpoint I/O, prefetch),
 * the **sharding rules** that translate logical placement to mesh axes.
 
@@ -26,11 +27,9 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.distributed import sharding as shrd
-from .groups import DiompGroup, standard_groups, world_group
-from .ompccl import CclRegistry, registry as global_registry
+from .context import DiompContext, install_default as _install_default
+from .groups import DiompGroup
 from .pgas import GlobalMemory, Region, SecondLevelPtr
-from .rma import RMATracker
-from .streams import HybridPoller, StreamPool
 
 __all__ = ["DiompRuntime", "RegisteredTensor"]
 
@@ -80,30 +79,46 @@ class DiompRuntime:
         rules: shrd.ShardingRules = shrd.DEFAULT_RULES,
         max_active_streams: int = 8,
         comm_backend: str = "gasnet-ex",  # kept for config fidelity; no-op on TPU
+        context: Optional[DiompContext] = None,
+        install_default: bool = True,
     ):
-        self.mesh = mesh
+        # the runtime is a registration layer over ONE DiompContext; creating
+        # a runtime installs its context as the process default so the
+        # paper-verbatim free functions and the registered tensors share the
+        # same table (the Fig. 1b "deep integration").
+        if context is None:
+            context = DiompContext(
+                mesh=mesh,
+                segment_bytes=segment_bytes,
+                allocator=allocator,
+                max_active_streams=max_active_streams,
+                comm_backend=comm_backend,
+            )
+        if install_default:
+            _install_default(context)
+        self.ctx = context
+        self.mesh = context.mesh if context.mesh is not None else mesh
         self.rules = rules
-        self.comm_backend = comm_backend
-        self.ndev = mesh.devices.size
-        self.memory = GlobalMemory(self.ndev, segment_bytes, allocator=allocator)
-        self.groups: Dict[str, DiompGroup] = standard_groups(mesh)
-        self.streams = StreamPool(max_active=max_active_streams)
-        self.poller = HybridPoller()
-        self.rma = RMATracker()
-        self.ccl: CclRegistry = global_registry
+        self.comm_backend = context.comm_backend
+        self.ndev = context.ndev
+        self.memory = context.memory
+        self.groups: Dict[str, DiompGroup] = context.groups
+        self.streams = context.streams
+        self.poller = context.poller
+        self.rma = context.rma
+        self.ccl = context.comms
         self._table: Dict[str, RegisteredTensor] = {}
-        # bootstrap: validate every group's descriptor (the UniqueID handshake)
-        self._descriptors = {name: g.validate(mesh).descriptor() for name, g in self.groups.items()}
 
     # -- group management ------------------------------------------------------
     def group(self, name: str) -> DiompGroup:
         return self.groups[name]
 
     def add_group(self, name: str, group: DiompGroup) -> DiompGroup:
-        group.validate(self.mesh)
-        self.groups[name] = group
-        self._descriptors[name] = group.descriptor()
-        return group
+        return self.ctx.add_group(name, group)
+
+    def communicator(self, group, backend=None):
+        """The OMPCCL communicator handle (delegates to the context)."""
+        return self.ctx.communicator(group, backend)
 
     # -- registration (the Fig. 1(b) mapping table) ------------------------------
     def register(
@@ -184,9 +199,7 @@ class DiompRuntime:
     # -- synchronization ---------------------------------------------------------
     def fence(self, timeout_s: float = 120.0) -> None:
         """Host-side ompx_fence: drain streams + every registered poll source."""
-        self.streams.synchronize_all()
-        self.poller.fence(timeout_s=timeout_s)
-        self.rma.on_fence()
+        self.ctx.fence(timeout_s=timeout_s)
 
     # -- introspection ------------------------------------------------------------
     def table(self) -> List[RegisteredTensor]:
@@ -214,4 +227,4 @@ class DiompRuntime:
         return "\n".join(lines)
 
     def close(self) -> None:
-        self.streams.close()
+        self.ctx.close()

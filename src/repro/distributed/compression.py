@@ -22,8 +22,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax._src.lax.parallel import all_gather_invariant
 
+from repro.core.compat import all_gather_invariant, axis_size
 from repro.core.groups import DiompGroup
 
 __all__ = [
@@ -69,7 +69,7 @@ def compressed_allreduce(
         x = x + error
     n = 1
     for ax in group.axes:
-        n *= lax.axis_size(ax)
+        n *= axis_size(ax)
     orig_shape, orig_dtype = x.shape, x.dtype
     flat = x.astype(jnp.float32).reshape(-1)
     pad = (-flat.size) % n
@@ -126,7 +126,7 @@ def topk_allreduce(
     sparse = jnp.zeros_like(flat).at[idx].set(vals)
     n = 1
     for ax in group.axes:
-        n *= lax.axis_size(ax)
+        n *= axis_size(ax)
     reduced = lax.psum(sparse, group.lax_axes) / n
     new_error = flat - sparse
     return reduced.reshape(x.shape), new_error.reshape(x.shape)

@@ -29,8 +29,7 @@ from jax import lax
 # Varying -> Invariant all-gather: same wire traffic as all_gather, but the
 # type system knows every rank ends with identical bytes (transposes to
 # dynamic_slice).  Exactly the semantics of an allreduce's final gather.
-from jax._src.lax.parallel import all_gather_invariant
-
+from repro.core.compat import all_gather_invariant, axis_size
 from repro.core.groups import DiompGroup
 
 __all__ = [
@@ -44,7 +43,7 @@ __all__ = [
 def _sizes(axes) -> int:
     n = 1
     for ax in axes:
-        n *= lax.axis_size(ax)
+        n *= axis_size(ax)
     return n
 
 

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import ompccl
+from repro.core.compat import axis_size
 from repro.core.groups import DiompGroup
 from repro.core.rma import ompx_put
 from .kernel import matmul_pallas
@@ -64,7 +65,7 @@ def ring_allgather_matmul(
         return ring_allgather_matmul_ref(x_local, w_local, group)
 
     ax = group.axes[0]
-    n = lax.axis_size(ax)
+    n = axis_size(ax)
     idx = lax.axis_index(ax)
     t_loc = x_local.shape[0]
     from repro.core.vma import zeros_varying

@@ -85,70 +85,93 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
     knobs = dict(knobs or {})
-    ctx = make_ctx(cfg, shape, mesh, knobs)
+    # one DiompContext per cell: every collective the step traces is
+    # recorded against this context's communicator table, giving the cell
+    # record a faithful OMPCCL call log alongside the HLO-derived numbers
+    from repro.core.context import DiompContext, use_default
+    dctx = DiompContext(mesh=mesh)
+    with use_default(dctx):
+        ctx = make_ctx(cfg, shape, mesh, knobs)
 
-    from jax.sharding import NamedSharding
+        from jax.sharding import NamedSharding
 
-    def with_sharding(structs, specs):
-        """Attach the runtime's placement to every lowered struct, so the
-        compiled module's argument layouts (and memory analysis) match the
-        PGAS plan instead of a compiler guess."""
-        return jax.tree.map(
-            lambda s, sp: jax.ShapeDtypeStruct(
-                s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
-            structs, specs,
-            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        def with_sharding(structs, specs):
+            """Attach the runtime's placement to every lowered struct, so the
+            compiled module's argument layouts (and memory analysis) match the
+            PGAS plan instead of a compiler guess."""
+            return jax.tree.map(
+                lambda s, sp: jax.ShapeDtypeStruct(
+                    s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+                structs, specs,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
 
-    from repro.distributed.sharding import rules_for_ctx
+        from repro.distributed.sharding import rules_for_ctx
 
-    rules = rules_for_ctx(ctx)
-    pspecs_all = sch.partition_specs(cfg, mesh, rules)
-    pstructs = with_sharding(sch.param_structs(cfg), pspecs_all)
-    t0 = time.time()
+        rules = rules_for_ctx(ctx)
+        pspecs_all = sch.partition_specs(cfg, mesh, rules)
+        pstructs = with_sharding(sch.param_structs(cfg), pspecs_all)
+        t0 = time.time()
 
-    if shape.kind == "train":
-        opt, opt_name = pick_optimizer(cfg, mesh, rules)
-        step = build_train_step(cfg, mesh, ctx, opt, optimizer_name=opt_name,
-                                global_batch=shape.global_batch)
-        from repro.train.step import opt_state_specs as _oss
-        ostructs = with_sharding(opt.state_structs(sch.param_structs(cfg)),
-                                 _oss(cfg, mesh, opt_name, rules))
-        bs_raw, bs_specs = model_api.batch_structs(
-            cfg, mesh, shape.global_batch, shape.seq_len)
-        bstructs = with_sharding(bs_raw, bs_specs)
-        lowered = step.lower(pstructs, ostructs, bstructs,
-                             jax.ShapeDtypeStruct((), jnp.int32))
-        tokens = shape.global_batch * shape.seq_len
-        model_flops = 6.0 * cfg.active_param_count() * tokens
-    elif shape.kind == "prefill":
-        if cfg.family == "audio":
-            # encoder "prefill" = the forward pass at full length
-            ctx2 = dataclasses.replace(ctx, inference=True, remat=False)
-            from jax.sharding import PartitionSpec as P
-            from jax import shard_map
-            from repro.models.transformer import transformer_forward
-
-            pspecs = sch.partition_specs(cfg, mesh)
-            bs_raw, bspecs = model_api.batch_structs(
+        if shape.kind == "train":
+            opt, opt_name = pick_optimizer(cfg, mesh, rules)
+            step = build_train_step(cfg, mesh, ctx, opt, optimizer_name=opt_name,
+                                    global_batch=shape.global_batch)
+            from repro.train.step import opt_state_specs as _oss
+            ostructs = with_sharding(opt.state_structs(sch.param_structs(cfg)),
+                                     _oss(cfg, mesh, opt_name, rules))
+            bs_raw, bs_specs = model_api.batch_structs(
                 cfg, mesh, shape.global_batch, shape.seq_len)
-            bstructs = with_sharding(bs_raw, bspecs)
+            bstructs = with_sharding(bs_raw, bs_specs)
+            lowered = step.lower(pstructs, ostructs, bstructs,
+                                 jax.ShapeDtypeStruct((), jnp.int32))
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 6.0 * cfg.active_param_count() * tokens
+        elif shape.kind == "prefill":
+            if cfg.family == "audio":
+                # encoder "prefill" = the forward pass at full length
+                ctx2 = dataclasses.replace(ctx, inference=True, remat=False)
+                from jax.sharding import PartitionSpec as P
+                from repro.core.compat import shard_map
+                from repro.models.transformer import transformer_forward
 
-            def enc(params, batch):
-                h, _ = transformer_forward(params, None, cfg, ctx2,
-                                           embeds=batch["embeds"])
-                return h
+                pspecs = sch.partition_specs(cfg, mesh)
+                bs_raw, bspecs = model_api.batch_structs(
+                    cfg, mesh, shape.global_batch, shape.seq_len)
+                bstructs = with_sharding(bs_raw, bspecs)
 
-            ba = model_api._batch_axes(mesh, shape.global_batch)
-            step = jax.jit(shard_map(
-                enc, mesh=mesh, in_specs=(pspecs, bspecs),
-                out_specs=P(ba if ba else None)))
-            lowered = step.lower(pstructs, bstructs)
-        else:
-            seqsh = False
-            step = build_prefill_step(
-                cfg, mesh, ctx, B=shape.global_batch,
-                S_prompt=shape.seq_len, S_cache=shape.seq_len,
-                seq_sharded=seqsh)
+                def enc(params, batch):
+                    h, _ = transformer_forward(params, None, cfg, ctx2,
+                                               embeds=batch["embeds"])
+                    return h
+
+                ba = model_api._batch_axes(mesh, shape.global_batch)
+                step = jax.jit(shard_map(
+                    enc, mesh=mesh, in_specs=(pspecs, bspecs),
+                    out_specs=P(ba if ba else None)))
+                lowered = step.lower(pstructs, bstructs)
+            else:
+                seqsh = False
+                step = build_prefill_step(
+                    cfg, mesh, ctx, B=shape.global_batch,
+                    S_prompt=shape.seq_len, S_cache=shape.seq_len,
+                    seq_sharded=seqsh)
+                cs_raw, cs_specs = model_api.cache_structs(
+                    cfg, mesh, ctx, shape.global_batch, shape.seq_len,
+                    seq_sharded=seqsh)
+                cstructs = with_sharding(cs_raw, cs_specs)
+                ba = model_api._batch_axes(mesh, shape.global_batch)
+                from jax.sharding import PartitionSpec as _P
+                tstruct = jax.ShapeDtypeStruct(
+                    (shape.global_batch,
+                     shape.seq_len - (cfg.prefix_tokens or 0)), jnp.int32,
+                    sharding=NamedSharding(mesh, _P(ba if ba else None)))
+                lowered = step.lower(pstructs, tstruct, cstructs)
+            tokens = shape.global_batch * shape.seq_len
+            model_flops = 2.0 * cfg.active_param_count() * tokens
+        else:  # decode
+            seqsh = seq_sharded_for(cfg, shape)
+            step = build_decode_step(cfg, mesh, ctx, B=shape.global_batch,
+                                     S=shape.seq_len, seq_sharded=seqsh)
             cs_raw, cs_specs = model_api.cache_structs(
                 cfg, mesh, ctx, shape.global_batch, shape.seq_len,
                 seq_sharded=seqsh)
@@ -156,78 +179,63 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
             ba = model_api._batch_axes(mesh, shape.global_batch)
             from jax.sharding import PartitionSpec as _P
             tstruct = jax.ShapeDtypeStruct(
-                (shape.global_batch,
-                 shape.seq_len - (cfg.prefix_tokens or 0)), jnp.int32,
+                (shape.global_batch, 1), jnp.int32,
                 sharding=NamedSharding(mesh, _P(ba if ba else None)))
             lowered = step.lower(pstructs, tstruct, cstructs)
-        tokens = shape.global_batch * shape.seq_len
-        model_flops = 2.0 * cfg.active_param_count() * tokens
-    else:  # decode
-        seqsh = seq_sharded_for(cfg, shape)
-        step = build_decode_step(cfg, mesh, ctx, B=shape.global_batch,
-                                 S=shape.seq_len, seq_sharded=seqsh)
-        cs_raw, cs_specs = model_api.cache_structs(
-            cfg, mesh, ctx, shape.global_batch, shape.seq_len,
-            seq_sharded=seqsh)
-        cstructs = with_sharding(cs_raw, cs_specs)
-        ba = model_api._batch_axes(mesh, shape.global_batch)
-        from jax.sharding import PartitionSpec as _P
-        tstruct = jax.ShapeDtypeStruct(
-            (shape.global_batch, 1), jnp.int32,
-            sharding=NamedSharding(mesh, _P(ba if ba else None)))
-        lowered = step.lower(pstructs, tstruct, cstructs)
-        tokens = shape.global_batch
-        model_flops = 2.0 * cfg.active_param_count() * tokens
+            tokens = shape.global_batch
+            model_flops = 2.0 * cfg.active_param_count() * tokens
 
-    t_lower = time.time() - t0
-    compiled = lowered.compile()
-    t_compile = time.time() - t0 - t_lower
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
 
-    mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
-    hlo = compiled.as_text()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
 
-    sys.path.insert(0, os.path.join(os.path.dirname(__file__),
-                                    "..", "..", ".."))
-    from benchmarks.roofline import collective_bytes_from_hlo, roofline
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                        "..", "..", ".."))
+        from benchmarks.roofline import collective_bytes_from_hlo, roofline
 
-    rep = roofline(arch, shape_name, mesh_name, chips, cost, hlo, model_flops)
-    record = {
-        "arch": arch, "shape": shape_name, "mesh": mesh_name,
-        "status": "ok", "chips": chips,
-        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
-        "memory": {
-            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
-            "output_bytes": getattr(mem, "output_size_in_bytes", None),
-            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
-            "generated_code_bytes": getattr(
-                mem, "generated_code_size_in_bytes", None),
-        },
-        "knobs": {"microbatch": ctx.microbatch,
-                  "dp_backend": ctx.dp_backend,
-                  "grad_codec": ctx.grad_codec,
-                  "explicit_dp": ctx.explicit_dp,
-                  "expert2d": ctx.expert2d,
-                  "layout": ctx.layout,
-                  "fsdp_params": ctx.fsdp_params,
-                  "gather_codec": ctx.gather_codec,
-                  "use_ring_matmul": ctx.use_ring_matmul},
-        **rep.row(),
-    }
-    if verbose:
-        total_hbm = sum(v for v in record["memory"].values() if v) / 2**30
-        print(f"[{arch} × {shape_name} × {mesh_name}] OK  "
-              f"lower {t_lower:.0f}s compile {t_compile:.0f}s  "
-              f"HBM/device ≈ {total_hbm:.2f} GiB  "
-              f"dominant={rep.dominant}  "
-              f"t=(c {rep.t_compute:.4f}, m {rep.t_memory:.4f}, "
-              f"x {rep.t_collective:.4f})s  "
-              f"useful={rep.useful_flops_fraction:.2f}")
-        print("  memory_analysis:", record["memory"])
-        print("  cost_analysis: flops/chip=%.3e bytes/chip=%.3e" %
-              (rep.flops_per_chip, rep.bytes_per_chip))
-        print("  collectives/chip:", rep.coll_bytes_per_chip)
-    return record, compiled
+        rep = roofline(arch, shape_name, mesh_name, chips, cost, hlo, model_flops)
+        record = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "ok", "chips": chips,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+            },
+            "ompccl_calls": {
+                group: dict(calls) for group, calls in dctx.stats().items()},
+            "knobs": {"microbatch": ctx.microbatch,
+                      "dp_backend": ctx.dp_backend,
+                      "grad_codec": ctx.grad_codec,
+                      "explicit_dp": ctx.explicit_dp,
+                      "expert2d": ctx.expert2d,
+                      "layout": ctx.layout,
+                      "fsdp_params": ctx.fsdp_params,
+                      "gather_codec": ctx.gather_codec,
+                      "use_ring_matmul": ctx.use_ring_matmul},
+            **rep.row(),
+        }
+        if verbose:
+            total_hbm = sum(v for v in record["memory"].values() if v) / 2**30
+            print(f"[{arch} × {shape_name} × {mesh_name}] OK  "
+                  f"lower {t_lower:.0f}s compile {t_compile:.0f}s  "
+                  f"HBM/device ≈ {total_hbm:.2f} GiB  "
+                  f"dominant={rep.dominant}  "
+                  f"t=(c {rep.t_compute:.4f}, m {rep.t_memory:.4f}, "
+                  f"x {rep.t_collective:.4f})s  "
+                  f"useful={rep.useful_flops_fraction:.2f}")
+            print("  memory_analysis:", record["memory"])
+            print("  cost_analysis: flops/chip=%.3e bytes/chip=%.3e" %
+                  (rep.flops_per_chip, rep.bytes_per_chip))
+            print("  collectives/chip:", rep.coll_bytes_per_chip)
+        return record, compiled
 
 
 def main(argv=None):

@@ -6,7 +6,7 @@ jax device state (the dry-run must set XLA_FLAGS before any jax init).
 
 from __future__ import annotations
 
-import jax
+from repro.core.compat import make_mesh
 
 __all__ = ["make_production_mesh", "make_smoke_mesh"]
 
@@ -15,8 +15,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod prepends a 2-pod axis (512)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types="auto")
 
 
 def make_smoke_mesh(ndev: int = 8, *, pods: bool = True):
@@ -25,5 +24,4 @@ def make_smoke_mesh(ndev: int = 8, *, pods: bool = True):
         shape, axes = (2, ndev // 4, 2), ("pod", "data", "model")
     else:
         shape, axes = (max(ndev // 2, 1), min(ndev, 2)), ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types="auto")

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import ompccl
+from repro.core.compat import axis_size
 from repro.core.groups import DiompGroup
 from repro.core.rma import ompx_put
 from repro.kernels.flash_attention.ops import flash_attention
@@ -158,7 +159,7 @@ def ring_fsdp_matmul(x, w_local, ctx: ParallelCtx):
     from repro.core.vma import zeros_varying
 
     group = ctx.fsdp_group
-    n = lax.axis_size(group.axes[0])
+    n = axis_size(group.axes[0])
     idx = lax.axis_index(group.axes[0])
     dshard = w_local.shape[0]
     acc = zeros_varying(x.shape[:-1] + (w_local.shape[1],), F32, x)

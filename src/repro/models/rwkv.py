@@ -147,7 +147,9 @@ def rwkv_forward(params, tokens, cfg: ModelConfig, ctx: ParallelCtx,
     plen = len("layers/")
     stack = {k[plen:]: v for k, v in params.items() if k.startswith("layers/")}
 
-    in_vma = getattr(jax.typeof(x), "vma", frozenset())
+    from repro.core.compat import typeof
+
+    in_vma = getattr(typeof(x), "vma", frozenset())
     axes = set(in_vma)
     if not ctx.inference:
         if ctx.tp > 1:

@@ -85,9 +85,10 @@ def _scan_stack(x, stack, cfg, ctx, *, moe, mla, positions, prefix_len,
     gathers are Varying->Varying); inference uses invariant gathers so the
     residual stream stays exactly as replicated as it really is.
     """
+    from repro.core.compat import typeof
     from repro.core.ompccl import ensure_varying
 
-    in_vma = getattr(jax.typeof(x), "vma", frozenset())
+    in_vma = getattr(typeof(x), "vma", frozenset())
     axes = set(in_vma)
     if not ctx.inference:
         if ctx.tp > 1:

@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.context import DiompContext, use_default
 from repro.core.groups import DiompGroup
 from repro.core.pgas import GlobalMemory
 from repro.models.config import ModelConfig, ParallelCtx
@@ -47,16 +48,26 @@ class GenRequest:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, mesh, ctx: ParallelCtx, params, *,
                  slots: int = 4, max_len: int = 256,
-                 memory: Optional[GlobalMemory] = None):
+                 memory: Optional[GlobalMemory] = None,
+                 context: Optional[DiompContext] = None):
         self.cfg, self.mesh, self.ctx = cfg, mesh, ctx
         self.params = params
         self.B, self.S = slots, max_len
-        self.memory = memory or GlobalMemory(mesh.devices.size, 1 << 26,
-                                             allocator="buddy")
+        # the engine runs on a DiompContext: the KV-page arena is its PGAS
+        # memory, the world group its communicator domain.  A caller-provided
+        # `memory` (legacy) still wins for the arena.
+        if context is None:
+            context = DiompContext(mesh=mesh, segment_bytes=1 << 26,
+                                   allocator="buddy")
+        self.dctx = context
+        self.memory = memory or context.memory
         kv_bpt = 2 * 2 * max(cfg.kv_heads, 1) * max(cfg.head_dim, 1) \
             * cfg.num_layers
         self.alloc = PagedKVAllocator(
-            self.memory, DiompGroup(tuple(mesh.axis_names), name="world"),
+            self.memory,
+            context.groups.get("world",
+                               DiompGroup(tuple(mesh.axis_names),
+                                          name="world")),
             page_tokens=64, kv_bytes_per_token=max(kv_bpt, 64))
         self.decode_step = build_decode_step(cfg, mesh, ctx, B=slots,
                                              S=max_len, donate=False)
@@ -112,8 +123,12 @@ class ServeEngine:
                 self.pending[slot, 0] = req.out[-1]
 
     def _device_step(self):
-        logits, self.cache = self.decode_step(
-            self.params, jnp.asarray(self.pending), self.cache)
+        # the decode step's collectives resolve the process-default context
+        # at trace time; scope it to the engine's own context so its
+        # communicator table records this engine's traffic
+        with use_default(self.dctx):
+            logits, self.cache = self.decode_step(
+                self.params, jnp.asarray(self.pending), self.cache)
         self.steps += 1
         return np.asarray(jax.device_get(logits))
 

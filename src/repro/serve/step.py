@@ -13,8 +13,9 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.compat import shard_map
 
 from repro.core import ompccl
 from repro.models import api as model_api

@@ -22,10 +22,13 @@ from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.compat import HAS_VMA, shard_map
+
 from repro.core import ompccl
+from repro.core.context import default_context
 from repro.distributed.compression import compressed_allreduce
 from repro.models import api as model_api
 from repro.models import schema as sch
@@ -36,6 +39,17 @@ __all__ = ["build_train_step", "opt_state_specs", "reduce_gradients",
            "sharded_global_norm"]
 
 F32 = jnp.float32
+
+
+def _unreduced_dp_axes(pspec: P, dp_axes) -> tuple:
+    """The DP axes a parameter's sharding does NOT consume — exactly the
+    axes its gradient still needs a cross-device reduction over."""
+    spec_axes = set()
+    for part in pspec:
+        if part is None:
+            continue
+        spec_axes |= set(part if isinstance(part, tuple) else (part,))
+    return tuple(a for a in dp_axes if a not in spec_axes)
 
 
 def _spec_drop_dim(spec: P, rank: int, drop: int) -> P:
@@ -100,7 +114,7 @@ def sharded_global_norm(grads, cfg: ModelConfig, ctx: ParallelCtx, mesh: Mesh,
                 sharded *= sizes[ax]
         dup = mesh.devices.size // sharded
         total = total + jnp.sum(g.astype(F32) ** 2) / dup
-    total = ompccl.allreduce(total, ctx.world)
+    total = default_context().communicator(ctx.world).allreduce(total)
     return jnp.sqrt(total)
 
 
@@ -120,16 +134,12 @@ def reduce_gradients(grads: Dict[str, jax.Array], cfg: ModelConfig,
 
     if pspecs is None:
         pspecs = sch.partition_specs(cfg, mesh, rules_for_ctx(ctx))
+    dctx = default_context()
     new_errors = {}
     out = {}
     dp_axes = ctx.dp_group.axes
     for name, g in grads.items():
-        spec_axes = set()
-        for part in pspecs[name]:
-            if part is None:
-                continue
-            spec_axes |= set(part if isinstance(part, tuple) else (part,))
-        need = tuple(a for a in dp_axes if a not in spec_axes)
+        need = _unreduced_dp_axes(pspecs[name], dp_axes)
         g = g.astype(F32) / ctx.dp
         if not need:
             out[name] = g
@@ -143,9 +153,21 @@ def reduce_gradients(grads: Dict[str, jax.Array], cfg: ModelConfig,
             backend = ("hierarchical"
                        if ctx.dp_backend == "hierarchical"
                        and "pod" in need and len(need) > 1 else "xla")
-            g = ompccl.allreduce(g, group, backend=backend)
+            g = dctx.communicator(group, backend).allreduce(g)
         out[name] = g
     return out, new_errors
+
+
+def _flat_dp_reduce(grads: Dict[str, jax.Array], pspecs: dict,
+                    dp_axes: Tuple[str, ...], dp: int):
+    """DP mean-reduction per parameter over the axes its sharding does not
+    already consume — the reduction a vma-aware AD emits implicitly."""
+    out = {}
+    for name, g in grads.items():
+        need = _unreduced_dp_axes(pspecs[name], dp_axes)
+        g = g.astype(F32) / dp
+        out[name] = lax.psum(g, need) if need else g
+    return out
 
 
 def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
@@ -227,6 +249,11 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
 
         if ctx.explicit_dp and dp_axes:
             grads, _ = reduce_gradients(grads, cfg, ctx, pspecs=pspecs)
+        elif dp_axes and not HAS_VMA:
+            # pre-vma jax inserts no automatic pvary-transpose psums under
+            # shard_map, so the "implicit" baseline must still reduce on the
+            # wire: same flat psum the vma transpose would have emitted
+            grads = _flat_dp_reduce(grads, pspecs, dp_axes, ctx.dp)
         else:
             grads = jax.tree.map(lambda g: g.astype(F32) / ctx.dp, grads)
 
@@ -238,8 +265,11 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
                                               step_idx)
         params = jax.tree.map(lambda p, u: (p.astype(F32) + u.astype(F32)
                                             ).astype(p.dtype), params, updates)
+        # resolved at trace time like every other collective site, so the
+        # whole step records into whichever context is default when traced
+        world_comm = default_context().communicator(ctx.world)
         metrics = {
-            "loss": ompccl.allreduce(loss, ctx.world, op="mean"),
+            "loss": world_comm.allreduce(loss, op="mean"),
             "grad_norm": gnorm,
         }
         return params, opt_state, metrics

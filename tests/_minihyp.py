@@ -1,0 +1,83 @@
+"""Minimal stand-in for the hypothesis API used by this suite.
+
+The container may not ship ``hypothesis``; property tests fall back to this
+deterministic random-sampling harness (seeded per test name) implementing
+just the surface we use: ``given``, ``settings``, and the ``lists`` /
+``tuples`` / ``booleans`` / ``integers`` strategies.  With real hypothesis
+installed the import sites prefer it and this module is inert.
+"""
+
+from __future__ import annotations
+
+import inspect
+import random
+import zlib
+from typing import Any, Callable, List
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+class st:  # noqa: N801 - mimics `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def tuples(*parts: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(p.draw(rng) for p in parts))
+
+    @staticmethod
+    def lists(elem: _Strategy, *, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng: random.Random) -> List[Any]:
+            n = rng.randint(min_size, max_size)
+            return [elem.draw(rng) for _ in range(n)]
+
+        return _Strategy(draw)
+
+
+def settings(max_examples: int = 100, deadline=None, **_ignored):
+    def deco(fn):
+        fn._minihyp_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies: _Strategy):
+    def deco(fn):
+        all_params = list(inspect.signature(fn).parameters)
+        drawn_names = all_params[len(all_params) - len(strategies):]
+
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_minihyp_max_examples",
+                        getattr(wrapper, "_minihyp_max_examples", 50))
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn = {name: s.draw(rng)
+                         for name, s in zip(drawn_names, strategies)}
+                fn(*args, **kwargs, **drawn)
+
+        # expose only the non-drawn leading params (fixtures) to pytest;
+        # the drawn trailing params are filled here, like hypothesis does
+        params = list(inspect.signature(fn).parameters.values())
+        keep = params[: max(len(params) - len(strategies), 0)]
+        wrapper.__signature__ = inspect.Signature(keep)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._minihyp_max_examples = getattr(fn, "_minihyp_max_examples",
+                                                50)
+        return wrapper
+
+    return deco

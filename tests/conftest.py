@@ -5,17 +5,17 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import jax  # noqa: E402
+import jax  # noqa: E402,F401
 import pytest  # noqa: E402
+
+from repro.core.compat import make_mesh  # noqa: E402
 
 
 @pytest.fixture(scope="session")
 def mesh8():
-    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return make_mesh((2, 2, 2), ("pod", "data", "model"), axis_types="auto")
 
 
 @pytest.fixture(scope="session")
 def ring8():
-    return jax.make_mesh((8,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((8,), ("x",), axis_types="auto")

@@ -5,10 +5,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import ompccl, rma
+from repro.core.compat import shard_map
 from repro.core.groups import DiompGroup
 from repro.distributed import compression, hierarchical
 

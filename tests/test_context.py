@@ -1,0 +1,368 @@
+"""DiompContext + communicator-handle API + pluggable OMPCCL backends.
+
+Covers the redesign invariants: every collective/RMA verb dispatches through
+a CclBackend instance obtained from a context communicator handle; backend
+choice propagates to every op (including reduce/bcast, which the free-
+function API used to silently flatten); plugins register without touching
+call sites; and the paper-verbatim ompx_* compat layer produces identical
+results and per-op call counts to the handle API.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+import repro as diomp
+from repro.core import backends, ompccl, ompx, rma
+from repro.core.compat import shard_map
+from repro.core.context import DiompContext, default_context
+from repro.core.groups import DiompGroup
+
+WORLD = DiompGroup(("pod", "data", "model"), name="world")
+DP = DiompGroup(("pod", "data"), name="dp")
+RING = DiompGroup(("x",), name="x")
+
+
+def _run(mesh, fn, x, in_spec, out_spec):
+    return np.asarray(jax.jit(shard_map(
+        fn, mesh=mesh, in_specs=in_spec, out_specs=out_spec))(x))
+
+
+# ---------------------------------------------------------------------------
+# the handle API end to end
+# ---------------------------------------------------------------------------
+
+
+def test_handle_collectives_numerics(mesh8):
+    ctx = DiompContext(mesh=mesh8, segment_bytes=1 << 20)
+    comm = ctx.communicator(WORLD)
+    x = np.random.RandomState(0).randn(8, 4).astype(np.float32)
+    spec = P(("pod", "data", "model"))
+
+    got = _run(mesh8, lambda v: comm.allreduce(v), x, spec, spec)
+    np.testing.assert_allclose(
+        got, np.repeat(x.sum(0, keepdims=True), 8, axis=0), rtol=1e-5)
+
+    got = _run(mesh8, lambda v: comm.bcast(v, root=3), x, spec, spec)
+    np.testing.assert_allclose(got, np.tile(x[3], (8, 1)), rtol=1e-6)
+
+    got = _run(mesh8, lambda v: comm.reduce(v, root=2), x, spec, spec)
+    want = np.zeros_like(x)
+    want[2] = x.sum(0)
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+def test_handle_rma_verbs(ring8):
+    ctx = DiompContext(mesh=ring8, segment_bytes=1 << 20)
+    comm = ctx.communicator(RING)
+    x = np.arange(32, dtype=np.float32).reshape(8, 4)
+
+    got = _run(ring8,
+               lambda v: comm.get(comm.fence(comm.put(v, shift=3)), shift=3),
+               x, P("x"), P("x"))
+    np.testing.assert_allclose(got, x)
+
+    def halo(v):
+        l, r = comm.halo_exchange(v, halo=1, axis=0)
+        return jnp.concatenate([l, r], axis=0)
+
+    got = _run(ring8, halo, np.arange(24, dtype=np.float32).reshape(24, 1),
+               P("x"), P("x"))
+    lr = got.reshape(8, 2)
+    assert lr[0, 0] == 0.0 and lr[7, 1] == 0.0
+    # exactly one halo_exchange + one put + one get recorded on the group
+    calls = ctx.stats()[RING.descriptor()]
+    assert calls["halo_exchange"] == 1
+    assert calls["get"] == 1 and calls["put"] == 2  # get records its put
+
+
+def test_group_lookup_by_name(mesh8):
+    ctx = DiompContext(mesh=mesh8, segment_bytes=1 << 20)
+    comm = ctx.communicator("world")
+    assert comm.group.axes == tuple(mesh8.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# backend propagation — the dropped-backend bug class
+# ---------------------------------------------------------------------------
+
+
+class _SpyBackend(backends.XlaBackend):
+    """Counts which verbs were dispatched through it."""
+
+    name = "spy"
+
+    def __init__(self):
+        self.ops = []
+
+    def allreduce(self, x, group, *, op="sum"):
+        self.ops.append("allreduce")
+        return super().allreduce(x, group, op=op)
+
+    def bcast(self, x, group, *, root=0):
+        self.ops.append("bcast")
+        return super().bcast(x, group, root=root)
+
+
+backends.register_backend(_SpyBackend)
+
+
+def test_backend_propagates_to_reduce_and_bcast(mesh8):
+    """reduce/bcast run through the handle's backend — previously both
+    silently fell back to the flat path whatever the caller asked for."""
+    ctx = DiompContext(mesh=mesh8, segment_bytes=1 << 20)
+    comm = ctx.communicator(WORLD, backend="spy")
+    x = np.random.RandomState(1).randn(8, 4).astype(np.float32)
+    spec = P(("pod", "data", "model"))
+
+    _run(mesh8, lambda v: comm.reduce(v, root=2), x, spec, spec)
+    _run(mesh8, lambda v: comm.bcast(v, root=1), x, spec, spec)
+    # reduce routes through the backend's allreduce; bcast dispatches and
+    # then routes its masked contribution through allreduce too
+    assert comm.backend.ops == ["allreduce", "bcast", "allreduce"]
+
+
+def test_free_function_backend_propagates(mesh8):
+    """The compat free functions honor backend= for every op too."""
+    spy = default_context().communicator(WORLD, backend="spy").backend
+    before = len(spy.ops)
+    x = np.random.RandomState(2).randn(8, 4).astype(np.float32)
+    spec = P(("pod", "data", "model"))
+    _run(mesh8, lambda v: ompccl.reduce(v, WORLD, root=0, backend="spy"),
+         x, spec, spec)
+    _run(mesh8, lambda v: ompccl.bcast(v, WORLD, root=0, backend="spy"),
+         x, spec, spec)
+    assert spy.ops[before:] == ["allreduce", "bcast", "allreduce"]
+
+
+def test_hierarchical_backend_handles_match_flat(mesh8):
+    ctx = DiompContext(mesh=mesh8, segment_bytes=1 << 20)
+    flat = ctx.communicator(DP)
+    hier = ctx.communicator(DP, backend="hierarchical")
+    x = np.random.RandomState(3).randn(8, 16).astype(np.float32)
+    a = _run(mesh8, lambda v: flat.allreduce(v), x,
+             P(("pod", "data"), "model"), P(None, "model"))
+    b = _run(mesh8, lambda v: hier.allreduce(v), x,
+             P(("pod", "data"), "model"), P(None, "model"))
+    np.testing.assert_allclose(a, b, rtol=1e-5)
+    c = _run(mesh8, lambda v: hier.bcast(v, root=1), x,
+             P(("pod", "data"), "model"), P(None, "model"))
+    d = _run(mesh8, lambda v: flat.bcast(v, root=1), x,
+             P(("pod", "data"), "model"), P(None, "model"))
+    np.testing.assert_allclose(c, d, rtol=1e-5)
+
+
+def test_backend_registry_plugin_and_errors():
+    assert set(backends.available_backends()) >= {
+        "xla", "flat", "hierarchical", "compressed", "analytic", "spy"}
+    with pytest.raises(backends.BackendError):
+        backends.get_backend("no-such-backend")
+    with pytest.raises(backends.BackendError):
+        backends.register_backend(object)  # not a CclBackend
+
+    class Custom(backends.XlaBackend):
+        name = "custom-plugin"
+
+    backends.register_backend(Custom, aliases=("cp",))
+    assert backends.get_backend("cp") is Custom
+    # a fresh context resolves it by name with zero call-site changes
+    ctx = DiompContext(segment_bytes=1 << 20)
+    assert ctx.communicator(RING, backend="cp").backend_name == "custom-plugin"
+
+
+def test_analytic_backend_cost_log(ring8):
+    ctx = DiompContext(mesh=ring8, segment_bytes=1 << 20)
+    comm = ctx.communicator(RING, backend="analytic")
+    x = np.random.RandomState(4).randn(8, 128).astype(np.float32)
+    got = _run(ring8, lambda v: comm.allreduce(v), x, P("x"), P("x"))
+    np.testing.assert_allclose(
+        got, np.repeat(x.sum(0, keepdims=True), 8, axis=0), rtol=1e-5)
+    (est,) = comm.backend.estimates
+    assert est["op"] == "allreduce" and est["ndev"] == 8
+    assert est["bytes"] == 128 * 4  # local shard bytes
+    assert est["est_s"] > 0
+
+
+# ---------------------------------------------------------------------------
+# context plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_shared_call_log_across_backends(mesh8):
+    ctx = DiompContext(mesh=mesh8, segment_bytes=1 << 20)
+    flat = ctx.communicator(DP)
+    hier = ctx.communicator(DP, backend="hierarchical")
+    assert flat is not hier and flat.calls is hier.calls
+    flat.record("allreduce")
+    hier.record("allreduce")
+    assert ctx.stats()[DP.descriptor()] == {"allreduce": 2}
+    ctx.reset_stats()
+    assert ctx.stats() == {}
+
+
+def test_default_context_init_and_runtime_share_table(mesh8):
+    from repro.core.runtime import DiompRuntime
+
+    rt = DiompRuntime(mesh8, segment_bytes=1 << 22)
+    assert rt.ctx is default_context()
+    assert rt.communicator(WORLD).group is WORLD
+    assert rt.ccl is rt.ctx.comms
+    rt.close()
+    # restore an un-meshed default for whatever test runs next
+    diomp.reset_default_context()
+
+
+def test_use_default_scopes_and_restores():
+    prev = default_context()
+    tmp = DiompContext(segment_bytes=1 << 20)
+    with diomp.use_default(tmp) as active:
+        assert active is tmp and default_context() is tmp
+        inner = DiompContext(segment_bytes=1 << 20)
+        with diomp.use_default(inner):
+            assert default_context() is inner
+        assert default_context() is tmp
+    assert default_context() is prev
+
+
+def test_use_default_is_thread_scoped():
+    """A scope open on one thread never leaks into another, and overlapping
+    scopes on two threads cannot clobber the process default."""
+    import threading
+
+    prev = default_context()
+    a, b = DiompContext(segment_bytes=1 << 20), \
+        DiompContext(segment_bytes=1 << 20)
+    seen = {}
+    gate_a, gate_b = threading.Event(), threading.Event()
+
+    def worker(name, ctx, my_gate, other_gate):
+        with diomp.use_default(ctx):
+            my_gate.set()
+            other_gate.wait(5)           # both scopes open concurrently
+            seen[name] = default_context()
+
+    ta = threading.Thread(target=worker, args=("a", a, gate_a, gate_b))
+    tb = threading.Thread(target=worker, args=("b", b, gate_b, gate_a))
+    ta.start(); tb.start(); ta.join(); tb.join()
+    assert seen == {"a": a, "b": b}
+    assert default_context() is prev
+
+
+def test_compressed_backend_honors_sum_contract(mesh8):
+    """allreduce(op='sum') through the compressed handle matches the flat
+    sum within int8 tolerance; unsupported ops fail loudly."""
+    ctx = DiompContext(mesh=mesh8, segment_bytes=1 << 20)
+    comm = ctx.communicator(DP, backend="compressed")
+    x = np.random.RandomState(7).randn(4, 64).astype(np.float32)
+    got = _run(mesh8, lambda v: comm.allreduce(v), x,
+               P(("pod", "data"), "model"), P(("pod", "data"), "model"))
+    want = np.tile(x.sum(0), (4, 1))
+    rel = np.abs(got - want).max() / np.abs(want).max()
+    assert rel < 0.02
+    with pytest.raises(ValueError, match="sum"):
+        _run(mesh8, lambda v: comm.allreduce(v, op="max"), x,
+             P(("pod", "data"), "model"), P(("pod", "data"), "model"))
+
+
+def test_reset_keeps_live_handles_recording(mesh8):
+    ctx = DiompContext(mesh=mesh8, segment_bytes=1 << 20)
+    comm = ctx.communicator(DP)
+    comm.record("allreduce")
+    ctx.reset_stats()
+    comm.record("allreduce")   # handle must keep feeding the same table
+    assert ctx.stats()[DP.descriptor()] == {"allreduce": 1}
+
+
+def test_instance_backend_not_aliased_by_name():
+    """Two differently configured instances of one backend class get their
+    own handles; a registry-name handle never shadows a passed instance."""
+    ctx = DiompContext(segment_bytes=1 << 20)
+    by_name = ctx.communicator(RING, backend="analytic")
+    mine = backends.AnalyticBackend(backends.LinkModel(bandwidth_Bps=1.0))
+    by_inst = ctx.communicator(RING, backend=mine)
+    assert by_inst.backend is mine and by_name.backend is not mine
+    # same group -> still one shared call log
+    assert by_inst.calls is by_name.calls
+
+
+def test_registry_proxy_is_default_table(mesh8):
+    diomp.reset_default_context()
+    c1 = ompccl.registry.communicator(RING)
+    c2 = default_context().communicator(RING)
+    assert c1 is c2
+    c1.record("allreduce")
+    assert ompccl.registry.stats()[RING.descriptor()] == {"allreduce": 1}
+    ompccl.registry.reset()
+    assert ompccl.registry.stats() == {}
+
+
+# ---------------------------------------------------------------------------
+# ompx_* compat layer: identical results + per-op call counts
+# ---------------------------------------------------------------------------
+
+
+def test_ompx_results_match_handles(ring8):
+    g = DiompGroup(("x",), name="ring")
+    x = np.arange(16, dtype=np.float32).reshape(8, 2)
+
+    def via_ompx(v):
+        moved = ompx.ompx_fence(ompx.ompx_put(v, g, shift=1))
+        return moved, ompx.ompx_allreduce(v, g), ompx.ompx_bcast(v, g, root=2)
+
+    comm = DiompContext(mesh=ring8, segment_bytes=1 << 20).communicator(g)
+
+    def via_handle(v):
+        moved = comm.fence(comm.put(v, shift=1))
+        return moved, comm.allreduce(v), comm.bcast(v, root=2)
+
+    outs_a = jax.jit(shard_map(via_ompx, mesh=ring8, in_specs=P("x"),
+                               out_specs=(P("x"),) * 3))(x)
+    outs_b = jax.jit(shard_map(via_handle, mesh=ring8, in_specs=P("x"),
+                               out_specs=(P("x"),) * 3))(x)
+    for a, b in zip(outs_a, outs_b):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_ompx_call_counts_match_seed_semantics(ring8):
+    """The seed API recorded: reduce -> reduce+allreduce, get -> get+put,
+    put_perm -> put; the compat layer must keep those counts exactly."""
+    diomp.reset_default_context()
+    g = DiompGroup(("x",), name="ring")
+    x = np.arange(8, dtype=np.float32).reshape(8, 1)
+
+    def ops(v):
+        a = ompccl.allreduce(v, g)
+        r = ompccl.reduce(v, g, root=0)
+        b = ompccl.bcast(v, g, root=0)
+        ag = ompccl.allgather(v, g, axis=0)
+        rs = ompccl.reducescatter(ag, g, axis=0)
+        a2a = ompccl.alltoall(v * 0 + ag, g, split_axis=0, concat_axis=0)
+        pm = ompccl.permute(v, g, shift=1)
+        bar = ompccl.barrier_value(g)
+        p = rma.ompx_put(v, g, shift=1)
+        gq = rma.ompx_get(v, g, shift=1)
+        pp = rma.ompx_put_perm(v, g, [(i, i) for i in range(8)])
+        h0, h1 = rma.halo_exchange(v, g, halo=1, axis=0)
+        acc = (a + r + b + rs + pm + p + gq + pp + h0 + h1
+               + a2a[:1] + 0 * bar)
+        return acc
+
+    jax.jit(shard_map(ops, mesh=ring8, in_specs=P("x"),
+                      out_specs=P("x")))(x)
+    calls = default_context().stats()[g.descriptor()]
+    assert calls == {
+        "allreduce": 2,       # allreduce + the one reduce() routes through
+        "reduce": 1,
+        "bcast": 1,
+        "allgather": 1,
+        "reducescatter": 1,
+        "alltoall": 1,
+        "permute": 1,
+        "barrier": 1,
+        "put": 3,             # put + put_perm + the one get() routes through
+        "get": 1,
+        "halo_exchange": 1,
+    }
+    diomp.reset_default_context()

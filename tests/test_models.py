@@ -6,11 +6,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
 from repro.core import ompccl
+from repro.core.compat import make_mesh, shard_map
 from repro.models import api as model_api
 from repro.models import schema as sch
 from repro.models.config import ModelConfig, ParallelCtx
@@ -23,8 +23,7 @@ MESHES = [((2, 2, 2), ("pod", "data", "model")),
 
 
 def _mesh(shape, axes):
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types="auto")
 
 
 def _batch_for(cfg, B=8, S=16, seed=1):

@@ -7,7 +7,11 @@ right payloads, and frees invalidate cached remote pointers.
 """
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic fallback
+    from _minihyp import given, settings, st
 
 from repro.core.groups import DiompGroup
 from repro.core.pgas import (AllocError, BuddyAllocator, GlobalMemory,
@@ -106,3 +110,90 @@ def test_mapping_table_contents():
     (row,) = gm.mapping_table()
     assert row["name"] == "w" and row["symmetric"]
     assert row["logical_axes"] == ("embed", "mlp")
+
+
+# ---------------------------------------------------------------------------
+# allocator churn + collective-alloc rollback + pointer-cache lifetime
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("allocator", ["linear", "buddy"])
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(1, 3000)),
+                min_size=1, max_size=50))
+@settings(max_examples=40, deadline=None)
+def test_global_memory_randomized_churn(allocator, ops):
+    """Mixed symmetric/asymmetric alloc/free churn keeps every arena's
+    invariants (free+live extents tile the segment; symmetric offsets stay
+    in lockstep) and leaks nothing once everything is freed."""
+    gm = GlobalMemory(4, 1 << 15, allocator=allocator)
+    live = []
+    for i, (kind, size) in enumerate(ops):
+        if kind == 0 or not live:          # symmetric alloc
+            try:
+                live.append(gm.alloc_symmetric(f"s{i}", size, G))
+            except AllocError:
+                pass
+        elif kind == 1:                    # asymmetric alloc
+            try:
+                live.append(gm.alloc_asymmetric(
+                    f"a{i}", [size, size // 2 + 1, size * 2, 1], G))
+            except AllocError:
+                pass
+        else:                              # free the middle handle
+            gm.free(live.pop(len(live) // 2))
+        gm.check_invariants()
+        # symmetric regions must keep identical offsets on every rank
+        for r in gm.regions():
+            if r.symmetric:
+                assert len(set(r.offsets)) == 1, r
+    for h in live:
+        gm.free(h)
+        gm.check_invariants()
+    assert all(gm.bytes_in_use(r) == 0 for r in range(4))
+
+
+def test_asymmetric_rollback_on_mid_collective_alloc_error():
+    """If one rank's arena cannot satisfy its share of a collective
+    asymmetric allocation, every already-placed shard AND the second-level
+    pointer slot roll back — no rank leaks (paper: 'all participating
+    nodes coordinate')."""
+    gm = GlobalMemory(4, 4096)
+    # diverge the arenas: rank 2 nearly full, others roomy
+    keep = gm.alloc_asymmetric("warm", [256, 256, 3328, 256], G)
+    before_use = [gm.bytes_in_use(r) for r in range(4)]
+    before_slp = gm._slp_arena.bytes_in_use
+    with pytest.raises(AllocError):
+        # ranks 0..1 succeed, rank 2 cannot fit 2048 -> mid-collective abort
+        gm.alloc_asymmetric("boom", [128, 128, 2048, 128], G)
+    assert [gm.bytes_in_use(r) for r in range(4)] == before_use
+    assert gm._slp_arena.bytes_in_use == before_slp
+    gm.check_invariants()
+    # the arena still serves what actually fits
+    ok = gm.alloc_asymmetric("ok", [128, 128, 256, 128], G)
+    gm.free(ok)
+    gm.free(keep)
+    assert all(gm.bytes_in_use(r) == 0 for r in range(4))
+
+
+def test_remote_ptr_cache_scoped_invalidation_on_free():
+    """Freeing one region invalidates exactly its cached remote pointers;
+    other regions' entries keep their validity (and their hits)."""
+    gm = GlobalMemory(4, 1 << 16)
+    a = gm.alloc_asymmetric("a", [64, 128, 256, 512], G)
+    b = gm.alloc_asymmetric("b", [32, 32, 32, 32], G)
+    for r in range(4):
+        gm.translate(a, r)
+        gm.translate(b, r)
+    assert gm.ptr_cache.misses == 8
+    gm.free(a)
+    # b's entries survived: all four hits, no new misses
+    hits0 = gm.ptr_cache.hits
+    for r in range(4):
+        gm.translate(b, r)
+    assert gm.ptr_cache.hits == hits0 + 4 and gm.ptr_cache.misses == 8
+    # a is gone from the cache; a fresh region re-misses (new rid)
+    a2 = gm.alloc_asymmetric("a2", [64, 64, 64, 64], G)
+    gm.translate(a2, 0)
+    assert gm.ptr_cache.misses == 9
+    gm.free(a2)
+    gm.free(b)

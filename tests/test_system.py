@@ -6,7 +6,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container without hypothesis: deterministic fallback
+    from _minihyp import given, settings, st
 
 from repro.core.groups import DiompGroup
 from repro.core.runtime import DiompRuntime
@@ -44,9 +48,8 @@ def test_runtime_rejects_duplicates(mesh8):
 @settings(max_examples=30, deadline=None)
 def test_runtime_heap_accounting(sizes):
     """Register/release cycles never leak arena bytes (property)."""
-    import jax as _jax
-    mesh = _jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                          axis_types=(_jax.sharding.AxisType.Auto,) * 3)
+    from repro.core.compat import make_mesh
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"), axis_types="auto")
     rt = DiompRuntime(mesh, segment_bytes=1 << 22)
     for i, s in enumerate(sizes):
         rt.register(f"t{i}", (s,), "float32", (None,))

@@ -97,8 +97,8 @@ def test_checkpoint_roundtrip_and_reshard(tmp_path, mesh8):
         np.testing.assert_array_equal(np.asarray(params[k], np.float32),
                                       np.asarray(p2[k], np.float32))
     # elastic: restore onto a DIFFERENT mesh via shard_fn
-    mesh2 = jax.make_mesh((4, 2), ("data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core.compat import make_mesh
+    mesh2 = make_mesh((4, 2), ("data", "model"), axis_types="auto")
     from repro.distributed.sharding import logical_to_spec
     from jax.sharding import NamedSharding
     schema = sch.build_schema(CFG)
