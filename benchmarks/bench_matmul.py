@@ -1,26 +1,74 @@
 """Paper Fig. 7 (Cannon matmul): ring collective matmul strong scaling.
 
 Fixed-size square product C = A x B (the paper's 30240^2 scaled to CPU:
-N=1024), 1..8 devices, ring exchange with compute/communication overlap on
-vs off.  Speedups are relative to the 1-device run, like the paper's
-single-node baseline.  Superlinearity on real pods comes from per-rank
-working sets dropping into faster cache levels — on the CPU smoke mesh we
-report the measured scaling plus the per-rank comm volume model showing the
-per-GPU communication decrease the paper credits.
+N=1024), 1..8 devices, THREE execution modes per device count:
+
+* ``none``  — all-gather X + one big GEMM (the MPI+X baseline shape);
+* ``host``  — the unidirectional host-level ring: one dot + collective-
+              permute HLO pair per step, overlap left to the XLA scheduler;
+* ``fused`` — the fused bidirectional ring (one kernel, planner-scheduled
+              stripe slots, ``ceil((n-1)/2)`` exchange steps).
+
+All virtual devices share one physical core here, so wall time cannot show
+parallel speedup; the modeled columns apply a per-step comm/compute model at
+the PAPER's problem size (30240^2, bf16, v5e: 197 TFLOP/s peak, 50 GB/s per
+ICI link direction) driven by the SAME RingPlan schedule the kernels
+execute: each step costs ``max(gemms·t_c, t_x)`` (+ a per-step dispatch
+overhead for the host loop, which the fused kernel pays once).  The fused
+mode's per-stripe step time and modeled total must never exceed the host
+ring's — asserted here, so the benchmark doubles as a regression gate.
 """
 
 from __future__ import annotations
 
+import math
+
 import numpy as np
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.compat import make_mesh, shard_map
 from repro.core.groups import DiompGroup
+from repro.kernels.plan import RingPlan
 from repro.kernels.ring_matmul.ops import ring_allgather_matmul
 
 from .common import timeit, write_csv
+
+# v5e-flavored model constants (per chip / per ICI link direction)
+PEAK_FLOPS = 197e12
+LINK_BW = 50e9               # bytes/s, each direction
+DISPATCH_OVERHEAD = 5e-6     # per host-loop step (launch + schedule slack)
+PAPER_N = 30240
+PAPER_ITEM = 2               # bf16
+
+MODES = ("none", "host", "fused")
+
+
+def _modeled(ndev: int, mode: str):
+    """(total_s, per-stripe step_s) under the per-step comm/compute model."""
+    t_c = 2 * PAPER_N * (PAPER_N / ndev) ** 2 / PEAK_FLOPS   # one stripe GEMM
+    stripe_bytes = (PAPER_N / ndev) * PAPER_N * PAPER_ITEM
+    t_x = stripe_bytes / LINK_BW
+    if ndev == 1:
+        return t_c, t_c
+    if mode == "none":
+        total = ndev * t_c + (ndev - 1) * t_x       # gather, THEN compute
+        return total, total / ndev
+    if mode == "host":
+        # n-1 overlapped steps + the final stripe's GEMM, one dispatch each
+        step = max(t_c, t_x) + DISPATCH_OVERHEAD
+        return (ndev - 1) * step + t_c, step
+    # fused: walk the actual bidirectional schedule
+    plan = RingPlan(n=ndev, direction="bidi", slots=2)
+    total, worst_per_stripe = DISPATCH_OVERHEAD, 0.0
+    for st in plan.schedule():
+        gemms = int(st.compute_cw) + int(st.compute_ccw)
+        comm = t_x if (st.send_cw or st.send_ccw) else 0.0
+        dt = max(gemms * t_c, comm)
+        total += dt
+        if gemms:
+            worst_per_stripe = max(worst_per_stripe, dt / gemms)
+    return total, worst_per_stripe
 
 
 def run(quick: bool = False, N: int = 1024):
@@ -28,41 +76,47 @@ def run(quick: bool = False, N: int = 1024):
         N = 512
     A = np.random.RandomState(0).randn(N, N).astype(np.float32)
     B = np.random.RandomState(1).randn(N, N).astype(np.float32)
-    base = None
+    base_modeled = _modeled(1, "none")[0]
     rows = []
+    outputs = {}
     for ndev in (1, 2, 4, 8):
         mesh = make_mesh((ndev,), ("x",), axis_types="auto")
         g = DiompGroup(("x",), name="ring")
-        for overlap in (False, True):
+        for mode in MODES:
             f = jax.jit(shard_map(
-                lambda a, b: ring_allgather_matmul(a, b, g, overlap=overlap),
+                lambda a, b, m=mode: ring_allgather_matmul(
+                    a, b, g, overlap=m != "none",
+                    impl=m if m != "none" else None),
                 mesh=mesh, in_specs=(P("x", None), P(None, "x")),
                 out_specs=P(None, "x")))
             t = timeit(f, A, B, iters=3)
-            if base is None:
-                base = t
-            # NOTE: all virtual devices share ONE physical core here, so
-            # measured wall time cannot show parallel speedup; the modeled
-            # column applies the v5e compute/comm overlap model at the
-            # PAPER's problem size (30240^2, bf16): compute N^3/ndev at
-            # peak, ring transfer overlapped -> max(t_c, t_x).
-            Np = 30240
-            t_c = 2 * Np ** 3 / ndev / 197e12
-            t_x = (ndev - 1) / ndev * Np * Np * 2 / 50e9
-            modeled = max(t_c, t_x) if overlap else t_c + t_x
-            base_modeled = 2 * Np ** 3 / 197e12
+            outputs[(ndev, mode)] = np.asarray(f(A, B))
+            total, step = _modeled(ndev, mode)
             rows.append({
                 "devices": ndev,
-                "overlap": overlap,
+                "mode": mode,
+                "exchange_steps": 0 if mode == "none" or ndev == 1 else (
+                    math.ceil((ndev - 1) / 2) if mode == "fused"
+                    else ndev - 1),
                 "wall_s": round(t, 4),
                 "wall_note": "1-core CPU serializes devices",
-                "modeled_v5e_speedup": round(base_modeled / modeled, 2),
+                "modeled_step_s": round(step, 6),
+                "modeled_total_s": round(total, 4),
+                "modeled_v5e_speedup": round(base_modeled / total, 2),
                 "per_rank_comm_MB": round(
                     (ndev - 1) / ndev * N * N * 4 / 2**20, 1),
             })
-    # correctness spot check on the last mesh
-    got = np.asarray(f(A, B))
-    err = np.abs(got - A @ B).max() / np.abs(A @ B).max()
+    # the fused schedule must never model slower than the host ring
+    by_key = {(r["devices"], r["mode"]): r for r in rows}
+    for ndev in (2, 4, 8):
+        fused, host = by_key[(ndev, "fused")], by_key[(ndev, "host")]
+        assert fused["modeled_step_s"] <= host["modeled_step_s"], (fused, host)
+        assert fused["modeled_total_s"] <= host["modeled_total_s"], (fused, host)
+
+    # correctness: every mode, every device count, against the dense product
+    want = A @ B
+    scale = np.abs(want).max()
+    err = max(np.abs(out - want).max() / scale for out in outputs.values())
     assert err < 1e-4, err
     path = write_csv("matmul.csv", rows)
     print(f"[bench_matmul] -> {path} (err={err:.1e})")

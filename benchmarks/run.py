@@ -1,21 +1,49 @@
 """Benchmark harness — one entry per paper table/figure.
 
-``python -m benchmarks.run [--quick]`` executes:
+``python -m benchmarks.run [--quick] [--json [PATH]]`` executes:
   p2p          (paper Figs. 3-5: RMA latency/bandwidth)
   collectives  (paper Fig. 6: OMPCCL vs flat collectives)
-  matmul       (paper Fig. 7: Cannon ring matmul scaling)
+  matmul       (paper Fig. 7: Cannon ring matmul scaling, 3 overlap modes)
   minimod      (paper Fig. 8 + Listings 1-2: halo exchange + LOC)
   streams      (paper §3.2: stream-pool policy throughput)
   kvcache      (paper Fig. 2: asymmetric heap / page-table churn)
 
-CSVs land in experiments/bench/.  Set XLA device count before jax imports.
+CSVs land in experiments/bench/.  ``--json`` (implied by ``--quick``)
+additionally writes the consolidated ``BENCH_summary.json`` — the perf
+trajectory file CI and the PERF docs read — with every bench's rows plus
+run metadata.  Set XLA device count before jax imports.
 """
 
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
+import json
+import platform
 import time
+
+SUMMARY_DEFAULT = "BENCH_summary.json"
+
+
+def write_summary(path: str, results: dict, *, quick: bool,
+                  elapsed_s: float) -> str:
+    import jax
+
+    summary = {
+        "schema": 1,
+        "quick": quick,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "unix_time": int(time.time()),
+        "elapsed_s": round(elapsed_s, 1),
+        "benches": results,
+    }
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def main(argv=None):
@@ -24,6 +52,11 @@ def main(argv=None):
     ap.add_argument("--only", default=None,
                     help="comma-separated subset (p2p,collectives,matmul,"
                          "minimod,streams,kvcache)")
+    ap.add_argument("--json", nargs="?", const=SUMMARY_DEFAULT, default=None,
+                    metavar="PATH",
+                    help="write the consolidated BENCH_summary.json "
+                         f"(default path: {SUMMARY_DEFAULT}; --quick "
+                         "implies this)")
     args = ap.parse_args(argv)
 
     from . import (bench_collectives, bench_kvcache, bench_matmul,
@@ -39,10 +72,18 @@ def main(argv=None):
     }
     only = args.only.split(",") if args.only else list(table)
     t0 = time.time()
+    results = {}
     for name in only:
         print(f"\n=== {name} ===")
-        table[name](quick=args.quick)
-    print(f"\nall benchmarks done in {time.time()-t0:.0f}s")
+        rows = table[name](quick=args.quick)
+        results[name] = rows if rows is not None else []
+    elapsed = time.time() - t0
+    json_path = args.json or (SUMMARY_DEFAULT if args.quick else None)
+    if json_path:
+        path = write_summary(json_path, results, quick=args.quick,
+                             elapsed_s=elapsed)
+        print(f"\n[summary] -> {path}")
+    print(f"\nall benchmarks done in {elapsed:.0f}s")
 
 
 if __name__ == "__main__":

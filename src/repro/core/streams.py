@@ -9,8 +9,11 @@ and device events inside ``ompx_fence``.
 On TPU there are no user-visible streams; the analogue is the number of
 *in-flight asynchronous operations* the runtime allows:
 
-* in Pallas kernels — the number of DMA double/multi-buffer slots
-  (``StreamPool.plan_slots`` is queried by the kernels' ops.py wrappers);
+* in Pallas kernels — the number of DMA double/multi-buffer slots:
+  ``StreamPool.plan_slots`` is consumed by
+  :class:`repro.kernels.plan.OverlapPlanner`, which turns the grant into
+  the concrete slot/tile plans the kernels' ops.py wrappers execute (the
+  fused ring matmul's stripe slots, attention blocks, stencil slabs);
 * on the host — genuinely asynchronous work (checkpoint writes, data
   prefetch) driven by the same pool with real threads.
 
@@ -35,10 +38,12 @@ class Stream:
     """One asynchronous lane: a worker thread consuming a task queue."""
 
     _ids = 0
+    _ids_lock = threading.Lock()   # pools on different threads share the counter
 
     def __init__(self):
-        Stream._ids += 1
-        self.sid = Stream._ids
+        with Stream._ids_lock:
+            Stream._ids += 1
+            self.sid = Stream._ids
         self._queue: Deque = deque()
         self._cv = threading.Condition()
         self._pending = 0
@@ -125,6 +130,11 @@ class StreamPool:
                 return s
             if len(self._active) >= self.max_active:
                 self._partial_sync_locked()
+                if self._idle:   # the sync released streams: reuse, don't grow
+                    s = self._idle.pop()
+                    self.stats["reused"] += 1
+                    self._active.append(s)
+                    return s
             s = Stream()  # lazy allocation
             self.stats["created"] += 1
             self._active.append(s)
@@ -134,13 +144,23 @@ class StreamPool:
         with self._lock:
             if stream in self._active:
                 self._active.remove(stream)
-            self._idle.append(stream)
+            if stream not in self._idle:   # tolerate racing double-release
+                self._idle.append(stream)
 
     def _partial_sync_locked(self) -> None:
-        """Paper's partial synchronization: release half the *completed*."""
+        """Paper's partial synchronization: release half the *completed*.
+
+        Called with the pool lock held.  When nothing has finished yet we
+        must block on the oldest stream, which requires DROPPING the lock
+        (the stream's completion path re-enters ``release``); while the
+        lock is down, concurrent ``release``/``acquire`` calls may mutate
+        ``_active`` and even recycle the stream we waited on — so after
+        reacquiring, everything is re-derived from the pool's current
+        membership and nothing is removed without a membership check.
+        """
         self.stats["partial_syncs"] += 1
         completed = [s for s in self._active if s.idle]
-        if not completed:
+        while not completed and self._active:
             # nothing finished yet: block on the oldest stream only
             oldest = self._active[0]
             self._lock.release()
@@ -148,12 +168,19 @@ class StreamPool:
                 oldest.synchronize()
             finally:
                 self._lock.acquire()
+            if oldest not in self._active:
+                # a concurrent release() recycled it while we were blocked;
+                # the pool shrank, so the bound no longer forces a sync
+                if len(self._active) < self.max_active:
+                    return
             completed = [s for s in self._active if s.idle]
-        n_release = max(1, len(completed) // 2)
+        n_release = max(1, len(completed) // 2) if completed else 0
         for s in completed[:n_release]:
-            self._active.remove(s)
-            self._idle.append(s)
-            self.stats["released"] += 1
+            if s in self._active:          # guard against racing release()
+                self._active.remove(s)
+                if s not in self._idle:
+                    self._idle.append(s)
+                self.stats["released"] += 1
 
     # -- convenience -----------------------------------------------------------
     def submit(self, fn: Callable, *args) -> Future:

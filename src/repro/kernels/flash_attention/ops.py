@@ -7,6 +7,12 @@ shard_map'd model steps, and for the dry-run HLO) and accepts *traced*
 (``interpret=True`` executes the kernel body in Python on CPU for
 validation) and requires static offsets.
 
+``block=None`` (the default) asks the shared
+:class:`~repro.kernels.plan.OverlapPlanner` for the largest block whose
+tiles still double-buffer inside the VMEM budget — the
+``StreamPool.plan_slots`` contract; ``interpret=None`` resolves from the
+backend at call time (compiled on TPU, interpreted elsewhere).
+
 Deliberately not jitted here: the callers (model steps) are jitted.
 """
 
@@ -14,6 +20,7 @@ from __future__ import annotations
 
 from typing import Optional
 
+from repro.kernels.plan import default_planner, resolve_interpret
 from .kernel import flash_attention_pallas
 from .ref import flash_attention_ref
 
@@ -28,11 +35,14 @@ def flash_attention(
     prefix_len: int = 0,
     scale: Optional[float] = None,
     impl: str = "ref",
-    block: int = 512,
+    block: Optional[int] = None,
     valid_len=None,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ):
     """q: (B, Tq, H, D); k: (B, Tk, KH, D); v: (B, Tk, KH, Dv)."""
+    if block is None:
+        block = default_planner().plan_attention_block(
+            q.shape[1], k.shape[1], q.shape[-1], v.shape[-1], q.dtype)
     if impl == "ref":
         return flash_attention_ref(
             q, k, v, causal=causal, q_offset=q_offset, prefix_len=prefix_len,
@@ -45,7 +55,7 @@ def flash_attention(
         out = flash_attention_pallas(
             qt, kt, vt, causal=causal, q_offset=q_offset, prefix_len=prefix_len,
             scale=scale, block_q=block, block_k=block, valid_len=valid_len,
-            interpret=interpret,
+            interpret=resolve_interpret(interpret),
         )
         return out.transpose(0, 2, 1, 3)
     raise ValueError(f"unknown impl {impl!r}")

@@ -1,0 +1,306 @@
+"""OverlapPlanner — the §3.2 bounded-concurrency contract made concrete.
+
+``StreamPool.plan_slots`` answers ONE question ("how many DMA buffers may a
+kernel keep in flight for a given working set?"); this module turns that
+answer into the *concrete* slot/tile plans the Pallas kernels execute, so the
+documented contract ("plan_slots is queried by the kernels' ops.py wrappers")
+is real rather than aspirational:
+
+* :class:`RingPlan` — the full schedule of the fused collective matmul: how
+  many VMEM stripe slots per ring direction, which stripe each step computes,
+  which buffers each step forwards.  The bidirectional ring covers the
+  ``n - 1`` remote stripes in ``ceil((n - 1) / 2)`` exchange steps: the
+  clockwise stream serves the "left half" of the ring (sources behind me),
+  the counter-clockwise stream the "right half" (sources ahead), and both
+  ICI link directions carry one stripe per step.
+* matmul tile / flash-attention block / stencil slab planning — each kernel's
+  working set is sized against the VMEM budget with ``plan_slots`` buffers
+  reserved for the pipeline, replacing the former hardcoded defaults.
+
+The planner is deliberately cheap and deterministic: everything is derived
+from static shapes, so plans are computed at trace time and baked into the
+unrolled schedules/kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.streams import MAX_ACTIVE_STREAMS_DEFAULT, StreamPool
+
+__all__ = [
+    "RingStep",
+    "RingPlan",
+    "OverlapPlanner",
+    "default_planner",
+    "resolve_interpret",
+    "resolve_ring_impl",
+]
+
+# Per-core VMEM a kernel may plan against.  Real v5e cores have ~16 MiB more,
+# but the compiler needs headroom for spills and the pipeline's own buffers.
+VMEM_BUDGET_DEFAULT = 16 * 2**20
+
+
+def _itemsize(dtype) -> int:
+    return jnp.dtype(dtype).itemsize
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Interpret mode resolved from the backend AT CALL TIME.
+
+    ``None`` (the default everywhere) means "compile on TPU, interpret
+    elsewhere" — the fast path is never silently interpreted on real
+    hardware, and CPU CI exercises the identical kernel bodies in the
+    Pallas interpreter.
+    """
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+def resolve_ring_impl(impl: Optional[str]) -> str:
+    """Resolve a ring-matmul implementation knob to a concrete mode.
+
+    ``"auto"``/None pick the fused bidirectional schedule; explicit
+    ``"host"`` (unidirectional XLA-overlap loop) and ``"fused"`` pass
+    through.  The train/serve step builders call this once so the whole
+    jitted step traces against one concrete schedule.
+    """
+    if impl in (None, "auto"):
+        return "fused"
+    if impl in ("host", "fused"):
+        return impl
+    raise ValueError(f"unknown ring matmul impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# ring schedule
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RingStep:
+    """One compute step of the ring collective matmul.
+
+    ``index`` is the step number ``s``; the clockwise stream holds the
+    stripe of rank ``(me - s) % n`` at step ``s``, the counter-clockwise
+    stream the stripe of rank ``(me + s) % n``.  ``send_*`` are the
+    forwards launched at this step (they deliver step ``s + 1``'s
+    stripes and overlap this step's GEMMs); ``slot`` is the VMEM buffer
+    slot both streams use for step ``s``.
+    """
+
+    index: int
+    compute_cw: bool
+    compute_ccw: bool
+    send_cw: bool
+    send_ccw: bool
+    slot: int
+
+
+@dataclasses.dataclass(frozen=True)
+class RingPlan:
+    """Concrete slot/step plan for one ring collective matmul.
+
+    ``direction``:
+
+    * ``"bidi"`` — the fused default: both link directions carry one stripe
+      per step, ``ceil((n - 1) / 2)`` exchange steps;
+    * ``"cw"`` / ``"ccw"`` — unidirectional rings (``n - 1`` steps), kept
+      for the host-loop benchmark mode and for exercising both directions.
+    """
+
+    n: int
+    direction: str = "bidi"
+    slots: int = 2
+    tile: Tuple[int, int, int] = (256, 512, 256)
+    stripe_bytes: int = 0
+    vmem_bytes: int = 0
+
+    def __post_init__(self):
+        if self.direction not in ("bidi", "cw", "ccw"):
+            raise ValueError(f"unknown ring direction {self.direction!r}")
+        if self.n < 1:
+            raise ValueError("group size must be >= 1")
+
+    @property
+    def exchange_steps(self) -> int:
+        """Ring steps that move data: ceil((n-1)/2) bidi, n-1 one-way."""
+        if self.n <= 1:
+            return 0
+        if self.direction == "bidi":
+            return (self.n - 1 + 1) // 2
+        return self.n - 1
+
+    def schedule(self) -> Tuple[RingStep, ...]:
+        """The per-step schedule both the TPU kernel and the interpret
+        emulation execute (compute steps = exchange_steps + 1)."""
+        n = self.n
+        if n == 1:
+            return (RingStep(0, True, False, False, False, 0),)
+        steps = []
+        if self.direction == "bidi":
+            s_cw = (n - 1 + 1) // 2          # cw serves the ring's left half
+            s_ccw = (n - 1) // 2             # ccw the right half (no overlap)
+            for s in range(s_cw + 1):
+                steps.append(RingStep(
+                    index=s,
+                    compute_cw=s <= s_cw,            # s == 0 is the local stripe
+                    compute_ccw=1 <= s <= s_ccw,
+                    send_cw=s < s_cw,
+                    send_ccw=s < s_ccw,
+                    slot=s % self.slots,
+                ))
+        else:
+            cw = self.direction == "cw"
+            for s in range(n):
+                steps.append(RingStep(
+                    index=s,
+                    compute_cw=cw or s == 0,
+                    compute_ccw=(not cw) and s >= 1,
+                    send_cw=cw and s < n - 1,
+                    send_ccw=(not cw) and s < n - 1,
+                    slot=s % self.slots,
+                ))
+        return tuple(steps)
+
+    def sources(self, rank: int = 0) -> Tuple[int, ...]:
+        """Stripe owners computed by ``rank``, in schedule order (oracle for
+        coverage tests: must be a permutation of range(n))."""
+        out = []
+        for st in self.schedule():
+            if st.compute_cw:
+                out.append((rank - st.index) % self.n)
+            if st.compute_ccw:
+                out.append((rank + st.index) % self.n)
+        return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# the planner
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class OverlapPlanner:
+    """Converts (StreamPool.plan_slots, VMEM budget, tile shape, group size)
+    into the concrete plans the kernels consume.
+
+    ``pool`` supplies the §3.2 bounded-concurrency policy — the number of
+    in-flight DMA buffers a kernel may pin is exactly what
+    ``StreamPool.plan_slots`` grants for the kernel's working set.
+    """
+
+    pool: StreamPool = dataclasses.field(
+        default_factory=lambda: StreamPool(MAX_ACTIVE_STREAMS_DEFAULT))
+    vmem_budget: int = VMEM_BUDGET_DEFAULT
+
+    def _fits(self, working_set_bytes: int) -> bool:
+        """Would the slots plan_slots grants actually fit the budget?
+
+        plan_slots never grants fewer than 2 (double buffering is the point
+        of the pipeline), so "fits" means the granted slot count times the
+        working set stays inside the budget.
+        """
+        slots = self.pool.plan_slots(working_set_bytes, self.vmem_budget)
+        return slots * working_set_bytes <= self.vmem_budget
+
+    # -- ring collective matmul ---------------------------------------------
+    def plan_ring_matmul(self, t_loc: int, k: int, n_loc: int, dtype,
+                         n: int, *, direction: str = "bidi") -> RingPlan:
+        """Slot/step plan for the fused all-gather matmul.
+
+        Working set: per-slot stripe buffers for BOTH directions, the
+        resident W column block, and the f32 output stripe tile.
+        """
+        item = _itemsize(dtype)
+        stripe = max(t_loc * k * item, 1)
+        resident = k * n_loc * item + t_loc * n_loc * 4   # W block + f32 out tile
+        budget = max(self.vmem_budget - resident, stripe * 2)
+        ndir = 2 if direction == "bidi" else 1
+        slots = self.pool.plan_slots(ndir * stripe, budget)
+        # the grant is a concurrency bound; the pinned bytes must also fit
+        slots = min(slots, max(budget // (ndir * stripe), 2))
+        plan = RingPlan(n=n, direction=direction,
+                        slots=1 if n == 1 else max(2, min(slots, n)),
+                        tile=self.plan_matmul_tiles(t_loc, k, n_loc, dtype),
+                        stripe_bytes=stripe)
+        return dataclasses.replace(
+            plan, vmem_bytes=ndir * plan.slots * stripe + resident)
+
+    # -- blocked matmul tiles -----------------------------------------------
+    def plan_matmul_tiles(self, m: int, k: int, n: int, dtype,
+                          *, bm: int = 256, bk: int = 512, bn: int = 256
+                          ) -> Tuple[int, int, int]:
+        """MXU-aligned tiles shrunk until plan_slots grants double buffering.
+
+        Working set per pipeline stage: x (bm, bk) + w (bk, bn) in ``dtype``
+        + f32 accumulator (bm, bn).  bk halves first (the accumulator is
+        bk-independent), then bm/bn together, never below 128.
+        """
+        item = _itemsize(dtype)
+        bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+        while True:
+            ws = (bm * bk + bk * bn) * item + bm * bn * 4
+            if self._fits(ws) or (bm <= 128 and bk <= 128 and bn <= 128):
+                return bm, bk, bn
+            if bk > 128:
+                bk //= 2
+            else:
+                bm = max(128, bm // 2)
+                bn = max(128, bn // 2)
+
+    # -- flash attention block ----------------------------------------------
+    def plan_attention_block(self, tq: int, tk: int, d: int, dv: int, dtype,
+                             *, block: int = 512) -> int:
+        """Largest block ≤ ``block`` whose tiles double-buffer in budget.
+
+        ``block`` chunks the KV axis (and, in the Pallas kernel, the q axis
+        too — both kernels clamp to their actual extents).  Per-step working
+        set: q (bq, d) + k/v (bk, d/dv) in ``dtype`` + scores (bq, bk) and
+        accumulator (bq, dv) in f32.
+        """
+        item = _itemsize(dtype)
+        b = max(min(block, max(tq, tk)), 1)
+        while b > 128:
+            bq, bk = min(b, tq), min(b, tk)
+            ws = (bq * d + bk * (d + dv)) * item + (bq * bk + bq * dv) * 4
+            if self._fits(ws):
+                break
+            b //= 2
+        return b
+
+    # -- stencil slab ---------------------------------------------------------
+    def plan_stencil_bz(self, z: int, y: int, x: int, dtype,
+                        *, radius: int = 4, bz: int = 8) -> int:
+        """Z-slab height whose halo slab still double-buffers in budget."""
+        item = _itemsize(dtype)
+        bz = min(bz, z)
+        while bz > 1:
+            slab = (bz + 2 * radius) * (y + 2 * radius) * (x + 2 * radius)
+            ws = slab * item + 3 * bz * y * x * item   # slab + prev/c2/out blocks
+            if self._fits(ws):
+                break
+            bz = max(1, bz // 2)
+        return bz
+
+
+_DEFAULT_PLANNER: Optional[OverlapPlanner] = None
+
+
+def default_planner() -> OverlapPlanner:
+    """The process-default planner, backed by the default DiompContext's
+    StreamPool so the §3.2 policy knob (``max_active_streams``) governs
+    kernel DMA slots and host async lanes alike."""
+    global _DEFAULT_PLANNER
+    from repro.core.context import default_context
+
+    pool = default_context().streams
+    if _DEFAULT_PLANNER is None or _DEFAULT_PLANNER.pool is not pool:
+        _DEFAULT_PLANNER = OverlapPlanner(pool=pool)
+    return _DEFAULT_PLANNER

@@ -1,1 +1,2 @@
+from .fused import fused_ring_allgather_matmul  # noqa: F401
 from .ops import matmul, ring_allgather_matmul  # noqa: F401

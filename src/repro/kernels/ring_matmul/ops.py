@@ -3,18 +3,28 @@
 The paper's matrix-multiplication application (§4.4) pipelines Cannon's ring
 exchange so each rank's ``ompx_put`` of the next block stripe overlaps the
 current block's GEMM.  On a TPU TP group the same schedule computes the
-all-gather matmul ``Y = X_full @ W_col`` without ever materializing X_full:
+all-gather matmul ``Y = X_full @ W_col`` without ever materializing X_full.
 
-    for s in 0..n-1:   Y[rows of chunk I hold] = chunk @ W_local
-                       chunk <- ompx_put(chunk, +1)      (overlaps next GEMM)
+Three implementations, selected by ``overlap`` / ``impl``:
 
-XLA schedules the (async) collective-permute of step s+1 concurrently with
-the dot of step s — the paper's "additional block stripe ... to enable
-overlap of computation and communication", with the ring unrolled because
-the group size is static.
+* ``overlap=False``          — all-gather X + one big GEMM (the MPI+X
+                               baseline shape);
+* ``impl="host"``            — the host-level unrolled ring: one ``dot`` +
+                               ``collective-permute`` pair per step, overlap
+                               left to the XLA scheduler (kept as the
+                               benchmark's middle mode);
+* ``impl="fused"`` (default) — ONE fused kernel for the whole ring
+                               (:mod:`.fused`): bidirectional double-buffered
+                               stripe exchange planned by
+                               :class:`~repro.kernels.plan.OverlapPlanner`,
+                               ``ceil((n-1)/2)`` exchange steps, compiled
+                               with in-kernel remote DMA on TPU and emulated
+                               step-for-step over ``ompx_put`` elsewhere.
 
-``matmul`` is the jit'd local blocked-GEMM entry point (Pallas on TPU,
-XLA dot elsewhere); ``ring_allgather_matmul`` is the shard_map collective.
+``matmul`` is the jit'd local blocked-GEMM entry point (Pallas on TPU, XLA
+dot elsewhere); its tiles come from the planner when not given, and interpret
+mode resolves from the backend at call time so the fast path is never
+silently interpreted on real hardware.
 """
 
 from __future__ import annotations
@@ -30,6 +40,9 @@ from repro.core import ompccl
 from repro.core.compat import axis_size
 from repro.core.groups import DiompGroup
 from repro.core.rma import ompx_put
+from repro.kernels.plan import (RingPlan, default_planner, resolve_interpret,
+                                resolve_ring_impl)
+from .fused import fused_ring_allgather_matmul
 from .kernel import matmul_pallas
 from .ref import matmul_ref, ring_allgather_matmul_ref
 
@@ -37,33 +50,25 @@ __all__ = ["matmul", "ring_allgather_matmul"]
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "bm", "bk", "bn", "interpret"))
-def matmul(x, w, *, impl: str = "ref", bm: int = 256, bk: int = 512,
-           bn: int = 256, interpret: bool = True):
+def matmul(x, w, *, impl: str = "ref", bm: Optional[int] = None,
+           bk: Optional[int] = None, bn: Optional[int] = None,
+           interpret: Optional[bool] = None):
     if impl == "ref":
         return matmul_ref(x, w)
     if impl == "pallas":
-        return matmul_pallas(x, w, bm=bm, bk=bk, bn=bn, interpret=interpret)
+        if bm is None or bk is None or bn is None:
+            pm, pk, pn = default_planner().plan_matmul_tiles(
+                x.shape[0], x.shape[1], w.shape[1], x.dtype)
+            bm = pm if bm is None else bm
+            bk = pk if bk is None else bk
+            bn = pn if bn is None else bn
+        return matmul_pallas(x, w, bm=bm, bk=bk, bn=bn,
+                             interpret=resolve_interpret(interpret))
     raise ValueError(impl)
 
 
-def ring_allgather_matmul(
-    x_local,
-    w_local,
-    group: DiompGroup,
-    *,
-    overlap: bool = True,
-    dot: Optional[Callable] = None,
-):
-    """Inside shard_map: x_local (T/n, K), w_local (K, N/n) -> (T, N/n).
-
-    ``overlap=False`` falls back to all-gather + one big GEMM (the MPI+X
-    baseline shape); ``overlap=True`` runs the Cannon-style ring.
-    """
-    if dot is None:
-        dot = matmul_ref
-    if not overlap:
-        return ring_allgather_matmul_ref(x_local, w_local, group)
-
+def _host_ring(x_local, w_local, group: DiompGroup, dot: Callable):
+    """The host-level unrolled ring (one put + dot per step, n-1 steps)."""
     ax = group.axes[0]
     n = axis_size(ax)
     idx = lax.axis_index(ax)
@@ -80,3 +85,30 @@ def ring_allgather_matmul(
         if s != n - 1:
             chunk = ompx_put(chunk, group, shift=1)
     return out
+
+
+def ring_allgather_matmul(
+    x_local,
+    w_local,
+    group: DiompGroup,
+    *,
+    overlap: bool = True,
+    impl: Optional[str] = None,
+    dot: Optional[Callable] = None,
+    plan: Optional[RingPlan] = None,
+    interpret: Optional[bool] = None,
+):
+    """Inside shard_map: x_local (T/n, K), w_local (K, N/n) -> (T, N/n).
+
+    ``overlap=False`` falls back to all-gather + one big GEMM; otherwise
+    ``impl`` picks ``"fused"`` (default — the in-kernel bidirectional ring)
+    or ``"host"`` (the XLA-scheduled unrolled loop).
+    """
+    if not overlap:
+        return ring_allgather_matmul_ref(x_local, w_local, group)
+    if resolve_ring_impl(impl) == "fused":
+        # dot is forwarded un-defaulted: a caller-supplied dot forces the
+        # emulation (the compiled kernel cannot honor custom GEMM semantics)
+        return fused_ring_allgather_matmul(
+            x_local, w_local, group, plan=plan, dot=dot, interpret=interpret)
+    return _host_ring(x_local, w_local, group, dot or matmul_ref)

@@ -1,12 +1,20 @@
-"""jit'd public wrapper for the acoustic wave step."""
+"""jit'd public wrapper for the acoustic wave step.
+
+``bz=None`` sizes the Z slab through the shared OverlapPlanner (the halo
+slab must double-buffer inside the VMEM budget — the StreamPool.plan_slots
+contract); ``interpret=None`` resolves from the backend at call time.
+"""
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
+from repro.kernels.plan import default_planner, resolve_interpret
 from .kernel import wave_step_pallas
+from .ref import RADIUS
 from .ref import wave_step_ref
 
 __all__ = ["wave_step"]
@@ -14,10 +22,13 @@ __all__ = ["wave_step"]
 
 @functools.partial(jax.jit, static_argnames=("dx", "impl", "bz", "interpret"))
 def wave_step(u, u_prev, c2dt2, *, dx: float = 1.0, impl: str = "ref",
-              bz: int = 8, interpret: bool = True):
+              bz: Optional[int] = None, interpret: Optional[bool] = None):
     if impl == "ref":
         return wave_step_ref(u, u_prev, c2dt2, dx=dx)
     if impl == "pallas":
+        if bz is None:
+            bz = default_planner().plan_stencil_bz(
+                u.shape[0], u.shape[1], u.shape[2], u.dtype, radius=RADIUS)
         return wave_step_pallas(u, u_prev, c2dt2, dx=dx, bz=bz,
-                                interpret=interpret)
+                                interpret=resolve_interpret(interpret))
     raise ValueError(impl)

@@ -130,6 +130,10 @@ class ParallelCtx:
     dp_backend: str = "hierarchical"   # flat | hierarchical
     grad_codec: str = "none"           # none | int8 | topk
     use_ring_matmul: bool = False      # Cannon-style TP matmul overlap
+    ring_impl: str = "auto"            # auto | fused (bidirectional, planner-
+    #                                    scheduled) | host (unidirectional XLA-
+    #                                    overlap loop); resolved by the step
+    #                                    builders via plan.resolve_ring_impl
     remat: bool = True
     microbatch: int = 1                # grad-accumulation factor
     seq_shard: bool = False            # sequence parallelism for norms/residual

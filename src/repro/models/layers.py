@@ -153,23 +153,45 @@ def ring_fsdp_matmul(x, w_local, ctx: ParallelCtx):
     Instead of all-gathering W then one GEMM, rotate W shards around the
     data-axis ring; each step's ompx_put overlaps the concurrent partial
     GEMM (paper §4.4 generalized to the weight gather).
+
+    The step schedule comes from the shared
+    :class:`~repro.kernels.plan.OverlapPlanner`: ``ctx.ring_impl="fused"``
+    (the default resolution of ``"auto"``) runs the bidirectional ring —
+    W stripes circulate both ways, ``ceil((n-1)/2)`` exchange steps, both
+    link directions busy; ``"host"`` keeps the unidirectional ``n-1``-step
+    loop.  Both are differentiable (the puts are ppermutes), so this is
+    the path the TP layers train through.
     """
     if ctx.fsdp <= 1 or not ctx.fsdp_params:
         return jnp.dot(x, w_local, preferred_element_type=F32).astype(x.dtype)
     from repro.core.vma import zeros_varying
+    from repro.kernels.plan import RingPlan, resolve_ring_impl
 
     group = ctx.fsdp_group
     n = axis_size(group.axes[0])
     idx = lax.axis_index(group.axes[0])
     dshard = w_local.shape[0]
+    direction = ("bidi" if resolve_ring_impl(ctx.ring_impl) == "fused"
+                 else "cw")
+    # only the step schedule matters here: the stripes live as XLA values,
+    # not planned VMEM slots (this is the host-level, differentiable form)
+    plan = RingPlan(n=n, direction=direction)
     acc = zeros_varying(x.shape[:-1] + (w_local.shape[1],), F32, x)
-    chunk = w_local
-    for s in range(n):
-        src = (idx - s) % n
+
+    def partial_gemm(acc, w_stripe, src):
         xs = lax.dynamic_slice_in_dim(x, src * dshard, dshard, axis=-1)
-        acc += jnp.dot(xs, chunk, preferred_element_type=F32)
-        if s != n - 1:
-            chunk = ompx_put(chunk, group, shift=1)
+        return acc + jnp.dot(xs, w_stripe, preferred_element_type=F32)
+
+    cw = ccw = w_local
+    for st in plan.schedule():
+        # forwards first: the next stripes fly while this step's GEMMs run
+        cw_next = ompx_put(cw, group, shift=1) if st.send_cw else cw
+        ccw_next = ompx_put(ccw, group, shift=-1) if st.send_ccw else ccw
+        if st.compute_cw:
+            acc = partial_gemm(acc, cw, (idx - st.index) % n)
+        if st.compute_ccw:
+            acc = partial_gemm(acc, ccw, (idx + st.index) % n)
+        cw, ccw = cw_next, ccw_next
     return acc.astype(x.dtype)
 
 

@@ -32,8 +32,10 @@ def build_decode_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx, *,
     import dataclasses
 
     from repro.distributed.sharding import rules_for_ctx
+    from repro.kernels.plan import resolve_ring_impl
 
-    ctx = dataclasses.replace(ctx, inference=True, remat=False)
+    ctx = dataclasses.replace(ctx, inference=True, remat=False,
+                              ring_impl=resolve_ring_impl(ctx.ring_impl))
     decode = model_api.decode_fn(cfg)
     pspecs = sch.partition_specs(cfg, mesh, rules_for_ctx(ctx))
     _, cspecs = model_api.cache_structs(cfg, mesh, ctx, B, S,
@@ -69,8 +71,10 @@ def build_prefill_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx, *,
     from repro.models.ssm import zamba_forward
 
     from repro.distributed.sharding import rules_for_ctx
+    from repro.kernels.plan import resolve_ring_impl
 
-    ctx = dataclasses.replace(ctx, inference=True, remat=False)
+    ctx = dataclasses.replace(ctx, inference=True, remat=False,
+                              ring_impl=resolve_ring_impl(ctx.ring_impl))
     pspecs = sch.partition_specs(cfg, mesh, rules_for_ctx(ctx))
     _, cspecs = model_api.cache_structs(cfg, mesh, ctx, B, S_cache,
                                         seq_sharded=seq_sharded)

@@ -182,8 +182,14 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
     ``global_batch`` determines the batch sharding (divisibility over the DP
     axes); pass the real batch size — 0 falls back to dp-divisible.
     """
-    from repro.distributed.sharding import rules_for_ctx
+    import dataclasses
 
+    from repro.distributed.sharding import rules_for_ctx
+    from repro.kernels.plan import resolve_ring_impl
+
+    # resolve the ring-matmul schedule ONCE so the whole step traces against
+    # one concrete plan (fused bidirectional unless the ctx pins "host")
+    ctx = dataclasses.replace(ctx, ring_impl=resolve_ring_impl(ctx.ring_impl))
     rules = rules_for_ctx(ctx)
     loss_fn = model_api.loss_fn(cfg)
     pspecs = sch.partition_specs(cfg, mesh, rules)

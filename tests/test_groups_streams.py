@@ -7,7 +7,7 @@ import pytest
 
 from repro.core.groups import DiompGroup, GroupError, merge, world_group
 from repro.core.rma import RMAError, RMATracker
-from repro.core.streams import HybridPoller, StreamPool
+from repro.core.streams import HybridPoller, Stream, StreamPool
 
 
 def test_group_split_merge(mesh8):
@@ -52,6 +52,87 @@ def test_stream_pool_partial_sync_under_pressure():
         pool.submit(time.sleep, 0.001)
     assert pool.stats["partial_syncs"] >= 1
     blocker.set()
+    pool.close()
+
+
+def test_stream_ids_unique_under_concurrent_creation():
+    """Stream._ids is shared class state: racing constructors must never
+    mint duplicate sids (regression for the unguarded counter)."""
+    streams, lock = [], threading.Lock()
+
+    def mk():
+        mine = [Stream() for _ in range(25)]
+        with lock:
+            streams.extend(mine)
+
+    ts = [threading.Thread(target=mk) for _ in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    try:
+        sids = [s.sid for s in streams]
+        assert len(set(sids)) == len(sids)
+    finally:
+        for s in streams:
+            s.close()
+
+
+def test_stream_pool_concurrent_submit_release():
+    """Hammer acquire/submit/release from many threads: the partial-sync
+    path drops the pool lock mid-flight, and a concurrent release() used to
+    be able to pull the synced stream out from under it."""
+    pool = StreamPool(max_active=2)
+    errs = []
+
+    def worker(k):
+        try:
+            futs = [pool.submit(lambda i=i: i * i + k) for i in range(30)]
+            assert [f.result() for f in futs] == [i * i + k for i in range(30)]
+        except BaseException as e:  # noqa: BLE001 - surfaced via errs
+            errs.append(e)
+
+    ts = [threading.Thread(target=worker, args=(k,)) for k in range(8)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs, errs
+    pool.synchronize_all()
+    with pool._lock:
+        # invariants survived the stampede: disjoint lists, bound respected
+        assert not set(pool._active) & set(pool._idle)
+    pool.close()
+
+
+def test_stream_pool_release_during_partial_sync():
+    """Directed race: thread A blocks in partial sync on the oldest stream
+    while thread B releases that very stream; A must neither crash nor
+    corrupt the pool."""
+    pool = StreamPool(max_active=1)
+    gate = threading.Event()
+    s = pool.acquire()
+    fut = s.submit(gate.wait, 5)
+    errs = []
+
+    def acquirer():
+        try:
+            s2 = pool.acquire()      # bound hit -> partial sync on ``s``
+            pool.release(s2)
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+
+    t = threading.Thread(target=acquirer)
+    t.start()
+    time.sleep(0.05)                 # let A block inside the sync
+    gate.set()                       # s finishes...
+    fut.result()
+    pool.release(s)                  # ...and B releases it concurrently
+    t.join(timeout=5)
+    assert not t.is_alive()
+    assert not errs, errs
+    with pool._lock:
+        assert not set(pool._active) & set(pool._idle)
     pool.close()
 
 
