@@ -3,6 +3,9 @@
 ``python -m benchmarks.run [--quick] [--json [PATH]]`` executes:
   p2p          (paper Figs. 3-5: RMA latency/bandwidth)
   collectives  (paper Fig. 6: OMPCCL vs flat collectives)
+  grad_reduce  (per-param vs bucketed DP gradient reduction; gates the
+                shipped bucketed schedule: faster at smoke-CI mesh sizes,
+                within 5% at the largest modeled mesh)
   matmul       (paper Fig. 7: Cannon ring matmul scaling, 3 overlap modes)
   minimod      (paper Fig. 8 + Listings 1-2: halo exchange + LOC)
   streams      (paper §3.2: stream-pool policy throughput)
@@ -50,8 +53,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset (p2p,collectives,matmul,"
-                         "minimod,streams,kvcache)")
+                    help="comma-separated subset (p2p,collectives,"
+                         "grad_reduce,matmul,minimod,streams,kvcache)")
     ap.add_argument("--json", nargs="?", const=SUMMARY_DEFAULT, default=None,
                     metavar="PATH",
                     help="write the consolidated BENCH_summary.json "
@@ -65,6 +68,7 @@ def main(argv=None):
     table = {
         "p2p": bench_p2p.run,
         "collectives": bench_collectives.run,
+        "grad_reduce": bench_collectives.run_grad_reduce,
         "matmul": bench_matmul.run,
         "minimod": bench_minimod.run,
         "streams": bench_streams.run,

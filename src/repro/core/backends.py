@@ -58,6 +58,9 @@ __all__ = [
     "ring_allreduce_time",
     "ring_allgather_time",
     "hierarchical_allreduce_time",
+    "per_param_reduce_time",
+    "bucketed_reduce_time",
+    "overlapped_reduce_time",
 ]
 
 
@@ -98,6 +101,19 @@ def group_rank(group: DiompGroup):
     for ax in group.axes:
         rank = rank * axis_size(ax) + lax.axis_index(ax)
     return rank
+
+
+def payload_bytes(x) -> int:
+    """Static payload size of a (possibly traced) operand pytree — the ONE
+    byte counter behind both the communicator wire-volume log and the
+    analytic backend's cost estimates."""
+    total = 0
+    for leaf in jax.tree.leaves(x):
+        n = 1
+        for d in getattr(leaf, "shape", ()):
+            n *= int(d)
+        total += n * jnp.dtype(getattr(leaf, "dtype", jnp.float32)).itemsize
+    return total
 
 
 def group_size(group: DiompGroup) -> int:
@@ -285,15 +301,46 @@ class HierarchicalBackend(CclBackend):
         x = ensure_varying(x, _axes(group))
         return hierarchical_allreduce(x, group, op=op)
 
+    def reducescatter(self, x, group: DiompGroup, *, axis: int = 0):
+        """Fast-axes-first reduce-scatter: the payload is cut to 1/F
+        intra-pod before anything crosses the slow inter-pod link.
+
+        Shard order is therefore fast-major — the exact inverse of this
+        backend's ``allgather(invariant=True)``, so an RS -> invariant-AG
+        pair through one hierarchical handle reconstructs the flat result
+        (the bucketed overlap path's contract).  It is NOT the row-major
+        shard order of the flat backend, and the handle's *non-invariant*
+        allgather keeps the row-major concat order (the standalone
+        gather-a-sharded-tensor contract) — pairing RS with
+        ``invariant=False`` returns element-permuted data.
+        """
+        if len(group.axes) < 2:
+            return super().reducescatter(x, group, axis=axis)
+        slow, fast = group.axes[0], group.axes[1:]
+        out = ensure_varying(x, _axes(group))
+        for ax in (*fast, slow):
+            out = lax.psum_scatter(out, ax, scatter_dimension=axis,
+                                   tiled=True)
+        return out
+
     def allgather(self, x, group: DiompGroup, *, axis: int = 0,
                   tiled: bool = True, invariant: bool = False):
-        if len(group.axes) >= 2 and tiled and not invariant:
-            from repro.distributed.hierarchical import hierarchical_allgather
+        if len(group.axes) < 2 or not tiled:
+            return super().allgather(x, group, axis=axis, tiled=tiled,
+                                     invariant=invariant)
+        x = ensure_varying(x, _axes(group))
+        if invariant:
+            # slow link first, while the payload is smallest (1/(F·S) ->
+            # 1/F crosses inter-pod; the fast axes finish intra-pod) —
+            # inverts this backend's reducescatter step for step
+            slow, fast = group.axes[0], group.axes[1:]
+            out = x
+            for ax in (slow, *reversed(fast)):
+                out = all_gather_invariant(out, ax, axis=axis, tiled=tiled)
+            return out
+        from repro.distributed.hierarchical import hierarchical_allgather
 
-            x = ensure_varying(x, _axes(group))
-            return hierarchical_allgather(x, group, axis=axis)
-        return super().allgather(x, group, axis=axis, tiled=tiled,
-                                 invariant=invariant)
+        return hierarchical_allgather(x, group, axis=axis)
 
 
 class CompressedBackend(CclBackend):
@@ -340,19 +387,9 @@ class AnalyticBackend(CclBackend):
         self.link = link or LinkModel()
         self.estimates: List[dict] = []
 
-    def _payload_bytes(self, x) -> int:
-        total = 0
-        for leaf in jax.tree.leaves(x):
-            shape = getattr(leaf, "shape", ())
-            n = 1
-            for d in shape:
-                n *= int(d)
-            total += n * jnp.dtype(getattr(leaf, "dtype", jnp.float32)).itemsize
-        return total
-
     def _note(self, op: str, x, group: DiompGroup, time_fn) -> None:
         try:
-            nbytes = self._payload_bytes(x)
+            nbytes = payload_bytes(x)
             ndev = group_size(group)
             est = time_fn(nbytes, ndev)
         except Exception:  # noqa: BLE001 - cost model must never break trace
@@ -450,6 +487,12 @@ class LinkModel:
 
     bandwidth_Bps: float = 50e9  # ~50 GB/s per link direction
     latency_s: float = 1e-6  # per-hop launch latency
+    dispatch_s: float = 5e-6  # host/XLA launch overhead per collective
+
+    def collective_time(self, nbytes: int, ndev: int) -> float:
+        """One ring all-reduce including the per-call dispatch overhead —
+        the unit cost both gradient-reduction schedules are built from."""
+        return self.dispatch_s + ring_allreduce_time(nbytes, ndev, self)
 
 
 def ring_allreduce_time(bytes_: int, ndev: int, link: LinkModel = LinkModel()) -> float:
@@ -479,3 +522,70 @@ def hierarchical_allreduce_time(
     t_ar = ring_allreduce_time(bytes_ // max(intra, 1), inter, inter_link)
     t_ag = ring_allgather_time(bytes_, intra, intra_link)
     return t_rs + t_ar + t_ag
+
+
+def per_param_reduce_time(sizes_bytes: Sequence[int], ndev: int,
+                          link: LinkModel = LinkModel(),
+                          *, compute_s: float = 0.0) -> float:
+    """The per-param issue schedule: the whole backward finishes, then one
+    collective per parameter runs back-to-back — nothing overlaps."""
+    return compute_s + sum(link.collective_time(b, ndev) for b in sizes_bytes)
+
+
+def bucketed_reduce_time(bucket_bytes: Sequence[int], ndev: int,
+                         link: LinkModel = LinkModel(),
+                         *, compute_s: float = 0.0) -> float:
+    """The NON-overlap bucketed schedule (``overlap_grad_reduce=False`` or
+    ``microbatch == 1``): the whole backward finishes, then every bucket's
+    all-reduce runs back-to-back — exactly what ``reduce_bucketed`` issues
+    after the scan.  On a layout whose raw parameter count is already
+    small (stacked-layer schemas) this *loses* to per-param issue by the
+    extra dispatches; the shipped win comes from the overlap pipeline
+    (:func:`overlapped_reduce_time`) plus the per-call padding/group-
+    resolution overhead the LinkModel does not charge.
+
+    The serial cost model is identical to per-param issue — one collective
+    per payload after the compute — so this delegates to
+    :func:`per_param_reduce_time`; only the payload list differs.
+    """
+    return per_param_reduce_time(bucket_bytes, ndev, link,
+                                 compute_s=compute_s)
+
+
+def overlapped_reduce_time(bucket_bytes: Sequence[int], ndev: int,
+                           link: LinkModel = LinkModel(),
+                           *, compute_s: float = 0.0,
+                           microbatches: int = 1) -> float:
+    """The backward-overlap schedule build_train_step actually ships with
+    ``overlap_grad_reduce`` and ``microbatch = k``: every microbatch's
+    buckets reduce-scatter under the NEXT microbatch's backward, and one
+    all-gather per bucket trails the scan.
+
+    Wire volume is ``(k + 1)·B·(n-1)/n`` per bucket (k one-phase RS + one
+    one-phase AG) vs the single allreduce's ``2B(n-1)/n`` — the price of
+    pipelining — so this model, not :func:`bucketed_reduce_time`, is what
+    the CI gate must also check: in a wire-bound regime the extra
+    reduce-scatters can lose to per-param issue even when the one-shot
+    bucketed schedule wins.
+    """
+    buckets = list(bucket_bytes)
+    k = max(microbatches, 1)
+    if not buckets:
+        return compute_s
+
+    def phase(b):  # one RS or AG pass: half an allreduce + its dispatch
+        if ndev <= 1:
+            return link.dispatch_s
+        return link.dispatch_s + (ndev - 1) * (
+            link.latency_s + b / (ndev * link.bandwidth_Bps))
+
+    per_slot_compute = compute_s / (k * len(buckets))
+    done = 0.0
+    slot = 0
+    for _ in range(k):
+        for b in buckets:
+            slot += 1
+            done = max(done, slot * per_slot_compute) + phase(b)
+    for b in buckets:            # trailing all-gathers: nothing hides them
+        done += phase(b)
+    return done

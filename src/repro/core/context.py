@@ -69,30 +69,46 @@ class Communicator:
     the backend choice made at handle creation governs *all* collectives
     and RMA verbs issued through it.  All methods are usable inside
     ``shard_map``.
+
+    Alongside the per-op call counts, each op's *payload bytes* accumulate
+    in a parallel per-group byte log (``DiompContext.byte_stats()``): the
+    bucketed gradient path is sized in whole flat buckets, and the byte log
+    is how benchmarks/tests verify the planned wire volume without parsing
+    HLO.  Counts and bytes are trace-time numbers (one entry per call site
+    per trace), same as the seed's call-count semantics — except that
+    delegating ops (``reduce`` via ``allreduce``, ``get`` via ``put``)
+    log their bytes only at the leaf op, so summing a group's ops never
+    double-counts wire volume.
     """
 
-    __slots__ = ("group", "backend", "calls")
+    __slots__ = ("group", "backend", "calls", "nbytes")
 
     def __init__(self, group: DiompGroup, backend: CclBackend,
-                 calls: Dict[str, int]):
+                 calls: Dict[str, int], nbytes: Dict[str, int]):
         self.group = group
         self.backend = backend
-        self.calls = calls  # shared across handles of the same group
+        self.calls = calls    # shared across handles of the same group
+        self.nbytes = nbytes  # op -> cumulative payload bytes, same sharing
 
-    def record(self, op: str) -> None:
+    def record(self, op: str, payload=None) -> None:
         self.calls[op] = self.calls.get(op, 0) + 1
+        if payload is not None:
+            self.nbytes[op] = self.nbytes.get(op, 0) \
+                + _backends.payload_bytes(payload)
 
     # -- collectives --------------------------------------------------------
     def allreduce(self, x, *, op: str = "sum"):
         """ompx_allreduce: reduction across the group, result everywhere."""
-        self.record("allreduce")
+        self.record("allreduce", x)
         return self.backend.allreduce(x, self.group, op=op)
 
     def reduce(self, x, *, root: int = 0, op: str = "sum"):
         """ompx_reduce: like allreduce but only ``root`` keeps the result
         (others receive zeros), matching MPI_Reduce semantics in SPMD form.
         Runs through this handle's backend, so hierarchical/compressed
-        wire paths apply here too."""
+        wire paths apply here too.  Counts only: the inner allreduce logs
+        the payload bytes, so the wire-volume log stays exact for
+        delegating ops."""
         self.record("reduce")
         full = self.allreduce(x, op=op)
         rank = _backends.group_rank(self.group)
@@ -100,7 +116,7 @@ class Communicator:
 
     def bcast(self, x, *, root: int = 0):
         """ompx_bcast: root's value delivered to every group member."""
-        self.record("bcast")
+        self.record("bcast", x)
         return self.backend.bcast(x, self.group, root=root)
 
     def allgather(self, x, *, axis: int = 0, tiled: bool = True,
@@ -110,24 +126,24 @@ class Communicator:
         ``invariant=True`` uses the Varying->Invariant gather: same wire
         bytes, but the type system records that every member ends with
         identical data.  Inference paths use it."""
-        self.record("allgather")
+        self.record("allgather", x)
         return self.backend.allgather(x, self.group, axis=axis, tiled=tiled,
                                       invariant=invariant)
 
     def reducescatter(self, x, *, axis: int = 0):
         """ompx_reducescatter: sum across group, scatter along ``axis``."""
-        self.record("reducescatter")
+        self.record("reducescatter", x)
         return self.backend.reducescatter(x, self.group, axis=axis)
 
     def alltoall(self, x, *, split_axis: int = 0, concat_axis: int = 0):
         """ompx_alltoall — the MoE dispatch primitive."""
-        self.record("alltoall")
+        self.record("alltoall", x)
         return self.backend.alltoall(x, self.group, split_axis=split_axis,
                                      concat_axis=concat_axis)
 
     def permute(self, x, *, shift: int = 1):
         """Ring permute within the group — the transport under ompx_put."""
-        self.record("permute")
+        self.record("permute", x)
         return self.backend.permute(x, self.group, shift=shift)
 
     def barrier(self):
@@ -138,17 +154,18 @@ class Communicator:
     # -- one-sided RMA ------------------------------------------------------
     def put(self, x, *, shift: int = 1):
         """One-sided put to the rank ``shift`` ahead on the group's ring."""
-        self.record("put")
+        self.record("put", x)
         return self.backend.put(x, self.group, shift=shift)
 
     def put_perm(self, x, perm: Sequence[Tuple[int, int]]):
         """General one-sided put along an arbitrary (src, dst) permutation."""
-        self.record("put")
+        self.record("put", x)
         return self.backend.put_perm(x, self.group, perm)
 
     def get(self, x, *, shift: int = 1):
         """One-sided get of the shard owned by the rank ``shift`` ahead
-        (a read = a put with inverted permutation)."""
+        (a read = a put with inverted permutation).  Counts only: the
+        inner put logs the payload bytes once."""
         self.record("get")
         return self.put(x, shift=-shift)
 
@@ -158,7 +175,7 @@ class Communicator:
 
     def halo_exchange(self, x, *, halo: int, axis: int = 0):
         """Minimod's halo pattern (paper Listing 1) as one fused exchange."""
-        self.record("halo_exchange")
+        self.record("halo_exchange", x)
         return self.backend.halo_exchange(x, self.group, halo=halo, axis=axis)
 
     # -- introspection ------------------------------------------------------
@@ -183,6 +200,7 @@ class CommTable:
     def __init__(self):
         self._comms: Dict[Tuple[str, str], Communicator] = {}
         self._calls: Dict[str, Dict[str, int]] = {}
+        self._nbytes: Dict[str, Dict[str, int]] = {}
         self._backends: Dict[str, CclBackend] = {}
 
     def backend_instance(self, backend: BackendLike,
@@ -206,7 +224,8 @@ class CommTable:
         key = (group.descriptor(), bkey)
         if key not in self._comms:
             calls = self._calls.setdefault(key[0], {})
-            self._comms[key] = Communicator(group, inst, calls)
+            nbytes = self._nbytes.setdefault(key[0], {})
+            self._comms[key] = Communicator(group, inst, calls, nbytes)
         return self._comms[key]
 
     def reset(self) -> None:
@@ -220,10 +239,20 @@ class CommTable:
         """
         for calls in self._calls.values():
             calls.clear()
+        for nbytes in self._nbytes.values():
+            nbytes.clear()
 
     def stats(self) -> Dict[str, Dict[str, int]]:
         """descriptor -> per-op call counts, aggregated over backends."""
         return {k: dict(v) for k, v in self._calls.items() if v}
+
+    def byte_stats(self) -> Dict[str, Dict[str, int]]:
+        """descriptor -> per-op cumulative payload bytes (see Communicator).
+
+        A separate log (not folded into :meth:`stats`) so call-count
+        consumers keep their exact historical shape.
+        """
+        return {k: dict(v) for k, v in self._nbytes.items() if v}
 
 
 class DiompContext:
@@ -293,6 +322,11 @@ class DiompContext:
     def stats(self) -> Dict[str, Dict[str, int]]:
         """Per-group, per-op collective call counts (the OMPCCL call log)."""
         return self.comms.stats()
+
+    def byte_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-group, per-op cumulative payload bytes (the wire-volume log
+        the bucketed gradient path is audited against)."""
+        return self.comms.byte_stats()
 
     def reset_stats(self) -> None:
         self.comms.reset()

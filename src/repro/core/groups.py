@@ -25,6 +25,7 @@ Split/merge semantics:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 from typing import Optional, Sequence, Tuple
 
@@ -34,6 +35,7 @@ from jax.sharding import Mesh
 __all__ = [
     "DiompGroup",
     "GroupError",
+    "group_for_axes",
     "world_group",
     "merge",
 ]
@@ -106,15 +108,35 @@ class DiompGroup:
         On real multi-host deployments every host derives the same descriptor
         from the same mesh + axes, which is how we validate that all hosts
         constructed consistent communicators before any collective runs.
+
+        The digest is memoized on the instance: descriptors key every
+        communicator-table lookup, so hot paths (one lookup per collective
+        per trace) must not re-hash.
         """
-        h = hashlib.sha256(("|".join(self.axes)).encode()).hexdigest()[:16]
-        return f"diomp-group-{self.name}-{h}"
+        memo = self.__dict__.get("_descriptor")
+        if memo is None:
+            h = hashlib.sha256(("|".join(self.axes)).encode()).hexdigest()[:16]
+            memo = f"diomp-group-{self.name}-{h}"
+            object.__setattr__(self, "_descriptor", memo)
+        return memo
 
     def is_self_group(self) -> bool:
         return not self.axes
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         return f"DiompGroup({self.name}: axes={self.axes})"
+
+
+@functools.lru_cache(maxsize=None)
+def group_for_axes(axes: Tuple[str, ...]) -> DiompGroup:
+    """Interned group handle for an axis tuple.
+
+    Gradient reduction used to construct ``DiompGroup(need)`` afresh for
+    every parameter on every trace (validation + descriptor hashing each
+    time); axis tuples are tiny and few, so the handles are interned here
+    and shared by every call site that keys groups by axes alone.
+    """
+    return DiompGroup(tuple(axes))
 
 
 def world_group(mesh: Mesh) -> DiompGroup:

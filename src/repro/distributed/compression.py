@@ -36,16 +36,35 @@ __all__ = [
 ]
 
 
-def quantize_int8(x) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Symmetric per-tensor int8: q = round(x/scale), scale = amax/127."""
-    amax = jnp.max(jnp.abs(x))
+def quantize_int8(x, *, block: Optional[int] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8: q = round(x/scale), scale = amax/127.
+
+    ``block=None`` keeps the historical per-tensor scale.  With ``block``
+    set, ``x`` must be flat with ``size % block == 0`` and one scale is
+    emitted per ``block`` contiguous elements — the granularity a flat
+    gradient *bucket* needs, where a single per-bucket amax would let one
+    large-magnitude tensor wipe out the resolution of every small-gradient
+    tensor packed beside it.
+    """
+    if block is None:
+        amax = jnp.max(jnp.abs(x))
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+    blocks = x.astype(jnp.float32).reshape(-1, block)
+    amax = jnp.max(jnp.abs(blocks), axis=1)
     scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127
+                 ).astype(jnp.int8).reshape(x.shape)
     return q, scale
 
 
-def dequantize_int8(q, scale):
-    return q.astype(jnp.float32) * scale
+def dequantize_int8(q, scale, *, block: Optional[int] = None):
+    if block is None:
+        return q.astype(jnp.float32) * scale
+    return (q.reshape(-1, block).astype(jnp.float32) * scale[:, None]
+            ).reshape(q.shape)
 
 
 def compressed_allreduce(
@@ -53,15 +72,22 @@ def compressed_allreduce(
     group: DiompGroup,
     *,
     error: Optional[jnp.ndarray] = None,
+    block: Optional[int] = None,
 ):
     """int8 all-reduce with error feedback (ZeRO++ qgZ-style two phase).
 
-    Phase 1: all-to-all the int8 chunks + all-gather the per-rank scales,
-    dequantize each received chunk with its *source* scale and reduce
-    locally (an exact compressed-domain reduce-scatter).  Phase 2:
-    re-quantize the reduced shard and all-gather it.  Wire traffic is int8
-    payload + one f32 scale per rank per phase; the only lossy steps are the
-    two quantizations, whose residual feeds back via ``error``.
+    Phase 1: all-to-all the int8 chunks + all-gather the scales, dequantize
+    each received chunk with its *source* scale and reduce locally (an exact
+    compressed-domain reduce-scatter).  Phase 2: re-quantize the reduced
+    shard and all-gather it.  Wire traffic is int8 payload + f32 scales per
+    phase; the only lossy steps are the two quantizations, whose residual
+    feeds back via ``error``.
+
+    ``block`` selects per-block scales (see :func:`quantize_int8`) — the
+    granularity the bucketed gradient path uses, with ONE error-feedback
+    state per bucket.  A flat payload already padded to ``n * block``
+    (the bucket layout guarantees this) takes the no-pad fast path: no
+    reshape/pad round-trip per call.
 
     Returns ``(mean_grad, new_error)``.
     """
@@ -72,34 +98,52 @@ def compressed_allreduce(
         n *= axis_size(ax)
     orig_shape, orig_dtype = x.shape, x.dtype
     flat = x.astype(jnp.float32).reshape(-1)
-    pad = (-flat.size) % n
+    pad = (-flat.size) % (n * block if block else n)
     if pad:
         flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
 
-    q, scale = quantize_int8(flat)
+    q, scale = quantize_int8(flat, block=block)
     # phase 1 wire: chunk i of my int8 payload -> rank i; scales broadcast
     chunks = q.reshape(n, -1)
     recv = lax.all_to_all(chunks, group.lax_axes, split_axis=0, concat_axis=0, tiled=True)
-    scales = scale.reshape(1)
+    scales = scale if block else scale.reshape(1)
     for ax in reversed(group.axes):
         scales = lax.all_gather(scales, ax, axis=0, tiled=True)
-    shard = jnp.sum(recv.astype(jnp.float32) * scales[:, None], axis=0) / n
+    if block:
+        # (n, B) source-major scale table; my chunk spans blocks
+        # [rank*Bc, (rank+1)*Bc) of every source's payload
+        from repro.core.backends import group_rank
+
+        bc = chunks.shape[1] // block
+        scales = scales.reshape(n, -1)
+        mine = lax.dynamic_slice_in_dim(scales, group_rank(group) * bc, bc,
+                                        axis=1)
+        shard = jnp.sum(
+            recv.reshape(n, bc, block).astype(jnp.float32) * mine[:, :, None],
+            axis=0).reshape(-1) / n
+    else:
+        shard = jnp.sum(recv.astype(jnp.float32) * scales[:, None], axis=0) / n
 
     # phase 2 wire: re-quantized reduced shard all-gathered back (invariant:
     # every rank reconstructs the same reduced tensor)
-    q2, s2 = quantize_int8(shard)
+    q2, s2 = quantize_int8(shard, block=block)
     gathered = q2
     for ax in reversed(group.axes):
         gathered = all_gather_invariant(gathered, ax, axis=0, tiled=True)
-    s2_all = s2.reshape(1)
+    s2_all = s2 if block else s2.reshape(1)
     for ax in reversed(group.axes):
         s2_all = all_gather_invariant(s2_all, ax, axis=0, tiled=True)
-    out = (gathered.reshape(n, -1).astype(jnp.float32) * s2_all[:, None]).reshape(-1)
+    if block:
+        out = (gathered.reshape(-1, block).astype(jnp.float32)
+               * s2_all[:, None]).reshape(-1)
+    else:
+        out = (gathered.reshape(n, -1).astype(jnp.float32) * s2_all[:, None]).reshape(-1)
+    deq = dequantize_int8(q, scale, block=block)
     if pad:
         out = out[:-pad]
         flat = flat[:-pad]
-        q = q[:-pad]
-    new_error = flat - dequantize_int8(q, scale)
+        deq = deq[:-pad]
+    new_error = flat - deq
     return out.reshape(orig_shape).astype(orig_dtype), new_error.reshape(orig_shape).astype(orig_dtype)
 
 
@@ -132,13 +176,16 @@ def topk_allreduce(
     return reduced.reshape(x.shape), new_error.reshape(x.shape)
 
 
-def wire_bytes(numel: int, *, codec: str, k: int = 0) -> int:
+def wire_bytes(numel: int, *, codec: str, k: int = 0,
+               block: Optional[int] = None) -> int:
     """Bytes on the wire per rank for one reduce — roofline accounting."""
     if codec == "f32":
         return 4 * numel
     if codec == "bf16":
         return 2 * numel
     if codec == "int8":
+        if block:
+            return numel + 4 * (-(-numel // block))  # payload + per-block scales
         return numel + 4  # payload + scale
     if codec == "topk":
         return 8 * k      # (f32 value + i32 index) per kept entry

@@ -275,6 +275,17 @@ class OverlapPlanner:
             b //= 2
         return b
 
+    # -- gradient buckets -----------------------------------------------------
+    def plan_grad_buckets(self, cfg, mesh, ctx):
+        """The DP gradient-reduction schedule (see
+        :mod:`repro.distributed.buckets`) — exposed here so every planned
+        schedule (ring steps, kernel tiles, reduction buckets) resolves
+        through the one planner surface.  Like every other plan it is pure
+        static-shape data, cached per (config, mesh, ctx)."""
+        from repro.distributed.buckets import plan_for_config
+
+        return plan_for_config(cfg, mesh, ctx)
+
     # -- stencil slab ---------------------------------------------------------
     def plan_stencil_bz(self, z: int, y: int, x: int, dtype,
                         *, radius: int = 4, bz: int = 8) -> int:

@@ -9,6 +9,7 @@ import jax
 from jax.sharding import Mesh
 
 from repro.core.groups import DiompGroup
+from repro.distributed.buckets import DEFAULT_BUCKET_BYTES
 
 __all__ = ["ModelConfig", "ParallelCtx"]
 
@@ -129,6 +130,19 @@ class ParallelCtx:
     # knobs (the §Perf hillclimb surface)
     dp_backend: str = "hierarchical"   # flat | hierarchical
     grad_codec: str = "none"           # none | int8 | topk
+    bucket_bytes: int = DEFAULT_BUCKET_BYTES  # DP grad bucket size; grads
+    #                                    are packed into flat f32 buckets of
+    #                                    this many bytes per (group, dtype,
+    #                                    dup) partition and reduced whole-
+    #                                    bucket through one communicator
+    #                                    handle.  0 disables bucketing (the
+    #                                    per-param baseline path).
+    overlap_grad_reduce: bool = True   # reduce-scatter bucket partial sums
+    #                                    inside the microbatch accumulation
+    #                                    scan (carry holds 1/|group| shards),
+    #                                    one invariant all-gather per bucket
+    #                                    after the scan; requires bucketing,
+    #                                    microbatch > 1 and grad_codec="none"
     use_ring_matmul: bool = False      # Cannon-style TP matmul overlap
     ring_impl: str = "auto"            # auto | fused (bidirectional, planner-
     #                                    scheduled) | host (unidirectional XLA-

@@ -16,9 +16,27 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["adamw", "adafactor", "cosine_schedule", "Optimizer",
-           "global_norm", "clip_by_global_norm"]
+           "global_norm", "clip_by_global_norm", "bucketed_sq_norm"]
 
 F32 = jnp.float32
+
+
+def bucketed_sq_norm(bufs: Dict[str, jax.Array], plan) -> jax.Array:
+    """Local sum-of-squares of reduced flat gradient buckets, each weighted
+    by 1/duplication (replicated copies count once in the global norm).
+
+    The flat-bucket counterpart of the per-param loop in
+    ``train.step.sharded_global_norm``: every member of a bucket shares one
+    duplication factor by construction (it is part of the bucket partition
+    key), so one fused ``sum(buf**2) / dup`` per bucket replaces one
+    weighted reduction per parameter; bucket padding is zeros and
+    contributes nothing.  The caller still owns the single cross-device
+    psum + sqrt.
+    """
+    total = jnp.zeros((), F32)
+    for b in plan.buckets:
+        total = total + jnp.sum(bufs[b.key].astype(F32) ** 2) / b.dup
+    return total
 
 
 @dataclasses.dataclass(frozen=True)

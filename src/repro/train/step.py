@@ -13,11 +13,27 @@ Gradient-reduction strategy (DESIGN.md §4):
   inter-pod psum to OMPCCL.
 * ``ctx.explicit_dp=False`` (the MPI+X-shaped baseline): AD's automatic
   pvary-transpose psums do the reduction implicitly inside XLA.
+
+Bucketing + backward overlap (the §Perf reduction path):
+
+* With ``ctx.bucket_bytes > 0`` (the default) the per-param reduction is
+  replaced by the planned flat-bucket schedule of
+  :mod:`repro.distributed.buckets`: the gradient pytree is packed into
+  fixed-byte f32 buckets per (group, dtype, dup) partition and each bucket
+  reduces through ONE communicator handle — ``ceil(bytes / bucket_bytes)``
+  collectives per partition instead of one per parameter.
+* With ``ctx.overlap_grad_reduce`` (and ``microbatch > 1``,
+  ``grad_codec="none"``) the microbatch ``lax.scan`` carries *reduce-
+  scattered* bucket partial sums: each microbatch's bucket gradients
+  reduce-scatter inside the accumulation loop (ZeRO-style — the shard is
+  1/|group| of the bucket, and the wire work rides under the next
+  microbatch's backward), and one invariant all-gather per bucket after
+  the scan completes the mean.  Numerically this is the same psum, split
+  RS+AG and pipelined.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -29,27 +45,19 @@ from repro.core.compat import HAS_VMA, shard_map
 
 from repro.core import ompccl
 from repro.core.context import default_context
+from repro.core.groups import group_for_axes
+from repro.distributed import buckets as bk
+from repro.distributed.buckets import unreduced_dp_axes as _unreduced_dp_axes
 from repro.distributed.compression import compressed_allreduce
 from repro.models import api as model_api
 from repro.models import schema as sch
 from repro.models.config import ModelConfig, ParallelCtx
-from .optim import Optimizer
+from .optim import Optimizer, bucketed_sq_norm
 
 __all__ = ["build_train_step", "opt_state_specs", "reduce_gradients",
            "sharded_global_norm"]
 
 F32 = jnp.float32
-
-
-def _unreduced_dp_axes(pspec: P, dp_axes) -> tuple:
-    """The DP axes a parameter's sharding does NOT consume — exactly the
-    axes its gradient still needs a cross-device reduction over."""
-    spec_axes = set()
-    for part in pspec:
-        if part is None:
-            continue
-        spec_axes |= set(part if isinstance(part, tuple) else (part,))
-    return tuple(a for a in dp_axes if a not in spec_axes)
 
 
 def _spec_drop_dim(spec: P, rank: int, drop: int) -> P:
@@ -79,58 +87,65 @@ def opt_state_specs(cfg: ModelConfig, mesh: Mesh, optimizer_name: str,
     return out
 
 
-def _dup_factor(name: str, cfg: ModelConfig, mesh: Mesh) -> int:
-    """How many devices hold a copy of each element of param ``name``."""
-    from repro.distributed.sharding import DEFAULT_RULES, logical_to_spec
-
-    spec = logical_to_spec(sch.build_schema(cfg)[name].axes, mesh)
-    sharded = 1
-    for part in spec:
-        if part is None:
-            continue
-        for ax in (part if isinstance(part, tuple) else (part,)):
-            sharded *= mesh.shape[ax]
-    return mesh.devices.size // sharded
-
-
 def sharded_global_norm(grads, cfg: ModelConfig, ctx: ParallelCtx, mesh: Mesh,
-                        pspecs: Optional[dict] = None):
+                        pspecs: Optional[dict] = None, *, plan=None,
+                        bufs=None):
     """Global L2 norm of a sharded gradient pytree.
 
     Each param's local sum-of-squares is weighted by 1/duplication (so
     replicated copies count once), then psum'd across the world group.
+
+    When the reduced flat buckets are still at hand (``plan`` + ``bufs``
+    from the bucketed reduction), the bucketed local sums are used
+    directly — one fused sum per bucket instead of one per parameter; only
+    the plan's unbucketed params walk the per-param loop.
     """
-    if pspecs is None:
-        from repro.distributed.sharding import rules_for_ctx
-        pspecs = sch.partition_specs(cfg, mesh, rules_for_ctx(ctx))
-    sizes = dict(mesh.shape)
     total = jnp.zeros((), F32)
-    for name, g in grads.items():
-        sharded = 1
-        for part in pspecs[name]:
-            if part is None:
-                continue
-            for ax in (part if isinstance(part, tuple) else (part,)):
-                sharded *= sizes[ax]
-        dup = mesh.devices.size // sharded
-        total = total + jnp.sum(g.astype(F32) ** 2) / dup
+    if plan is not None and bufs is not None:
+        total = total + bucketed_sq_norm(bufs, plan)
+        for name in plan.local:
+            total = total + jnp.sum(grads[name].astype(F32) ** 2) \
+                / plan.dups[name]
+    else:
+        if pspecs is None:
+            from repro.distributed.sharding import rules_for_ctx
+            pspecs = sch.partition_specs(cfg, mesh, rules_for_ctx(ctx))
+        sizes = dict(mesh.shape)
+        for name, g in grads.items():
+            dup = bk.duplication_factor(pspecs[name], sizes)
+            total = total + jnp.sum(g.astype(F32) ** 2) / dup
     total = default_context().communicator(ctx.world).allreduce(total)
     return jnp.sqrt(total)
 
 
 def reduce_gradients(grads: Dict[str, jax.Array], cfg: ModelConfig,
                      ctx: ParallelCtx, errors: Optional[dict] = None,
-                     pspecs: Optional[dict] = None, mesh: Optional[Mesh] = None):
-    """Explicit DP mean-reduction per parameter through OMPCCL.
+                     pspecs: Optional[dict] = None, mesh: Optional[Mesh] = None,
+                     plan=None):
+    """Explicit DP mean-reduction through OMPCCL.
 
     Input grads are per-device (params were pvary'd over DP).  A parameter
     needs reduction only over the DP axes its own sharding does NOT use:
     ZeRO-3 / expert2d shards already had their cross-shard sums folded in by
     AD (the all_gather transpose / the all_to_all round trip).  Returns
     (reduced_grads, new_errors).
+
+    Dispatch: with a :class:`~repro.distributed.buckets.BucketPlan` — passed
+    in, or derivable (``mesh`` given and ``ctx.bucket_bytes > 0``) — whole
+    flat buckets reduce through one communicator handle each (errors keyed
+    by bucket).  Otherwise the per-param baseline path runs: one collective
+    per parameter, errors keyed by name.
     """
-    from repro.core.groups import DiompGroup
     from repro.distributed.sharding import rules_for_ctx
+
+    if plan is None and mesh is not None and ctx.bucket_bytes:
+        plan = bk.plan_for_config(cfg, mesh, ctx)
+    if plan is not None:
+        # vary over every world axis: bucket members carry different vma
+        # sets (their own sharded axes differ) and a concat must agree
+        out, _bufs, new_errors = bk.reduce_bucketed(
+            grads, plan, ctx, errors=errors, vary=tuple(ctx.world.axes))
+        return out, new_errors
 
     if pspecs is None:
         pspecs = sch.partition_specs(cfg, mesh, rules_for_ctx(ctx))
@@ -144,15 +159,13 @@ def reduce_gradients(grads: Dict[str, jax.Array], cfg: ModelConfig,
         if not need:
             out[name] = g
             continue
-        group = DiompGroup(need)
+        group = group_for_axes(need)
         if ctx.grad_codec == "int8" and set(need) == set(dp_axes):
             err = errors.get(name) if errors else None
             g, e = compressed_allreduce(g * ctx.dp, group, error=err)
             new_errors[name] = e
         else:
-            backend = ("hierarchical"
-                       if ctx.dp_backend == "hierarchical"
-                       and "pod" in need and len(need) > 1 else "xla")
+            backend = bk.backend_for_axes(need, ctx)
             g = dctx.communicator(group, backend).allreduce(g)
         out[name] = g
     return out, new_errors
@@ -185,7 +198,7 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
     import dataclasses
 
     from repro.distributed.sharding import rules_for_ctx
-    from repro.kernels.plan import resolve_ring_impl
+    from repro.kernels.plan import default_planner, resolve_ring_impl
 
     # resolve the ring-matmul schedule ONCE so the whole step traces against
     # one concrete plan (fused bidirectional unless the ctx pins "host")
@@ -195,10 +208,17 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
     pspecs = sch.partition_specs(cfg, mesh, rules)
     ospecs = opt_state_specs(cfg, mesh, optimizer_name, rules)
     dp_axes = ctx.dp_group.axes
+    all_axes = tuple(mesh.axis_names)
+    mesh_sizes = dict(mesh.shape)
     if not global_batch:  # default: assume a dp-divisible batch
         global_batch = ctx.dp
     _, bspecs = model_api.batch_structs(cfg, mesh, global_batch, 1,
                                         dp_axes=dp_axes)
+
+    # the reduction schedule, like the ring schedule, is resolved once at
+    # build time: static shapes in, flat-bucket index maps out
+    plan = (default_planner().plan_grad_buckets(cfg, mesh, ctx)
+            if ctx.explicit_dp and dp_axes and ctx.bucket_bytes else None)
 
     def step(params, opt_state, batch, step_idx):
         # DiOMP mode: per-device grads, reduction owned by OMPCCL
@@ -212,6 +232,11 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
         k = max(min(ctx.microbatch, b_local), 1)
         while b_local % k:          # clamp to a divisor of the local batch
             k -= 1
+        # buckets RS inside the scan, AG after it (backward overlap)?
+        overlap = (plan is not None and plan.buckets and k > 1
+                   and ctx.overlap_grad_reduce and ctx.grad_codec == "none")
+        bufs = None
+        reduced = False
         if k > 1:
             mbs = jax.tree.map(
                 lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch)
@@ -233,28 +258,80 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
                 return {n: ompccl.ensure_varying(v, leaf_axes(n))
                         for n, v in g.items()}
 
-            all_axes = tuple(mesh.axis_names)
+            if overlap:
+                # resolved at trace time like every other collective site
+                dctx = default_context()
+                comms = {b.key: dctx.communicator(
+                    b.group, bk.backend_for_bucket(b, ctx))
+                    for b in plan.buckets}
 
-            def micro(carry, mb):
-                loss_acc, g_acc = carry
-                l, g = jax.value_and_grad(local_loss)(p_diff, mb)
-                g_acc = {n: g_acc[n] + g[n].astype(F32) for n in g_acc}
-                # scalar loss: canonicalize to all mesh axes (an unsharded-
-                # vocab CE stays model-varying; a sharded one does not)
-                return (ompccl.ensure_varying(loss_acc + l, all_axes),
-                        norm_g(g_acc)), None
+                def micro(carry, mb):
+                    loss_acc, g_acc, sh_acc = carry
+                    l, g = jax.value_and_grad(local_loss)(p_diff, mb)
+                    # unbucketed params accumulate whole, as before
+                    g_acc = {n: g_acc[n] + g[n].astype(F32) for n in g_acc}
+                    # bucketed params: pack THIS microbatch's grads and
+                    # reduce-scatter each bucket — the collective overlaps
+                    # the next microbatch's backward; the carry holds only
+                    # the 1/|group| partial-sum shard
+                    mb_bufs = bk.pack_buckets(g, plan, vary=all_axes)
+                    sh = {}
+                    for b in plan.buckets:
+                        piece = comms[b.key].reducescatter(mb_bufs[b.key],
+                                                           axis=0)
+                        sh[b.key] = ompccl.ensure_varying(
+                            sh_acc[b.key] + piece, all_axes)
+                    return (ompccl.ensure_varying(loss_acc + l, all_axes),
+                            norm_g(g_acc), sh), None
 
-            zero_g = norm_g({n: jnp.zeros(p.shape, F32)
-                             for n, p in params.items()})
-            loss0 = ompccl.ensure_varying(jnp.zeros((), F32), all_axes)
-            (loss, grads), _ = lax.scan(micro, (loss0, zero_g), mbs)
-            loss = loss / k
-            grads = jax.tree.map(lambda g: g / k, grads)
+                zero_g = norm_g({n: jnp.zeros(params[n].shape, F32)
+                                 for n in plan.local})
+                zero_sh = {
+                    b.key: ompccl.ensure_varying(
+                        jnp.zeros((b.shard_size(mesh_sizes),), F32), all_axes)
+                    for b in plan.buckets}
+                loss0 = ompccl.ensure_varying(jnp.zeros((), F32), all_axes)
+                (loss, g_local, shards), _ = lax.scan(
+                    micro, (loss0, zero_g, zero_sh), mbs)
+                loss = loss / k
+                # the trailing exchange: ONE invariant all-gather per bucket
+                # (the only wire work not hidden behind backward compute)
+                bufs = {
+                    b.key: comms[b.key].allgather(
+                        shards[b.key] / (k * ctx.dp), axis=0, tiled=True,
+                        invariant=True)
+                    for b in plan.buckets}
+                grads = {n: g_local[n] / (k * ctx.dp) for n in plan.local}
+                grads.update(bk.unpack_buckets(bufs, plan))
+                reduced = True
+            else:
+                def micro(carry, mb):
+                    loss_acc, g_acc = carry
+                    l, g = jax.value_and_grad(local_loss)(p_diff, mb)
+                    g_acc = {n: g_acc[n] + g[n].astype(F32) for n in g_acc}
+                    # scalar loss: canonicalize to all mesh axes (an
+                    # unsharded-vocab CE stays model-varying; a sharded one
+                    # does not)
+                    return (ompccl.ensure_varying(loss_acc + l, all_axes),
+                            norm_g(g_acc)), None
+
+                zero_g = norm_g({n: jnp.zeros(p.shape, F32)
+                                 for n, p in params.items()})
+                loss0 = ompccl.ensure_varying(jnp.zeros((), F32), all_axes)
+                (loss, grads), _ = lax.scan(micro, (loss0, zero_g), mbs)
+                loss = loss / k
+                grads = jax.tree.map(lambda g: g / k, grads)
         else:
             loss, grads = jax.value_and_grad(local_loss)(p_diff, batch)
 
         if ctx.explicit_dp and dp_axes:
-            grads, _ = reduce_gradients(grads, cfg, ctx, pspecs=pspecs)
+            if not reduced:
+                if plan is not None:
+                    grads, bufs, _ = bk.reduce_bucketed(
+                        grads, plan, ctx, vary=all_axes)
+                else:
+                    grads, _ = reduce_gradients(grads, cfg, ctx,
+                                                pspecs=pspecs)
         elif dp_axes and not HAS_VMA:
             # pre-vma jax inserts no automatic pvary-transpose psums under
             # shard_map, so the "implicit" baseline must still reduce on the
@@ -263,7 +340,9 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
         else:
             grads = jax.tree.map(lambda g: g.astype(F32) / ctx.dp, grads)
 
-        gnorm = sharded_global_norm(grads, cfg, ctx, mesh, pspecs=pspecs)
+        gnorm = sharded_global_norm(grads, cfg, ctx, mesh, pspecs=pspecs,
+                                    plan=plan if bufs is not None else None,
+                                    bufs=bufs)
         scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
         grads = jax.tree.map(lambda g: g * scale, grads)
 

@@ -97,6 +97,73 @@ def test_hierarchical_equals_flat(mesh8):
     np.testing.assert_allclose(flat, hier, rtol=1e-5)
 
 
+def test_hierarchical_pad_path_bf16(mesh8):
+    """Non-divisible payload (5 elems/device, fast size 2) exercises the
+    pad/reshape round-trip with bf16 inputs."""
+    x = np.random.RandomState(6).randn(4, 10).astype(np.float32)
+    xb = np.asarray(jnp.asarray(x, jnp.bfloat16), np.float32)
+
+    def f(v):
+        h = ompccl.allreduce(v.astype(jnp.bfloat16), DP,
+                             backend="hierarchical")
+        return h.astype(jnp.float32)
+
+    got = _run(mesh8, f, x, P(("pod", "data"), "model"),
+               P(("pod", "data"), "model"))
+    want = np.tile(xb.sum(0), (4, 1))
+    np.testing.assert_allclose(got, want, rtol=0.05, atol=0.05)
+
+
+def test_hierarchical_max_falls_back_flat(mesh8):
+    """op="max" does not decompose through a scatter: the hierarchical
+    backend must fall back to the flat algorithm, exactly."""
+    x = np.random.RandomState(7).randn(4, 10).astype(np.float32)
+    got = _run(mesh8,
+               lambda v: ompccl.allreduce(v, DP, op="max",
+                                          backend="hierarchical"),
+               x, P(("pod", "data"), "model"), P(("pod", "data"), "model"))
+    np.testing.assert_allclose(got, np.tile(x.max(0), (4, 1)), rtol=1e-6)
+
+
+def test_hierarchical_flat_fastpath_matches_general(mesh8):
+    """A 1-D fast-size-divisible payload (the gradient-bucket layout) takes
+    the no-pad/no-reshape fast path and must agree with the general path
+    and the flat psum."""
+    x = np.random.RandomState(8).randn(4, 12).astype(np.float32)
+
+    def f1d(v):  # local (1, 6) -> flat (6,), divisible by fast size 2
+        return ompccl.allreduce(v.reshape(-1), DP,
+                                backend="hierarchical").reshape(v.shape)
+
+    spec = P(("pod", "data"), "model")
+    got_fast = _run(mesh8, f1d, x, spec, spec)
+    got_gen = _run(mesh8,
+                   lambda v: ompccl.allreduce(v, DP, backend="hierarchical"),
+                   x, spec, spec)
+    got_flat = _run(mesh8, lambda v: ompccl.allreduce(v, DP), x, spec, spec)
+    np.testing.assert_allclose(got_fast, got_gen, rtol=1e-6)
+    np.testing.assert_allclose(got_fast, got_flat, rtol=1e-5)
+
+
+def test_hierarchical_rs_ag_pair_roundtrip(mesh8):
+    """The hierarchical backend's reduce-scatter (fast-axes-first, so the
+    slow link only carries the 1/F shard) and invariant all-gather are
+    mutually inverse through one handle: RS -> AG == the flat psum — the
+    contract the bucketed backward-overlap path relies on."""
+    x = np.random.RandomState(9).randn(4, 8).astype(np.float32)
+
+    def f(v):
+        flat = v.reshape(-1)                      # (8,): 4-way group divides
+        sh = ompccl.reducescatter(flat, DP, backend="hierarchical")
+        full = ompccl.allgather(sh, DP, invariant=True,
+                                backend="hierarchical")
+        return full.reshape(v.shape)
+
+    spec = P(("pod", "data"), "model")
+    got = _run(mesh8, f, x, spec, spec)
+    np.testing.assert_allclose(got, np.tile(x.sum(0), (4, 1)), rtol=1e-5)
+
+
 def test_compressed_allreduce_accuracy(mesh8):
     x = np.random.RandomState(4).randn(4, 64).astype(np.float32)
     out, err = jax.jit(shard_map(
