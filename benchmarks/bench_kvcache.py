@@ -1,9 +1,18 @@
-"""Paper Fig. 2 mechanics: asymmetric allocation + second-level pointers.
+"""Paper Fig. 2 mechanics + serving KV economics (docs/SERVING.md).
 
-Serving-shaped churn on the PGAS heap: admit/extend/release request KV under
-the buddy allocator, measuring allocation throughput, fragmentation, and
-remote-pointer-cache hit rate (the paper's two-step dereference amortization)
-— symmetric (padded) vs asymmetric (second-level pointer) strategies.
+Three measurements, written to ``kvcache.csv`` / ``BENCH_summary.json``:
+
+* **alloc churn** — serving-shaped admit/extend/release churn on the PGAS
+  heap, old whole-region-realloc design vs the paged page-table allocator.
+  CI gate: the paged allocator issues AT MOST one arena page allocation per
+  ``extend`` (O(1)), while the realloc baseline's per-extend churn grows
+  with the region size (O(pages)).
+* **modeled prefill throughput** — engine steps per request for
+  token-by-token vs chunked prefill (``ceil(len/chunk) + max_new`` vs
+  ``len + max_new``); gate: chunked never takes more steps.
+* **wall-clock prefill throughput** — real device calls on a reduced
+  model: one ``build_chunk_prefill_step`` call per chunk vs one decode call
+  per prompt token, prefill tokens/s both ways.
 """
 
 from __future__ import annotations
@@ -14,62 +23,170 @@ import numpy as np
 
 from repro.core.groups import DiompGroup
 from repro.core.pgas import GlobalMemory
-from repro.serve.kvcache import PagedKVAllocator
+from repro.serve.kvcache import PagedKVAllocator, ReallocKVAllocator
 
 from .common import write_csv
 
 
+def _churn(mode: str, n_reqs: int) -> dict:
+    """Serving churn: admit, decode with page growth, periodic release."""
+    mem = GlobalMemory(8, 1 << 26, allocator="buddy")
+    g = DiompGroup(("x",), name="x")
+    cls = PagedKVAllocator if mode == "paged" else ReallocKVAllocator
+    alloc = cls(mem, g, page_tokens=64, kv_bytes_per_token=256)
+    rng = np.random.RandomState(0)
+    live, lookups, extend_allocs = [], 0, []
+    t0 = time.perf_counter()
+    for i in range(n_reqs):
+        plen = int(rng.randint(16, 512))
+        if len(live) >= 16:                      # steady-state churn: the
+            alloc.release(live.pop(0))           # oldest request completes
+        r = alloc.admit(plen, plen + 128)
+        if r is None:
+            for req in live[: len(live) // 2]:   # heap full: drop oldest half
+                alloc.release(req)
+            live = live[len(live) // 2:]
+            r = alloc.admit(plen, plen + 128)
+            if r is None:
+                continue
+        r.pos = plen
+        live.append(r)
+        # decode 96 tokens with page-table lookups on the home rank
+        for _ in range(96):
+            a0 = alloc.stats["arena_page_allocs"]
+            if not alloc.extend(r):
+                break
+            extend_allocs.append(alloc.stats["arena_page_allocs"] - a0)
+            r.pos += 1
+            alloc.lookup(r, r.pos - 1)
+            lookups += 1
+    wall = time.perf_counter() - t0
+    for req in list(live):
+        alloc.release(req)
+    if mode == "paged":
+        alloc.trim()
+    mem.check_invariants()
+    grew = [d for d in extend_allocs if d > 0]
+    return {
+        "bench": "churn",
+        "mode": mode,
+        "requests": n_reqs,
+        "wall_s": round(wall, 3),
+        "admits_per_s": round(n_reqs / wall),
+        "extends": len(extend_allocs),
+        "pages_allocated": alloc.stats["pages_allocated"],
+        "arena_page_allocs": alloc.stats["arena_page_allocs"],
+        "page_reuses": alloc.stats["page_reuses"],
+        "alloc_pages_per_extend_max": max(grew, default=0),
+        "alloc_pages_per_extend_mean": round(
+            sum(grew) / max(len(grew), 1), 2),
+        "oom_events": alloc.stats["oom_events"],
+        "ptr_cache_hit_rate": round(mem.ptr_cache.hit_rate, 3),
+        "lookups": lookups,
+    }
+
+
+def _modeled_prefill(chunk: int = 64, max_new: int = 32) -> list:
+    rows = []
+    for plen in (128, 512, 2048, 8192):
+        legacy = plen + max_new
+        chunked = -(-plen // chunk) + max_new
+        rows.append({
+            "bench": "prefill_model",
+            "prompt_len": plen, "chunk": chunk, "max_new": max_new,
+            "steps_legacy": legacy, "steps_chunked": chunked,
+            "step_speedup": round(legacy / chunked, 2),
+        })
+    return rows
+
+
+def _wall_prefill(quick: bool) -> dict:
+    """Real device calls: chunked prefill vs token-by-token decode."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models import api as model_api
+    from repro.models import schema as sch
+    from repro.models.config import ParallelCtx
+    from repro.serve.step import build_chunk_prefill_step, build_decode_step
+
+    cfg = configs.get_reduced("stablelm-3b")
+    mesh = make_smoke_mesh(len(jax.devices()))
+    ctx = ParallelCtx.from_mesh(mesh, remat=False, inference=True)
+    params = sch.init_params(cfg, jax.random.PRNGKey(0))
+    P, C, S = (48, 16, 96) if quick else (256, 32, 320)
+    reps = 1 if quick else 3
+    chunk_step = build_chunk_prefill_step(cfg, mesh, ctx, C=C, S_cache=S)
+    decode_step = build_decode_step(cfg, mesh, ctx, B=1, S=S, donate=False,
+                                    slot_pos=True)
+    structs, _ = model_api.cache_structs(cfg, mesh, ctx, 1, S)
+    zero = lambda: jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                                structs)
+    rng = np.random.RandomState(0)
+    prompt = rng.randint(0, cfg.vocab_size, size=P).astype(np.int32)
+
+    def run_chunked():
+        cache = zero()
+        cache["pos"] = jnp.asarray(0, jnp.int32)
+        logits = None
+        for f in range(0, P, C):
+            toks = jnp.asarray(prompt[None, f:f + C])
+            logits, cache = chunk_step(params, toks, cache,
+                                       jnp.asarray(C, jnp.int32))
+        jax.block_until_ready(logits)
+
+    def run_legacy():
+        cache = zero()
+        cache["pos"] = jnp.zeros((1,), jnp.int32)
+        logits = None
+        for t in range(P):
+            logits, cache = decode_step(
+                params, jnp.asarray(prompt[None, t:t + 1]), cache)
+        jax.block_until_ready(logits)
+
+    run_chunked(), run_legacy()                      # compile warmup
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        run_chunked()
+    t_chunk = (time.perf_counter() - t0) / reps
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        run_legacy()
+    t_legacy = (time.perf_counter() - t0) / reps
+    return {
+        "bench": "prefill_wall",
+        "prompt_len": P, "chunk": C,
+        "wall_s_chunked": round(t_chunk, 4),
+        "wall_s_legacy": round(t_legacy, 4),
+        "prefill_tok_per_s_chunked": round(P / t_chunk),
+        "prefill_tok_per_s_legacy": round(P / t_legacy),
+        "wall_speedup": round(t_legacy / t_chunk, 2),
+    }
+
+
 def run(quick: bool = False):
     n_reqs = 200 if quick else 1000
-    rng = np.random.RandomState(0)
-    rows = []
-    for mode in ("asymmetric", "symmetric_padded"):
-        mem = GlobalMemory(8, 1 << 26, allocator="buddy")
-        g = DiompGroup((), name="world") if False else DiompGroup(("x",),
-                                                                  name="x")
-        alloc = PagedKVAllocator(mem, g, page_tokens=64,
-                                 kv_bytes_per_token=256)
-        live = []
-        t0 = time.perf_counter()
-        lookups = 0
-        for i in range(n_reqs):
-            plen = 512 if mode == "symmetric_padded" else \
-                int(rng.randint(16, 512))
-            r = alloc.admit(plen, plen + 64)
-            if r is None:
-                # heap full: release the oldest half
-                for req in live[: len(live) // 2]:
-                    alloc.release(req)
-                live = live[len(live) // 2:]
-                r = alloc.admit(plen, plen + 64)
-                if r is None:
-                    continue
-            live.append(r)
-            # decode a few tokens with page-table lookups on a remote rank
-            remote = i % 8
-            for t in range(8):
-                r.pos += 1
-                alloc.extend(r)
-                # repeated derefs of the same remote rank hit the pointer
-                # cache after the first two-step fetch (paper Fig. 2 as-1)
-                alloc.lookup(r, r.pos - 1, rank=remote)
-                lookups += 1
-        wall = time.perf_counter() - t0
-        rows.append({
-            "mode": mode,
-            "requests": n_reqs,
-            "wall_s": round(wall, 3),
-            "admits_per_s": round(n_reqs / wall),
-            "pages_allocated": alloc.stats["pages_allocated"],
-            "oom_events": alloc.stats["oom_events"],
-            "bytes_in_use_end": alloc.bytes_in_use,
-            "ptr_cache_hit_rate": round(mem.ptr_cache.hit_rate, 3),
-            "lookups": lookups,
-        })
-        for req in list(live):
-            alloc.release(req)
-        mem.check_invariants()
-    path = write_csv("kvcache.csv", rows)
+    rows = [_churn("realloc", n_reqs), _churn("paged", n_reqs)]
+    realloc, paged = rows
+    # -- CI gates: the whole point of the page table -------------------------
+    assert paged["alloc_pages_per_extend_max"] <= 1, paged
+    assert realloc["alloc_pages_per_extend_mean"] >= 2, realloc
+    assert paged["arena_page_allocs"] < realloc["arena_page_allocs"], (
+        paged["arena_page_allocs"], realloc["arena_page_allocs"])
+    rows += _modeled_prefill()
+    for r in rows:
+        if r.get("bench") == "prefill_model":
+            assert r["steps_chunked"] <= r["steps_legacy"], r
+    rows.append(_wall_prefill(quick))
+    assert rows[-1]["wall_s_chunked"] <= rows[-1]["wall_s_legacy"] * 1.5, \
+        rows[-1]
+    keys: list = []
+    for r in rows:               # union schema (three bench sections)
+        keys += [k for k in r if k not in keys]
+    path = write_csv("kvcache.csv", [{k: r.get(k, "") for k in keys}
+                                     for r in rows])
     print(f"[bench_kvcache] -> {path}")
     for r in rows:
         print("  ", r)

@@ -1,6 +1,9 @@
-"""Continuous-batching serving example (see repro.launch.serve).
+"""Continuous-batching serving example (see repro.launch.serve; the
+engine lifecycle, chunked prefill, and every knob are documented in
+docs/SERVING.md).
 
-  PYTHONPATH=src python examples/serve_lm.py --arch qwen1-5-110b
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen1-5-110b \\
+      --prefill-chunk 16 --temperature 0.7 --top-k 8
 """
 
 import os

@@ -312,6 +312,10 @@ class SecondLevelPtr:
     region: Region
 
     def dereference(self, rank: int) -> Tuple[int, int]:
+        if self.region.sizes[rank] == 0:
+            raise AllocError(
+                f"rank {rank} holds no payload of region "
+                f"{self.region.name!r} (zero-size asymmetric rank)")
         return (rank, self.region.offsets[rank])
 
 
@@ -379,6 +383,11 @@ class GlobalMemory:
         self._rid = itertools.count()
         self._lock = threading.Lock()
         self.ptr_cache = RemotePtrCache()
+        # arena-traffic counters: how many collective alloc/free calls hit
+        # the arenas.  The serving KV allocator's free-list is audited
+        # against these (page churn must NOT translate into arena churn —
+        # see docs/SERVING.md).
+        self.alloc_counts = {"symmetric": 0, "asymmetric": 0, "free": 0}
 
     # -- collective allocation (paper: "all participating nodes coordinate") --
     def alloc_symmetric(
@@ -400,6 +409,7 @@ class GlobalMemory:
         participating nodes coordinate").
         """
         with self._lock:
+            self.alloc_counts["symmetric"] += 1
             offsets = []
             done = []
             try:
@@ -488,20 +498,29 @@ class GlobalMemory:
         Implementation detail from the paper: the wrapper slots are
         symmetric (identical offset on all ranks), while payloads land
         "at the end of the global segment" wherever each arena has room.
+        A size of 0 means the rank holds NO payload at all (fully ragged
+        allocation — e.g. a KV page homed on one rank): only the symmetric
+        32-byte wrapper exists there, recorded as offset -1.
         """
         if len(sizes) != self.nranks:
             raise ValueError(f"need {self.nranks} sizes, got {len(sizes)}")
         with self._lock:
+            self.alloc_counts["asymmetric"] += 1
             slot = self._slp_arena.alloc(_SLP_BYTES)
             offsets = []
             done = []
             try:
                 for arena, size in zip(self._arenas, sizes):
-                    offsets.append(arena.alloc(max(size, 1)))
-                    done.append(arena)
+                    if size <= 0:
+                        offsets.append(-1)
+                        done.append(None)
+                    else:
+                        offsets.append(arena.alloc(size))
+                        done.append(arena)
             except AllocError:
                 for arena, off in zip(done, offsets):
-                    arena.free(off)
+                    if arena is not None:
+                        arena.free(off)
                 self._slp_arena.free(slot)
                 raise
             region = Region(
@@ -523,9 +542,12 @@ class GlobalMemory:
         """Collective free; invalidates any cached remote pointers."""
         region = handle.region if isinstance(handle, SecondLevelPtr) else handle
         with self._lock:
+            self.alloc_counts["free"] += 1
             if region.rid not in self._regions:
                 raise AllocError(f"double free of region {region.name!r}")
             for arena, off in zip(self._arenas, region.offsets):
+                if off < 0:      # zero-size rank: nothing was placed there
+                    continue
                 arena.free(off)
             slp = self._slps.pop(region.rid, None)
             if slp is not None:
@@ -548,6 +570,14 @@ class GlobalMemory:
     # -- introspection ----------------------------------------------------------
     def bytes_in_use(self, rank: int = 0) -> int:
         return self._arenas[rank].bytes_in_use
+
+    def bytes_free(self, rank: int = 0) -> int:
+        return self._arenas[rank].bytes_free
+
+    def capacity(self, rank: int = 0) -> int:
+        """Actual arena capacity (the buddy allocator rounds the segment up
+        to a power of two)."""
+        return self._arenas[rank].capacity
 
     def regions(self) -> List[Region]:
         return list(self._regions.values())

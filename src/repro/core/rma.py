@@ -128,11 +128,20 @@ class RMATracker:
         self._windows: Dict[str, _WindowState] = {}
         self.puts = 0
         self.fences = 0
+        self.put_bytes = 0
+        self.window_bytes: Dict[str, int] = {}
 
     def register(self, name: str) -> None:
         if name in self._windows:
             raise RMAError(f"window {name!r} already registered")
         self._windows[name] = _WindowState()
+
+    def unregister(self, name: str) -> None:
+        """Drop a window at the end of its allocation's lifetime (e.g. a
+        serving request's KV window at release).  Its cumulative byte count
+        survives in :attr:`window_bytes` for post-hoc accounting."""
+        if self._windows.pop(name, None) is None:
+            raise RMAError(f"unknown window {name!r}")
 
     def _state(self, name: str) -> _WindowState:
         try:
@@ -140,10 +149,13 @@ class RMATracker:
         except KeyError:
             raise RMAError(f"unknown window {name!r}") from None
 
-    def on_put(self, name: str) -> None:
+    def on_put(self, name: str, nbytes: int = 0) -> None:
         st = self._state(name)
         st.dirty_since = st.epoch
         self.puts += 1
+        self.put_bytes += nbytes
+        if nbytes:
+            self.window_bytes[name] = self.window_bytes.get(name, 0) + nbytes
 
     def on_fence(self, *names: str) -> None:
         targets = names or tuple(self._windows)

@@ -1,13 +1,15 @@
-"""Serving driver: continuous batching on the DiOMP runtime.
+"""Serving driver: continuous batching with chunked prefill on the DiOMP
+runtime (engine lifecycle + knob reference: docs/SERVING.md).
 
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced \\
-      --requests 6 --max-new 8
+      --requests 6 --max-new 8 --prefill-chunk 16
 """
 
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
+import json
 import time
 
 import jax
@@ -27,6 +29,17 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--max-prompt", type=int, default=24)
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt tokens per prefill device call "
+                         "(1 = token-by-token baseline)")
+    ap.add_argument("--page-tokens", type=int, default=64,
+                    help="KV tokens per PGAS page")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples (with --top-k)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--high-watermark", type=float, default=0.92,
+                    help="KV pressure above which the engine preempts")
     args = ap.parse_args(argv)
 
     cfg = configs.get_reduced(args.arch)
@@ -34,10 +47,14 @@ def main(argv=None):
     ctx = ParallelCtx.from_mesh(mesh, remat=False, inference=True)
     params = sch.init_params(cfg, jax.random.PRNGKey(0))
 
-    eng = ServeEngine(cfg, mesh, ctx, params, slots=args.slots, max_len=96)
+    eng = ServeEngine(cfg, mesh, ctx, params, slots=args.slots, max_len=96,
+                      prefill_chunk=args.prefill_chunk,
+                      page_tokens=args.page_tokens,
+                      temperature=args.temperature, top_k=args.top_k,
+                      high_watermark=args.high_watermark)
     rng = np.random.RandomState(0)
     reqs = [eng.submit(rng.randint(0, cfg.vocab_size,
-                                   size=rng.randint(2, 8)),
+                                   size=rng.randint(2, args.max_prompt)),
                        max_new=args.max_new)
             for _ in range(args.requests)]
     t0 = time.time()
@@ -46,10 +63,13 @@ def main(argv=None):
     done = sum(r.done for r in reqs)
     toks = sum(len(r.out) for r in reqs)
     print(f"served {done}/{len(reqs)} requests, {toks} tokens in "
-          f"{eng.steps} engine steps ({dt:.1f}s incl. compile)")
+          f"{eng.steps} engine steps / {eng.device_calls} device calls "
+          f"({dt:.1f}s incl. compile)")
     for i, r in enumerate(reqs[:4]):
-        print(f"  req{i} prompt={r.prompt.tolist()} -> {r.out}")
+        print(f"  req{i} prompt[{len(r.prompt)}] -> {r.out} "
+              f"(prefill_steps={r.prefill_steps})")
     print("kv stats:", eng.kv_stats)
+    print("latency:", json.dumps(eng.latency_stats(), default=float))
     assert done == len(reqs)
     print("serve driver done")
 

@@ -399,15 +399,21 @@ def attention_block(
     prefix_len: int = 0,
     cache: Optional[KVCache] = None,
     causal: Optional[bool] = None,
+    chunked: bool = False,
 ):
     """GQA attention with residual-input x (B, T, d); returns (out, cache').
 
-    Three execution strategies (DESIGN.md §5):
+    Four execution strategies (DESIGN.md §5 + chunked serving prefill,
+    docs/SERVING.md):
     * head-parallel  — q heads divide MAX_TP: heads sharded over "model";
     * token-parallel — otherwise (e.g. paligemma H=8): weights replicated
       over "model", the T axis is sliced instead;
     * decode         — T == 1 with a cache: head-sharded, replicated, or
-      context(S)-sharded cache (cp_decode_attention).
+      context(S)-sharded cache (cp_decode_attention);
+    * chunked prefill — ``chunked=True`` with a cache and T > 1: the chunk's
+      K/V are appended at the running ``cache.pos`` and the queries attend
+      over the whole valid prefix (cached + chunk), so a prompt streams
+      through the cache in ``ceil(len/chunk)`` device calls.
     """
     B, T, d = x.shape
     hp = head_parallel(cfg)
@@ -424,7 +430,9 @@ def attention_block(
     bv = lp.get("bv")
 
     decode = cache is not None and T == 1
-    token_parallel = (not hp) and (not decode) and T % ctx.tp == 0 and ctx.tp > 1
+    chunkfill = chunked and cache is not None and not decode
+    token_parallel = ((not hp) and (not decode) and (not chunkfill)
+                      and T % ctx.tp == 0 and ctx.tp > 1)
 
     if token_parallel:
         t_loc = T // ctx.tp
@@ -459,6 +467,25 @@ def attention_block(
                 q, new_cache.k, new_cache.v, causal=True,
                 q_offset=new_cache.pos - 1, valid_len=new_cache.pos,
             )  # pos may be scalar or (B,) — the ref kernel broadcasts
+    elif chunkfill:
+        # chunked prefill: append this chunk's K/V at the running cache
+        # position and attend over the whole valid prefix.  Causal masking
+        # with q_offset = pos keeps any padded tail of the chunk invisible
+        # (padded keys sit strictly after every real query position), and
+        # padded cache rows are overwritten by the next chunk/decode write
+        # before any query can reach them.
+        assert not cache.seq_sharded, \
+            "chunked prefill does not support a context-sharded cache"
+        p0 = cache.pos
+        new_cache = KVCache(
+            lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                     (0, p0, 0, 0)),
+            lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                     (0, p0, 0, 0)),
+            p0 + T, seq_sharded=False,
+        )
+        attn = flash_attention(q, new_cache.k, new_cache.v, causal=True,
+                               q_offset=p0, valid_len=p0 + T)
     elif token_parallel:
         # KV must cover the full sequence: gather over the TP group
         k_full = ompccl.allgather(k, ctx.tp_group, axis=1,
@@ -530,6 +557,7 @@ jax.tree_util.register_pytree_node(
 def mla_block(
     x, lp, cfg: ModelConfig, ctx: ParallelCtx,
     *, positions=None, cache: Optional[MLACache] = None,
+    chunked: bool = False,
 ):
     """DeepSeek-V3 multi-head latent attention.  Returns (out, cache').
 
@@ -538,6 +566,9 @@ def mla_block(
     against the (replicated, tiny) latent cache; only the final per-head
     up-projection touches head dims.  TP: heads sharded (128 % 16 == 0);
     the latent path is replicated (that is MLA's point: the cache is small).
+    ``chunked=True`` (serving prefill, docs/SERVING.md): the chunk's latents
+    are appended at the running ``cache.pos`` and the chunk's queries attend
+    over K/V decompressed from the whole valid latent prefix.
     """
     B, T, d = x.shape
     dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -592,6 +623,29 @@ def mla_block(
         attn = jnp.einsum("bhk,khn->bhn", ctx_lat,
                           wkv_b[..., dn:].astype(F32))         # (B,H,dv)
         attn = attn[:, None].astype(x.dtype)                   # (B,1,H,dv)
+    elif chunked and cache is not None:
+        # chunked prefill: append latents at cache.pos, attend over the
+        # decompressed full prefix (causal + q_offset mask the padded tail
+        # and the unwritten suffix, exactly as in attention_block)
+        p0 = cache.pos
+        new_cache = MLACache(
+            lax.dynamic_update_slice(cache.c, c.astype(cache.c.dtype),
+                                     (0, p0, 0)),
+            lax.dynamic_update_slice(
+                cache.kr, k_rope[:, :, 0].astype(cache.kr.dtype), (0, p0, 0)),
+            p0 + T,
+        )
+        S_all = new_cache.c.shape[1]
+        kv_all = jnp.einsum("bsk,khn->bshn", new_cache.c.astype(F32),
+                            wkv_b.astype(F32)).astype(x.dtype)
+        k_nope_all, v_all = kv_all[..., :dn], kv_all[..., dn:]
+        k_all = jnp.concatenate(
+            [k_nope_all,
+             jnp.broadcast_to(new_cache.kr[:, :, None].astype(x.dtype),
+                              (B, S_all, H_loc, dr))], axis=-1)
+        qkr = jnp.concatenate([q_nope, q_rope], axis=-1)
+        attn = flash_attention(qkr, k_all, v_all, causal=True, scale=scale,
+                               q_offset=p0, valid_len=p0 + T)
     else:
         kv = jnp.einsum("btk,khn->bthn", c.astype(F32),
                         wkv_b.astype(F32)).astype(x.dtype)     # decompress

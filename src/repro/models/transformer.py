@@ -29,7 +29,7 @@ from .schema import head_parallel, kv_sharded
 
 __all__ = [
     "transformer_forward", "transformer_loss", "init_cache",
-    "transformer_prefill", "transformer_decode",
+    "transformer_prefill", "transformer_chunk_prefill", "transformer_decode",
 ]
 
 
@@ -49,16 +49,16 @@ def _sinusoid(T: int, d: int, dtype):
 
 def _layer_body(x, lp, cfg: ModelConfig, ctx: ParallelCtx, *,
                 moe: bool, mla: bool, positions, prefix_len: int,
-                cache=None):
+                cache=None, chunked: bool = False):
     """One decoder block: (attn + residual) then (ffn + residual)."""
     h = rmsnorm(x, lp["attn_norm"], cfg.norm_eps, plus_one=(cfg.family == "vlm"))
     if mla:
         attn, new_cache = mla_block(h, lp, cfg, ctx, positions=positions,
-                                    cache=cache)
+                                    cache=cache, chunked=chunked)
     else:
         attn, new_cache = attention_block(
             h, lp, cfg, ctx, positions=positions, prefix_len=prefix_len,
-            cache=cache, causal=cfg.causal)
+            cache=cache, causal=cfg.causal, chunked=chunked)
     x = x + attn
     h = rmsnorm(x, lp["mlp_norm"], cfg.norm_eps, plus_one=(cfg.family == "vlm"))
     if moe:
@@ -74,7 +74,7 @@ def _layer_body(x, lp, cfg: ModelConfig, ctx: ParallelCtx, *,
 
 
 def _scan_stack(x, stack, cfg, ctx, *, moe, mla, positions, prefix_len,
-                caches=None, remat=False):
+                caches=None, remat=False, chunked=False):
     """Scan a homogeneous layer stack; threads caches if given.
 
     The carry is normalized to a canonical varying set (vma bookkeeping):
@@ -106,7 +106,7 @@ def _scan_stack(x, stack, cfg, ctx, *, moe, mla, positions, prefix_len,
             lp, cache = xs
         h2, new_cache = _layer_body(
             h, lp, cfg, ctx, moe=moe, mla=mla, positions=positions,
-            prefix_len=prefix_len, cache=cache)
+            prefix_len=prefix_len, cache=cache, chunked=chunked)
         return ensure_varying(h2, world), new_cache
 
     if remat:
@@ -179,6 +179,7 @@ def transformer_forward(
     cache: Optional[dict] = None,
     positions=None,
     seq_sharded: bool = False,
+    chunked: bool = False,
 ):
     """Returns (hidden (B, T_total, d), new_cache or None)."""
     if embeds is not None:
@@ -214,7 +215,7 @@ def transformer_forward(
         x, new_d = _scan_stack(
             x, dstack, cfg, ctx, moe=False, mla=cfg.attention == "mla",
             positions=positions, prefix_len=prefix_len, caches=dcaches,
-            remat=remat)
+            remat=remat, chunked=chunked)
     stack = _stacked(params, "layers")
     caches = None
     if cache is not None:
@@ -225,7 +226,7 @@ def transformer_forward(
     x, new_caches = _scan_stack(
         x, stack, cfg, ctx, moe=cfg.moe, mla=cfg.attention == "mla",
         positions=positions, prefix_len=prefix_len, caches=caches,
-        remat=remat)
+        remat=remat, chunked=chunked)
 
     x = rmsnorm(x, params["final_norm"], cfg.norm_eps,
                 plus_one=(cfg.family == "vlm"))
@@ -291,6 +292,35 @@ def transformer_prefill(params, tokens, cfg, ctx, cache, *,
                                    seq_sharded=seq_sharded)
     logits = jnp.dot(h[:, -1:].astype(jnp.float32),
                      _lm_head(params, cfg).astype(jnp.float32))
+    return logits, cache
+
+
+def transformer_chunk_prefill(params, tokens, cfg, ctx, cache, rlen, *,
+                              seq_sharded: bool = False):
+    """One chunked-prefill step: append ``tokens`` (B, C) at ``cache['pos']``.
+
+    The serving engine streams a prompt through the cache in fixed-size
+    chunks (docs/SERVING.md): each call writes C new K/V rows at the running
+    position and attends the chunk's queries over the whole valid prefix.
+    ``rlen`` (traced scalar, 1 <= rlen <= C) is the number of REAL tokens in
+    the chunk; the tail is padding whose cache rows are overwritten by the
+    next chunk / decode write before any query can attend to them (causal
+    masking keeps them invisible meanwhile).  Returns the logits at the last
+    real position and the cache with ``pos`` advanced by ``rlen``.
+    """
+    if seq_sharded:
+        raise ValueError("chunked prefill does not support seq_sharded caches")
+    C = tokens.shape[1]
+    p0 = cache["pos"]
+    positions = p0 + jnp.arange(C)
+    h, cache = transformer_forward(params, tokens, cfg, ctx, cache=cache,
+                                   positions=positions, chunked=True)
+    last = lax.dynamic_slice_in_dim(h, jnp.maximum(rlen - 1, 0), 1, axis=1)
+    logits = jnp.dot(last.astype(jnp.float32),
+                     _lm_head(params, cfg).astype(jnp.float32))
+    # the layer scan advanced pos by the full (possibly padded) chunk width;
+    # the true advance is the real token count
+    cache["pos"] = p0 + rlen
     return logits, cache
 
 

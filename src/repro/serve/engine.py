@@ -1,12 +1,26 @@
 """Continuous-batching serving engine (slot-based, vLLM-shaped).
 
-A fixed pool of B slots; requests admit into free slots via the PagedKV
-allocator (PGAS asymmetric regions — the paper's second-level-pointer
-machinery as a page table), every engine step advances *all* active slots
-by one token (per-slot ``pos`` vector in the cache), finished slots release
-their pages and refill from the queue.  Prompts stream through the decode
-path token-by-token (teacher-forced prefill), so a newly admitted request
-coexists with slots that are mid-generation — continuous batching.
+The production serving loop documented in docs/SERVING.md (layer map:
+docs/ARCHITECTURE.md).  A fixed pool of B slots; requests admit into free
+slots via the PagedKV allocator (PGAS page tables — the paper's second-
+level-pointer machinery), prompts stream in through **chunked prefill**
+(one device call per ``prefill_chunk`` prompt tokens, interleaved with
+decode in the same engine loop), every decode step advances all decode-
+ready slots by one sampled token (per-slot ``pos`` vector in the cache),
+finished slots release their pages to the allocator free list and refill
+from the queue.
+
+Scheduling: the queue is priority-ordered (then FIFO); when KV pressure
+crosses the high watermark — or a page allocation fails mid-decode — the
+lowest-priority / latest-arrived victim is **preempted**: its device rows
+are snapshotted host-side and its KV pages migrate to a spill rank's heap
+via one-sided RMA (recorded on the OMPCCL call log and the request's
+RMATracker window); preempted requests resume into the next free slot by
+migrating their pages home again.  Slots that are free or mid-prefill are
+*parked* during decode steps (their device write lands on the reserved
+scratch row S-1, and the engine re-asserts the authoritative per-slot
+positions afterwards), which fixes the seed engine's leak of stale pending
+tokens / phantom position advances on released slots.
 
 The engine is single-controller host code: the paper's "single-process
 multi-GPU" deployment — the host orchestrates, OMPCCL moves data, and host
@@ -16,8 +30,8 @@ threads (StreamPool) stay free for tokenize/detokenize work.
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Deque, Dict, List, Optional
+import time
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,33 +40,75 @@ import numpy as np
 from repro.core.context import DiompContext, use_default
 from repro.core.groups import DiompGroup
 from repro.core.pgas import GlobalMemory
+from repro.models import api as model_api
 from repro.models.config import ModelConfig, ParallelCtx
-from repro.models.transformer import init_cache
 from .kvcache import PagedKVAllocator, Request
-from .step import build_decode_step
+from .step import build_chunk_prefill_step, build_decode_step
 
 __all__ = ["ServeEngine", "GenRequest"]
 
 
-@dataclasses.dataclass
-class GenRequest:
+@dataclasses.dataclass(eq=False)       # identity semantics: requests are
+class GenRequest:                      # scheduled objects, not values
     prompt: np.ndarray          # (len,) int32
     max_new: int
+    priority: int = 0           # higher wins at admission / survives preemption
     out: List[int] = dataclasses.field(default_factory=list)
     slot: int = -1
     fed: int = 0                # prompt tokens consumed so far
     kv: Optional[Request] = None
     done: bool = False
+    arrival: int = 0
+    # per-request accounting (docs/SERVING.md "measurement")
+    submit_t: float = 0.0
+    admit_t: Optional[float] = None
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    admit_step: int = -1
+    finish_step: int = -1
+    prefill_steps: int = 0      # chunk-prefill device calls for this request
+    decode_steps: int = 0       # decode steps this request participated in
+    preemptions: int = 0
+    _snapshot: Optional[dict] = None  # host copy of device rows while swapped
+    _rng: Optional[np.random.Generator] = None
+
+    def stats(self) -> dict:
+        ttft = (self.first_token_t - self.submit_t
+                if self.first_token_t else None)
+        total = (self.finish_t - self.submit_t) if self.finish_t else None
+        return {
+            "prompt_len": int(len(self.prompt)), "generated": len(self.out),
+            "prefill_steps": self.prefill_steps,
+            "decode_steps": self.decode_steps,
+            "preemptions": self.preemptions,
+            "ttft_s": ttft, "total_s": total,
+        }
 
 
 class ServeEngine:
+    """See module docstring; knob reference in docs/SERVING.md."""
+
     def __init__(self, cfg: ModelConfig, mesh, ctx: ParallelCtx, params, *,
                  slots: int = 4, max_len: int = 256,
+                 prefill_chunk: int = 16, page_tokens: int = 64,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 high_watermark: float = 0.92, low_watermark: float = 0.80,
                  memory: Optional[GlobalMemory] = None,
                  context: Optional[DiompContext] = None):
+        if cfg.family not in model_api.TRANSFORMER_FAMILIES \
+                or not model_api.has_decode(cfg):
+            raise ValueError(
+                f"ServeEngine supports decode-capable transformer families "
+                f"(positional KV caches); got family {cfg.family!r}")
         self.cfg, self.mesh, self.ctx = cfg, mesh, ctx
         self.params = params
         self.B, self.S = slots, max_len
+        self.chunk = max(int(prefill_chunk), 1)
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self.seed = int(seed)
+        self.high_watermark = float(high_watermark)
+        self.low_watermark = float(low_watermark)
         # the engine runs on a DiompContext: the KV-page arena is its PGAS
         # memory, the world group its communicator domain.  A caller-provided
         # `memory` (legacy) still wins for the arena.
@@ -61,96 +117,369 @@ class ServeEngine:
                                    allocator="buddy")
         self.dctx = context
         self.memory = memory or context.memory
+        self._group = context.groups.get(
+            "world", DiompGroup(tuple(mesh.axis_names), name="world"))
+        self._comm = self.dctx.communicator(self._group)
         kv_bpt = 2 * 2 * max(cfg.kv_heads, 1) * max(cfg.head_dim, 1) \
             * cfg.num_layers
         self.alloc = PagedKVAllocator(
-            self.memory,
-            context.groups.get("world",
-                               DiompGroup(tuple(mesh.axis_names),
-                                          name="world")),
-            page_tokens=64, kv_bytes_per_token=max(kv_bpt, 64))
+            self.memory, self._group,
+            page_tokens=page_tokens, kv_bytes_per_token=max(kv_bpt, 64))
         self.decode_step = build_decode_step(cfg, mesh, ctx, B=slots,
-                                             S=max_len, donate=False)
+                                             S=max_len, donate=False,
+                                             slot_pos=True)
+        # chunked prefill: one (B=1, C) step reused for every slot; chunk=1
+        # falls back to the token-by-token teacher-forced path (the
+        # equivalence baseline in tests)
+        self.chunk_step = (
+            build_chunk_prefill_step(cfg, mesh, ctx, C=self.chunk,
+                                     S_cache=max_len)
+            if self.chunk > 1 else None)
         # global-view cache (cache_structs shapes); in_specs shard it
-        from repro.models import api as model_api
         structs, _ = model_api.cache_structs(cfg, mesh, ctx, self.B, self.S)
         cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), structs)
         cache["pos"] = jnp.zeros((self.B,), jnp.int32)
         self.cache = cache
-        self.queue: Deque[GenRequest] = deque()
+        self.queue: List[GenRequest] = []
+        self.preempted: List[GenRequest] = []
         self.active: Dict[int, GenRequest] = {}
         self.free_slots = list(range(slots))
         self.pending = np.zeros((slots, 1), np.int32)
+        # authoritative per-slot device positions (rows written); the device
+        # copy is re-asserted from this after every decode step
+        self.host_pos = np.zeros((slots,), np.int32)
         self.steps = 0
+        self.device_calls = 0
+        self._arrival = 0
+        self._all: List[GenRequest] = []
 
     # -- API --------------------------------------------------------------
-    def submit(self, prompt, max_new: int = 32) -> GenRequest:
-        r = GenRequest(prompt=np.asarray(prompt, np.int32), max_new=max_new)
+    def submit(self, prompt, max_new: int = 32, *,
+               priority: int = 0) -> GenRequest:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) < 1:
+            raise ValueError("empty prompt")
+        if len(prompt) + max_new > self.S - 1:
+            raise ValueError(
+                f"prompt {len(prompt)} + max_new {max_new} exceeds the "
+                f"cache ({self.S} rows, one reserved for slot parking)")
+        if self.chunk_step is not None \
+                and -(-len(prompt) // self.chunk) * self.chunk > self.S:
+            # the final chunk is padded to full width and written in place:
+            # its whole span must fit the cache or the device write would
+            # clamp and corrupt live rows
+            raise ValueError(
+                f"prompt {len(prompt)} needs "
+                f"{-(-len(prompt) // self.chunk) * self.chunk} cache rows "
+                f"for chunked prefill (chunk {self.chunk}, cache {self.S}); "
+                f"lower prefill_chunk or raise max_len")
+        r = GenRequest(prompt=prompt, max_new=max_new, priority=priority,
+                       arrival=self._arrival, submit_t=time.perf_counter())
+        r._rng = np.random.default_rng(self.seed * 1_000_003 + self._arrival)
+        self._arrival += 1
         self.queue.append(r)
+        self._all.append(r)
         return r
 
     def run(self, max_steps: int = 10_000):
         for _ in range(max_steps):
-            self._admit()
-            if not self.active:
-                if not self.queue:
-                    break
-                continue
-            self._set_inputs()
-            logits = self._device_step()
-            self._harvest(logits)
+            if not (self.active or self.queue or self.preempted):
+                break
+            self.step()
         return self
 
-    # -- internals ----------------------------------------------------------
-    def _admit(self):
-        while self.queue and self.free_slots:
-            req = self.queue[0]
+    def step(self) -> None:
+        """One engine iteration: preempt-on-pressure, admit/resume, chunked
+        prefill for filling slots, one decode step for decode-ready slots."""
+        self.steps += 1
+        self._maybe_preempt()
+        self._admit()
+        if not self.active:
+            return
+        self._prefill_chunks()
+        self._decode()
+
+    # -- scheduling ---------------------------------------------------------
+    @staticmethod
+    def _order(reqs: List[GenRequest]) -> List[GenRequest]:
+        return sorted(reqs, key=lambda r: (-r.priority, r.arrival))
+
+    def _home(self, slot: int) -> int:
+        # every ACTIVE request's pages live on the controller heap (rank 0),
+        # so freeing a victim's pages always relieves the rank the OOM'd
+        # request allocates from; preempted requests park on spill ranks
+        del slot
+        return 0
+
+    def _spill(self, req: GenRequest) -> int:
+        # round-robin over the non-home ranks so swapped-out requests
+        # spread across the remote heaps
+        n = self.memory.nranks
+        return 1 + (req.kv.rid % (n - 1)) if n > 1 else 0
+
+    def _win(self, req: GenRequest) -> str:
+        return f"kv/req{req.kv.rid}"
+
+    def _admit(self) -> None:
+        # resumptions first: preempted requests hold committed progress
+        for req in self._order(list(self.preempted)):
+            if not self.free_slots:
+                break
+            slot = self.free_slots[-1]
+            home = self._home(slot)
+            if req.kv.page_table:
+                if req.kv.home_rank != home and self.alloc.migrate(
+                        req.kv, home, comm=self._comm,
+                        tracker=self.dctx.rma, window=self._win(req)) == 0:
+                    continue        # spill heap -> home heap OOM: wait
+            else:
+                req.kv.home_rank = home
+                if not self.alloc.reserve(req.kv, req.kv.pos + 1):
+                    continue
+            self.free_slots.pop()
+            self.preempted.remove(req)
+            self._restore(slot, req)
+        for req in self._order(self.queue):
+            if not self.free_slots:
+                break
+            slot = self.free_slots[-1]
             kv = self.alloc.admit(len(req.prompt),
-                                  len(req.prompt) + req.max_new)
+                                  len(req.prompt) + req.max_new,
+                                  home_rank=self._home(slot))
             if kv is None:
                 break                      # KV OOM — wait for a release
-            self.queue.popleft()
+            self.free_slots.pop()
+            self.queue.remove(req)
             req.kv = kv
-            req.slot = self.free_slots.pop()
-            kv.pos = 0
-            self.active[req.slot] = req
+            req.slot = slot
+            req.admit_t = time.perf_counter()
+            req.admit_step = self.steps
+            self.dctx.rma.register(self._win(req))
+            self.pending[slot, 0] = 0
+            self.host_pos[slot] = 0
+            self.active[slot] = req
 
-    def _set_inputs(self):
-        for slot, req in self.active.items():
-            if req.fed < len(req.prompt):
+    def _restore(self, slot: int, req: GenRequest) -> None:
+        if req._snapshot is not None:
+            for k, v in req._snapshot.items():
+                self.cache[k] = self.cache[k].at[:, slot:slot + 1].set(v)
+            req._snapshot = None
+        req.slot = slot
+        self.active[slot] = req
+        self.host_pos[slot] = req.kv.pos
+        self.pending[slot, 0] = 0
+
+    # -- preemption (RMA swap to a spill rank) ------------------------------
+    def _pick_victim(self, exclude: Optional[int] = None) -> Optional[int]:
+        cands = [s for s in self.active if s != exclude]
+        if not cands:
+            return None
+        return max(cands, key=lambda s: (-self.active[s].priority,
+                                         self.active[s].arrival))
+
+    def _preempt(self, slot: int) -> None:
+        req = self.active.pop(slot)
+        # the swap payload: this slot's device rows, snapshotted host-side
+        # (on real hardware the same rows are what the one-sided page
+        # transfers below move between heaps)
+        req._snapshot = {
+            k: jax.device_get(v[:, slot:slot + 1])
+            for k, v in self.cache.items() if k != "pos"}
+        moved = self.alloc.migrate(req.kv, self._spill(req),
+                                   comm=self._comm, tracker=self.dctx.rma,
+                                   window=self._win(req))
+        if moved == 0 and req.kv.page_table:
+            # spill heap full (or single-rank deployment): the swap moved
+            # nothing, so drop the page plan instead — the snapshot above
+            # holds the rows and resume re-reserves pages.  Either way a
+            # preemption always relieves home-rank pressure.
+            self.alloc.drop_pages(req.kv)
+        req.preemptions += 1
+        req.slot = -1
+        self.free_slots.append(slot)
+        self.pending[slot, 0] = 0
+        self.host_pos[slot] = 0
+        self.preempted.append(req)
+
+    def _maybe_preempt(self) -> None:
+        while len(self.active) > 1:
+            homes = {req.kv.home_rank for req in self.active.values()}
+            if self.alloc.pressure(homes) <= self.high_watermark:
+                break
+            self._preempt(self._pick_victim())
+            homes = {req.kv.home_rank for req in self.active.values()}
+            if self.alloc.pressure(homes) <= self.low_watermark:
+                break
+
+    # -- chunked prefill ----------------------------------------------------
+    def _slot_cache(self, slot: int) -> dict:
+        sl = {k: v[:, slot:slot + 1]
+              for k, v in self.cache.items() if k != "pos"}
+        sl["pos"] = jnp.asarray(int(self.host_pos[slot]), jnp.int32)
+        return sl
+
+    def _write_slot(self, slot: int, sl: dict) -> None:
+        for k, v in sl.items():
+            if k != "pos":
+                self.cache[k] = self.cache[k].at[:, slot:slot + 1].set(v)
+
+    def _prefill_chunks(self) -> None:
+        if self.chunk_step is None:
+            return                      # legacy: prompts feed through decode
+        for slot in sorted(self.active):
+            req = self.active[slot]
+            plen = len(req.prompt)
+            if req.fed >= plen:
+                continue
+            take = min(self.chunk, plen - req.fed)
+            toks = np.zeros((1, self.chunk), np.int32)
+            toks[0, :take] = req.prompt[req.fed:req.fed + take]
+            with use_default(self.dctx):
+                logits, sl = self.chunk_step(
+                    self.params, jnp.asarray(toks), self._slot_cache(slot),
+                    jnp.asarray(take, jnp.int32))
+            self._write_slot(slot, sl)
+            req.fed += take
+            req.kv.pos += take          # rows actually written, nothing else
+            self.host_pos[slot] = req.fed
+            req.prefill_steps += 1
+            self.device_calls += 1
+            if req.fed >= plen:
+                # the final chunk's last-position logits commit the first
+                # generated token (prefill produces token 1 of max_new)
+                row = np.asarray(jax.device_get(logits))[0, 0]
+                self._commit(slot, req, row)
+
+    # -- decode -------------------------------------------------------------
+    def _decode(self) -> None:
+        if self.chunk_step is None:
+            ready = sorted(self.active)
+        else:
+            ready = sorted(s for s, r in self.active.items()
+                           if r.fed >= len(r.prompt))
+        # capacity BEFORE the device write: one page alloc at most per slot;
+        # on OOM, preempt the lowest-priority victim and retry
+        for slot in list(ready):
+            if slot not in self.active:
+                continue
+            req = self.active[slot]
+            while not self.alloc.extend(req.kv):
+                # victim = lowest priority / latest arrival among ALL
+                # active slots — if that is the requester itself, it yields
+                # (never evict a higher-priority request to keep a lower-
+                # priority one decoding)
+                victim = self._pick_victim()
+                self._preempt(victim if victim is not None else slot)
+                if victim is None or victim == slot:
+                    break
+        ready = [s for s in ready if s in self.active]
+        if not ready:
+            return
+        for slot in ready:
+            req = self.active[slot]
+            if self.chunk_step is None and req.fed < len(req.prompt):
                 self.pending[slot, 0] = req.prompt[req.fed]
             else:
-                self.pending[slot, 0] = req.out[-1]
-
-    def _device_step(self):
-        # the decode step's collectives resolve the process-default context
-        # at trace time; scope it to the engine's own context so its
-        # communicator table records this engine's traffic
+                self.pending[slot, 0] = req.out[-1] if req.out else 0
+        # park every other slot on the reserved scratch row S-1: its write
+        # cannot touch live rows and the true positions are re-asserted below
+        dev_pos = np.full((self.B,), self.S - 1, np.int32)
+        for slot in ready:
+            dev_pos[slot] = self.host_pos[slot]
+        self.cache["pos"] = jnp.asarray(dev_pos)
         with use_default(self.dctx):
             logits, self.cache = self.decode_step(
                 self.params, jnp.asarray(self.pending), self.cache)
-        self.steps += 1
-        return np.asarray(jax.device_get(logits))
-
-    def _harvest(self, logits):
-        for slot, req in list(self.active.items()):
+        self.device_calls += 1
+        rows = np.asarray(jax.device_get(logits))
+        for slot in ready:
+            req = self.active.get(slot)
+            if req is None:
+                continue
             req.kv.pos += 1
-            self.alloc.extend(req.kv)
-            if req.fed < len(req.prompt):
+            self.host_pos[slot] += 1
+            req.decode_steps += 1
+            if self.chunk_step is None and req.fed < len(req.prompt):
                 req.fed += 1
                 if req.fed < len(req.prompt):
                     continue               # still prefilling: ignore logits
-            req.out.append(int(logits[slot, 0].argmax()))
-            if len(req.out) >= req.max_new:
-                req.done = True
-                self.alloc.release(req.kv)
-                del self.active[slot]
-                self.free_slots.append(slot)
-                # reset this slot's device position for the next request
-                self.cache["pos"] = self.cache["pos"].at[slot].set(0)
+            self._commit(slot, req, rows[slot, 0])
+        # authoritative positions back onto the device (parked slots kept)
+        self.cache["pos"] = jnp.asarray(self.host_pos.copy())
 
+    # -- commit / sampling / release ----------------------------------------
+    def _sample(self, req: GenRequest, row: np.ndarray) -> int:
+        if self.temperature <= 0.0:
+            return int(row.argmax())
+        z = row.astype(np.float64) / max(self.temperature, 1e-6)
+        if self.top_k > 0 and self.top_k < len(z):
+            keep = np.argpartition(z, -self.top_k)[-self.top_k:]
+        else:
+            keep = np.arange(len(z))
+        zk = z[keep] - z[keep].max()
+        p = np.exp(zk)
+        p /= p.sum()
+        return int(req._rng.choice(keep, p=p))
+
+    def _commit(self, slot: int, req: GenRequest, row: np.ndarray) -> None:
+        req.out.append(self._sample(req, row))
+        if req.first_token_t is None:
+            req.first_token_t = time.perf_counter()
+        if len(req.out) >= req.max_new:
+            self._finish(slot, req)
+
+    def _finish(self, slot: int, req: GenRequest) -> None:
+        req.done = True
+        req.finish_t = time.perf_counter()
+        req.finish_step = self.steps
+        self.dctx.rma.unregister(self._win(req))
+        self.alloc.release(req.kv)
+        del self.active[slot]
+        self.free_slots.append(slot)
+        # no stale state may leak into the next tenant of this slot: clear
+        # the pending token and the device position (the seed engine left
+        # both behind, so freed slots kept teacher-forcing garbage)
+        self.pending[slot, 0] = 0
+        self.host_pos[slot] = 0
+        self.cache["pos"] = jnp.asarray(self.host_pos.copy())
+
+    # -- introspection -------------------------------------------------------
     @property
     def kv_stats(self):
         s = dict(self.alloc.stats)
+        live = self.alloc.live_pages()
+        # the allocator ledger must balance: every page handed out is either
+        # live in a page table or back on the free list
+        assert s["pages_allocated"] - s["pages_freed"] == live, \
+            (s["pages_allocated"], s["pages_freed"], live)
+        s["live_pages"] = live
+        s["free_list_pages"] = self.alloc.free_list_pages()
         s["ptr_cache_hit_rate"] = self.memory.ptr_cache.hit_rate
         return s
+
+    def latency_stats(self) -> dict:
+        done = [r for r in self._all if r.done]
+        ttft = [r.first_token_t - r.submit_t for r in done
+                if r.first_token_t is not None]
+        total = [r.finish_t - r.submit_t for r in done
+                 if r.finish_t is not None]
+        toks = sum(len(r.out) for r in done)
+
+        def _agg(xs):
+            if not xs:
+                return None
+            xs = sorted(xs)
+            return {"mean": sum(xs) / len(xs),
+                    "p50": xs[len(xs) // 2], "max": xs[-1]}
+
+        return {
+            "requests_done": len(done),
+            "tokens": toks,
+            "engine_steps": self.steps,
+            "device_calls": self.device_calls,
+            "preemptions": sum(r.preemptions for r in self._all),
+            "ttft_s": _agg(ttft),
+            "request_s": _agg(total),
+            "tokens_per_device_call": (toks / self.device_calls
+                                       if self.device_calls else 0.0),
+        }

@@ -22,13 +22,19 @@ from repro.models import api as model_api
 from repro.models import schema as sch
 from repro.models.config import ModelConfig, ParallelCtx
 
-__all__ = ["build_decode_step", "build_prefill_step"]
+__all__ = ["build_decode_step", "build_prefill_step",
+           "build_chunk_prefill_step"]
 
 
 def build_decode_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx, *,
                       B: int, S: int, seq_sharded: bool = False,
-                      donate: bool = True):
-    """jitted (params, tokens (B,1), cache) -> (logits (B,1,V), cache')."""
+                      donate: bool = True, slot_pos: bool = False):
+    """jitted (params, tokens (B,1), cache) -> (logits (B,1,V), cache').
+
+    ``slot_pos=True`` (the serving engine) declares ``cache["pos"]`` as a
+    per-slot (B,) vector sharded like the batch, so a slot count divisible
+    by the DP axes keeps positions aligned with their cache rows.
+    """
     import dataclasses
 
     from repro.distributed.sharding import rules_for_ctx
@@ -42,6 +48,9 @@ def build_decode_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx, *,
                                         seq_sharded=seq_sharded)
     ba = model_api._batch_axes(mesh, B)
     bpart = ba if ba else None
+    if slot_pos:
+        cspecs = dict(cspecs)
+        cspecs["pos"] = P(bpart)
     vs = "model" if sch.vocab_sharded(cfg) else None
 
     def step(params, tokens, cache):
@@ -53,6 +62,48 @@ def build_decode_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx, *,
         step, mesh=mesh,
         in_specs=(pspecs, P(bpart), cspecs),
         out_specs=(P(bpart, None, vs), cspecs),
+    )
+    kwargs = {"donate_argnums": (2,)} if donate else {}
+    return jax.jit(mapped, **kwargs)
+
+
+def build_chunk_prefill_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
+                             *, C: int, S_cache: int, B: int = 1,
+                             donate: bool = False):
+    """jitted (params, tokens (B,C), cache, rlen ()) -> (logits (B,1,V), cache').
+
+    The serving engine's chunked-prefill unit (docs/SERVING.md): ``cache``
+    is the engine cache sliced to one slot (B=1) with a *scalar* ``pos``;
+    the chunk is appended at ``pos`` and the logits of the last real token
+    (``rlen - 1``) come back — ONE device call per prompt chunk instead of
+    one per prompt token.  Transformer families only (attention caches
+    address by position; recurrent-state families prefill token-by-token
+    through the decode step).
+    """
+    import dataclasses
+
+    from repro.distributed.sharding import rules_for_ctx
+    from repro.kernels.plan import resolve_ring_impl
+    from repro.models.transformer import transformer_chunk_prefill
+
+    if cfg.family not in model_api.TRANSFORMER_FAMILIES:
+        raise ValueError(
+            f"chunked prefill supports transformer families only, "
+            f"got {cfg.family!r}")
+    ctx = dataclasses.replace(ctx, inference=True, remat=False,
+                              ring_impl=resolve_ring_impl(ctx.ring_impl))
+    pspecs = sch.partition_specs(cfg, mesh, rules_for_ctx(ctx))
+    _, cspecs = model_api.cache_structs(cfg, mesh, ctx, B, S_cache)
+    vs = "model" if sch.vocab_sharded(cfg) else None
+
+    def step(params, tokens, cache, rlen):
+        return transformer_chunk_prefill(params, tokens, cfg, ctx, cache,
+                                         rlen)
+
+    mapped = shard_map(
+        step, mesh=mesh,
+        in_specs=(pspecs, P(None), cspecs, P()),
+        out_specs=(P(None, None, vs), cspecs),
     )
     kwargs = {"donate_argnums": (2,)} if donate else {}
     return jax.jit(mapped, **kwargs)

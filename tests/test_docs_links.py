@@ -1,0 +1,22 @@
+"""Tier-1 wrapper around the CI docs link checker: a dead relative link in
+docs/*.md, the root *.md files, or an example/serve docstring fails here
+before it fails the CI "Docs link check" step."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                       / "tools"))
+
+import check_docs_links  # noqa: E402
+
+
+def test_no_dead_doc_links():
+    assert check_docs_links.check() == []
+
+
+def test_required_docs_exist():
+    root = pathlib.Path(check_docs_links.ROOT)
+    for name in ("docs/ARCHITECTURE.md", "docs/SERVING.md", "docs/API.md",
+                 "docs/PERF.md", "README.md"):
+        assert (root / name).exists(), name

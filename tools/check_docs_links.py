@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Docs link checker (CI: the "Docs link check" step; also run by
+tests/test_docs_links.py so a dead link fails tier-1 locally).
+
+Checks two classes of references:
+
+* relative markdown links ``[text](path)`` in ``docs/*.md`` and the root
+  ``*.md`` files — the target file must exist (``#fragments`` are stripped,
+  ``http(s)://`` / ``mailto:`` links are skipped);
+* ``docs/<NAME>.md`` mentions inside ``examples/*.py`` and
+  ``src/repro/serve/*.py`` docstrings/comments — every doc a module points
+  its reader at must exist (this is what caught the stale ``DESIGN.md §4``
+  references the serving docstrings used to carry).
+
+Exit code 0 = clean, 1 = dead links (listed on stderr).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+PY_DOC_REF = re.compile(r"docs/[A-Za-z0-9_.-]+\.md")
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files():
+    yield from sorted(ROOT.glob("*.md"))
+    yield from sorted((ROOT / "docs").glob("*.md"))
+
+
+def py_files():
+    yield from sorted((ROOT / "examples").glob("*.py"))
+    yield from sorted((ROOT / "src" / "repro" / "serve").glob("*.py"))
+
+
+def check() -> list:
+    dead = []
+    for f in md_files():
+        for m in MD_LINK.finditer(f.read_text()):
+            target = m.group(1)
+            if target.startswith(SKIP_SCHEMES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (f.parent / path).exists():
+                dead.append((str(f.relative_to(ROOT)), target))
+    for f in py_files():
+        for m in PY_DOC_REF.finditer(f.read_text()):
+            if not (ROOT / m.group(0)).exists():
+                dead.append((str(f.relative_to(ROOT)), m.group(0)))
+    return dead
+
+
+def main() -> int:
+    dead = check()
+    n_files = len(list(md_files())) + len(list(py_files()))
+    if dead:
+        for src, target in dead:
+            print(f"DEAD LINK: {src} -> {target}", file=sys.stderr)
+        return 1
+    print(f"docs link check: {n_files} files, all relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
