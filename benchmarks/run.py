@@ -7,7 +7,8 @@
                 shipped bucketed schedule: faster at smoke-CI mesh sizes,
                 within 5% at the largest modeled mesh)
   matmul       (paper Fig. 7: Cannon ring matmul scaling, 3 overlap modes)
-  minimod      (paper Fig. 8 + Listings 1-2: halo exchange + LOC)
+  minimod      (paper Fig. 8 + Listings 1-2: none/host/fused halo modes,
+                asymmetric decomposition, fused-overlap gate + LOC)
   streams      (paper §3.2: stream-pool policy throughput)
   kvcache      (paper Fig. 2: asymmetric heap / page-table churn)
 

@@ -1,13 +1,15 @@
 """Paper §4.5: Minimod — acoustic wave propagation with one-sided halos.
 
-The 25-point (8th-order) acoustic-isotropic kernel, Z-sharded across the
-device ring.  Each step: halo exchange via DiOMP one-sided puts + fence
-(paper Listing 1 — compare benchmarks/bench_minimod.py for the two-sided
-MPI-shaped version at ~4x the lines), then the stencil update (the Pallas
-TPU kernel's jnp oracle on CPU; pass --pallas to run the kernel in
-interpret mode).
+Thin CLI over the real application driver (:mod:`repro.apps.minimod`):
+25-point acoustic stencil, 2-D (Z×Y) domain decomposition with optionally
+asymmetric Z extents over heterogeneous ranks (PGAS asymmetric regions),
+and three halo modes — ``none`` (two-sided, paper Listing 2), ``host``
+(one-sided puts + fence, paper Listing 1) and ``fused`` (in-kernel
+one-sided exchange overlapped with the interior stencil; see
+docs/PERF.md, "Minimod & halo overlap").
 
-Run:  PYTHONPATH=src python examples/minimod.py [--grid 64] [--steps 10]
+Run:  PYTHONPATH=src python examples/minimod.py [--shape minimod_hetero]
+      [--mode fused] [--grid 64] [--steps 10] [--nz 8] [--ny 1]
 """
 
 import os
@@ -15,69 +17,49 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
 import sys
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core.compat import make_mesh, shard_map
-from repro.core.groups import DiompGroup
-from repro.core.rma import halo_exchange
-from repro.kernels.stencil.ref import RADIUS, wave_step_ref
-from repro.kernels.stencil.ops import wave_step
+from repro.apps.minimod import MODES, run_minimod
+from repro.launch.shapes import STENCIL_SHAPES
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--shape", choices=sorted(STENCIL_SHAPES), default=None,
+                    help="a predefined Minimod cell (overrides grid/nz/ny)")
+    ap.add_argument("--mode", choices=MODES, default="fused")
     ap.add_argument("--grid", type=int, default=64)
-    ap.add_argument("--steps", type=int, default=10)
-    ap.add_argument("--pallas", action="store_true",
-                    help="run the Pallas kernel in interpret mode (slow)")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--nz", type=int, default=8)
+    ap.add_argument("--ny", type=int, default=1)
+    ap.add_argument("--weights", type=str, default=None,
+                    help="comma-separated per-rank Z proportions, e.g. 3,2,2,1")
     args = ap.parse_args()
 
-    ndev = 8
-    mesh = make_mesh((ndev,), ("z",), axis_types="auto")
-    g = DiompGroup(("z",), name="z")
-    G = args.grid
-    u0 = np.zeros((G, G, G), np.float32)
-    u0[G // 2, G // 2, G // 2] = 1.0          # point source
-    up0 = np.zeros_like(u0)
-    c2dt2 = 0.1
-
-    def step(u, u_prev):
-        # === the paper's Listing 1, DiOMP style: puts + one fence ===
-        left, right = halo_exchange(u, g, halo=RADIUS, axis=0)
-        upad = jnp.concatenate([left, u, right], axis=0)
-        prev = jnp.pad(u_prev, ((RADIUS, RADIUS), (0, 0), (0, 0)))
-        if args.pallas:
-            nxt = wave_step(upad, prev, c2dt2, impl="pallas", interpret=True)
-        else:
-            nxt = wave_step_ref(upad, prev, c2dt2)
-        return nxt[RADIUS:-RADIUS], u
-
-    def run(u, u_prev):
-        def body(carry, _):
-            u, u_prev = carry
-            return step(u, u_prev), None
-        (u, u_prev), _ = jax.lax.scan(body, (u, u_prev), None,
-                                      length=args.steps)
-        return u
-
-    f = jax.jit(shard_map(run, mesh=mesh, in_specs=(P("z"), P("z")),
-                          out_specs=P("z")))
-    t0 = time.perf_counter()
-    u = np.asarray(jax.block_until_ready(f(u0, up0)))
-    dt = time.perf_counter() - t0
-    print(f"minimod: grid {G}^3, {args.steps} steps on {ndev} devices "
-          f"-> {dt*1e3:.0f} ms (incl. compile)")
-    print(f"  wavefield energy {np.square(u).sum():.4e}, "
-          f"max |u| {np.abs(u).max():.3e} (finite: "
-          f"{np.isfinite(u).all()})")
-    assert np.isfinite(u).all() and np.abs(u).max() > 0
+    weights = tuple(float(w) for w in args.weights.split(",")) \
+        if args.weights else None
+    r = run_minimod(grid=(args.grid,) * 3, steps=args.steps, nz=args.nz,
+                    ny=args.ny, weights=weights, mode=args.mode,
+                    shape=args.shape)
+    G = "x".join(str(g) for g in r.grid)
+    print(f"minimod[{r.mode}]: grid {G}, {r.steps} steps on "
+          f"{r.nz}x{r.ny} ranks -> {r.wall_s * 1e3:.0f} ms (incl. compile)")
+    print(f"  decomposition: z_extents={r.z_extents} "
+          f"(PGAS region bytes/rank: {r.region_sizes})")
+    print(f"  halo plan: overlap={r.plan.overlap} slots={r.plan.slots} "
+          f"bz={r.plan.bz} puts/step={r.plan.puts_per_step}")
+    print(f"  wire audit: {r.puts} put call sites, {r.put_bytes} B on the "
+          f"OMPCCL log; tracker windows {r.tracker_put_bytes} B, "
+          f"{r.fences} fences")
+    print(f"  wavefield energy {r.energy:.4e}, max |u| "
+          f"{np.abs(r.field).max():.3e} "
+          f"(finite: {np.isfinite(r.field).all()})")
+    assert np.isfinite(r.field).all() and np.abs(r.field).max() > 0
+    if r.mode == "fused":
+        assert r.put_bytes == r.tracker_put_bytes, "put-traffic parity broken"
     print("minimod OK")
 
 

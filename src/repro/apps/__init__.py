@@ -1,0 +1,9 @@
+"""Application drivers — the paper's workloads promoted to real programs.
+
+Unlike ``examples/`` (thin CLI demonstrations), an app owns its full
+vertical slice: domain decomposition, PGAS region registration, the
+schedule objects its kernels execute, and the audit trail (OMPCCL call
+log + RMATracker windows) the benchmarks and tests assert against.
+"""
+
+from .minimod import MinimodResult, run_minimod, split_extents  # noqa: F401

@@ -131,6 +131,21 @@ def _ring_axis(group: DiompGroup) -> str:
     return group.axes[0]
 
 
+@jax.custom_jvp
+def _fence_tuple(arrays):
+    return lax.optimization_barrier(arrays)
+
+
+@_fence_tuple.defjvp
+def _fence_tuple_jvp(primals, tangents):
+    # the barrier is an ordering property of the PRIMAL program; tangents
+    # ride through as the identity (which also makes the reverse-mode
+    # transpose trivial), so fenced pipelines stay differentiable — the
+    # fused halo-overlapped stencil trains through its per-step fence
+    (arrays,), (dots,) = primals, tangents
+    return _fence_tuple(arrays), dots
+
+
 def fence(*arrays):
     """Complete all outstanding RMA before anything downstream runs.
 
@@ -138,11 +153,12 @@ def fence(*arrays):
     the fence — the compiled counterpart of DiOMP's hybrid polling loop that
     waits on both network and device events.  Returns the fenced arrays.
     Backend-independent: the fence is an ordering property of the compiled
-    program, not of any one transport.
+    program, not of any one transport — and differentiable (see the custom
+    JVP above), so overlapped schedules can sit inside training steps.
     """
     if not arrays:
         return ()
-    fenced = lax.optimization_barrier(arrays)
+    fenced = _fence_tuple(tuple(arrays))
     return fenced[0] if len(arrays) == 1 else fenced
 
 
@@ -260,6 +276,10 @@ class CclBackend:
         left halo, then fences.  Returns ``(left_halo, right_halo)``; edge
         ranks receive zeros (non-periodic stencil boundaries).
         """
+        # deferred import: rma imports this module at load time
+        from .rma import validate_halo
+
+        validate_halo(halo, x.shape[axis], axis)
         ax = _ring_axis(group)
         n = axis_size(ax)
         idx = lax.axis_index(ax)

@@ -44,6 +44,8 @@ __all__ = [
     "ompx_put_perm",
     "ompx_fence",
     "halo_exchange",
+    "halo_window_names",
+    "validate_halo",
     "RMATracker",
     "RMAError",
 ]
@@ -91,6 +93,25 @@ def ompx_fence(*arrays):
     return _fence(*arrays)
 
 
+def halo_window_names(group: DiompGroup, axis: int) -> Tuple[str, str]:
+    """The (lo, hi) RMATracker window names of one halo-exchange pair."""
+    return (f"halo:{group.name}:{axis}:lo", f"halo:{group.name}:{axis}:hi")
+
+
+def validate_halo(halo: int, extent: int, axis: int) -> None:
+    """Reject a halo the local shard cannot serve (shared by the free
+    function, the backend lowering and the fused step): a slab wider than
+    the shard would silently wrap neighbor-of-neighbor data on the
+    compiled ring."""
+    if halo < 1 or halo > extent:
+        raise RMAError(
+            f"halo_exchange(halo={halo}) invalid for local shard extent "
+            f"{extent} along axis {axis}: the put would "
+            + ("be empty" if halo < 1 else
+               "wrap non-neighbor data into the slab")
+            + " (shrink the halo or the rank count)")
+
+
 def halo_exchange(x, group: DiompGroup, *, halo: int, axis: int = 0,
                   backend: str = None):
     """Minimod's halo pattern (paper Listing 1) as one fused exchange.
@@ -100,8 +121,37 @@ def halo_exchange(x, group: DiompGroup, *, halo: int, axis: int = 0,
     then fences.  Returns ``(left_halo, right_halo)`` — the slabs that landed
     in my window.  Edge ranks receive zeros (the paper's ``rank != 0`` /
     ``rank != nranks-1`` guards), matching non-periodic stencil boundaries.
+
+    A ``halo`` thicker than the local shard would silently wrap neighbor-
+    of-neighbor data into the slab on the compiled ring; that is rejected
+    here (and in the backend lowering) with :class:`RMAError`.  Each call
+    is also recorded against the active context's :class:`RMATracker`:
+    two slab puts into the group's halo windows, one fence, then the reads
+    — so the put→fence→read epoch discipline of the programming model is
+    checkable host-side.
     """
-    return _comm(group, backend).halo_exchange(x, halo=halo, axis=axis)
+    extent = x.shape[axis]
+    validate_halo(halo, extent, axis)
+    from .backends import payload_bytes
+    from .compat import axis_size
+    from .context import default_context
+
+    # a 1-rank ring exchanges nothing (both halos are the edge zeros):
+    # record no puts, same as the fused path — the audit trail reports
+    # only bytes that actually go on the wire
+    if len(group.axes) == 1 and axis_size(group.axes[0]) == 1:
+        return _comm(group, backend).halo_exchange(x, halo=halo, axis=axis)
+    tracker = default_context().rma
+    lo_w, hi_w = halo_window_names(group, axis)
+    slab_bytes = payload_bytes(x) // extent * halo
+    for w in (lo_w, hi_w):
+        tracker.ensure(w)
+        tracker.on_put(w, slab_bytes)
+    out = _comm(group, backend).halo_exchange(x, halo=halo, axis=axis)
+    tracker.on_fence(lo_w, hi_w)
+    tracker.on_read(lo_w)
+    tracker.on_read(hi_w)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -135,6 +185,16 @@ class RMATracker:
         if name in self._windows:
             raise RMAError(f"window {name!r} already registered")
         self._windows[name] = _WindowState()
+
+    def ensure(self, name: str) -> None:
+        """Register ``name`` if it isn't yet (idempotent).
+
+        Long-lived windows that persist across traces — the halo windows a
+        stencil time loop puts into every step — are ensured at each call
+        site instead of registered once at a setup point the trace may not
+        own."""
+        if name not in self._windows:
+            self._windows[name] = _WindowState()
 
     def unregister(self, name: str) -> None:
         """Drop a window at the end of its allocation's lifetime (e.g. a

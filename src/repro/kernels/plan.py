@@ -35,6 +35,7 @@ from repro.core.streams import MAX_ACTIVE_STREAMS_DEFAULT, StreamPool
 __all__ = [
     "RingStep",
     "RingPlan",
+    "HaloPlan",
     "OverlapPlanner",
     "default_planner",
     "resolve_interpret",
@@ -182,6 +183,104 @@ class RingPlan:
 
 
 # ---------------------------------------------------------------------------
+# halo schedule (Minimod)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloPlan:
+    """Concrete slab/slot plan for one fused halo-overlapped stencil step.
+
+    The schedule the fused Minimod step executes (TPU kernel and interpret
+    emulation alike — see :mod:`repro.kernels.stencil.fused`):
+
+    * **carried halos** (the multi-step time loop): the R-thick *boundary*
+      output slabs are computed FIRST (they only need the halos that landed
+      last step), their values are immediately put one-sided to the
+      neighbors (they are the neighbors' next-step halos), and the
+      *interior* — which needs no halo at all — computes under the
+      in-flight exchange.  One neighbor barrier/fence per step.
+    * **single step** (no carried halos): the current field's boundary
+      slabs are put first, the interior computes under the exchange, and
+      the boundary region computes after the fence.
+
+    ``overlap=False`` is the planner's *fallback* plan (degenerate grids
+    with no interior, or a VMEM budget too small to double-buffer the
+    pipeline): exchange-then-compute, still numerically identical.
+
+    Extents are LOCAL (the per-rank maximum when extents are asymmetric).
+    ``slab_bytes``/``strip_bytes`` are the wire sizes of one Z-slab /
+    Y-strip halo put; ``bz`` is the interior Z-slab height of the DMA
+    pipeline and ``slots`` the number of staging buffers granted by
+    ``StreamPool.plan_slots`` against the VMEM budget.
+    """
+
+    nz: int
+    ny: int = 1
+    halo: int = 4
+    z_loc: int = 0
+    y_loc: int = 0
+    x: int = 0
+    slots: int = 2
+    bz: int = 8
+    by: int = 0               # Y staging chunk (== y_loc when untiled)
+    slab_bytes: int = 0
+    strip_bytes: int = 0
+    vmem_bytes: int = 0
+    overlap: bool = True
+
+    def __post_init__(self):
+        if self.nz < 1 or self.ny < 1:
+            raise ValueError("halo decomposition needs nz, ny >= 1")
+        if self.halo < 1:
+            raise ValueError("halo must be >= 1")
+
+    @property
+    def exchange_axes(self) -> Tuple[str, ...]:
+        """Sharded axes that actually exchange (edge groups of 1 don't)."""
+        axes = []
+        if self.nz > 1:
+            axes.append("z")
+        if self.ny > 1:
+            axes.append("y")
+        return tuple(axes)
+
+    @property
+    def interior_z(self) -> int:
+        return max(self.z_loc - 2 * self.halo, 0) if self.nz > 1 else self.z_loc
+
+    @property
+    def interior_y(self) -> int:
+        return max(self.y_loc - 2 * self.halo, 0) if self.ny > 1 else self.y_loc
+
+    @property
+    def puts_per_step(self) -> int:
+        """One-sided puts each step issues (2 per exchanging axis)."""
+        return 2 * len(self.exchange_axes)
+
+    @property
+    def halo_bytes_per_step(self) -> int:
+        return (2 * self.slab_bytes if self.nz > 1 else 0) + \
+            (2 * self.strip_bytes if self.ny > 1 else 0)
+
+    def schedule(self, *, carried: bool = True) -> Tuple[str, ...]:
+        """Ordered phase names both executions follow.
+
+        ``carried=True`` is the time-loop order (halos of the current field
+        already landed; the step exchanges the freshly computed boundary),
+        ``carried=False`` the single-step order (exchange the current
+        field's slabs, compute the interior under it).
+        """
+        if not self.exchange_axes:
+            return ("all",)
+        if not self.overlap:
+            return ("put", "fence", "all")
+        if carried:
+            return ("boundary", "put", "interior", "fence")
+        return ("put", "interior", "fence", "boundary")
+
+
+# ---------------------------------------------------------------------------
 # the planner
 # ---------------------------------------------------------------------------
 
@@ -289,9 +388,16 @@ class OverlapPlanner:
     # -- stencil slab ---------------------------------------------------------
     def plan_stencil_bz(self, z: int, y: int, x: int, dtype,
                         *, radius: int = 4, bz: int = 8) -> int:
-        """Z-slab height whose halo slab still double-buffers in budget."""
+        """Z-slab height whose halo slab still double-buffers in budget.
+
+        Degenerate inputs fall back instead of producing an invalid plan:
+        ``bz`` exceeding the Z extent clamps to it, a grid shorter than the
+        stencil support still yields a positive slab, and a budget too
+        small for any slab bottoms out at ``bz == 1`` (the kernel then
+        streams one plane at a time — slow, never wrong).
+        """
         item = _itemsize(dtype)
-        bz = min(bz, z)
+        bz = max(min(bz, z), 1)
         while bz > 1:
             slab = (bz + 2 * radius) * (y + 2 * radius) * (x + 2 * radius)
             ws = slab * item + 3 * bz * y * x * item   # slab + prev/c2/out blocks
@@ -299,6 +405,59 @@ class OverlapPlanner:
                 break
             bz = max(1, bz // 2)
         return bz
+
+    # -- halo exchange (Minimod) ----------------------------------------------
+    def plan_halo_slots(self, z_loc: int, y_loc: int, x: int, dtype,
+                        nz: int, *, ny: int = 1, halo: int = 4) -> HaloPlan:
+        """Slab/slot plan for the fused halo-overlapped stencil step.
+
+        The halo landing windows live in HBM (one-sided puts target the
+        PGAS segment); what VMEM must hold is the *staging* pipeline — the
+        (bz + 2·halo)-high halo-extended slabs the boundary and interior
+        passes stream through, ``slots`` of them in flight at once.  The
+        slot count is ``StreamPool.plan_slots``' grant for that working
+        set (the §3.2 bounded-concurrency contract), re-clamped so the
+        pinned bytes actually fit the budget.
+
+        Falls back to an ``overlap=False`` plan (exchange-then-compute)
+        rather than emitting an invalid slab plan when the local grid has
+        no interior (extent ≤ 2·halo on an exchanging axis) or the budget
+        cannot double-buffer even the minimum slab.
+        """
+        item = _itemsize(dtype)
+        slab = halo * y_loc * x * item if nz > 1 else 0
+        strip = z_loc * halo * x * item if ny > 1 else 0
+        bz = self.plan_stencil_bz(z_loc, y_loc, x, dtype, radius=halo)
+
+        def stage_bytes(by):
+            return (bz + 2 * halo) * (by + 2 * halo) * (x + 2 * halo) * item
+
+        # the staging unit tiles Y once bz has bottomed out (wide grids:
+        # one full Y×X plane can exceed the whole budget by itself)
+        by = y_loc
+        while 2 * stage_bytes(by) > self.vmem_budget and by > 2 * halo:
+            by = max(by // 2, 2 * halo)
+        stage = stage_bytes(by)
+        slots = self.pool.plan_slots(stage, self.vmem_budget)
+        slots = max(2, min(slots, max(self.vmem_budget // max(stage, 1), 2)))
+
+        plan = HaloPlan(
+            nz=nz, ny=ny, halo=halo, z_loc=z_loc, y_loc=y_loc, x=x,
+            slots=slots, bz=bz, by=by, slab_bytes=slab, strip_bytes=strip,
+            vmem_bytes=slots * stage, overlap=True)
+        # fallback: no interior to hide the exchange under (the plan's own
+        # interior_* properties are THE definition the kernels split by),
+        # or a budget that cannot double-buffer the staging pipeline
+        has_interior = plan.interior_z > 0 and plan.interior_y > 0
+        overlap = bool(plan.exchange_axes) and has_interior and \
+            2 * stage <= self.vmem_budget
+        if not overlap:
+            # fallback plans pipeline nothing: one staging buffer, and the
+            # reported pinned bytes are that single chunk — never a
+            # multi-slot plan the budget cannot hold
+            plan = dataclasses.replace(plan, overlap=False, slots=1,
+                                       vmem_bytes=stage)
+        return plan
 
 
 _DEFAULT_PLANNER: Optional[OverlapPlanner] = None

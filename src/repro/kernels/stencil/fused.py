@@ -1,0 +1,550 @@
+"""Fused halo-overlapped Minimod wave step (paper §4.5, Listings 1–2).
+
+The host-loop Minimod (``benchmarks/bench_minimod.py`` seed shape) exchanged
+halos OUTSIDE the kernel: every step was exchange → fence → full-grid
+stencil, with compute and communication strictly serialized.  This module is
+the same move PR 2 made for the ring matmul, applied to the paper's flagship
+application: the halo exchange becomes in-kernel one-sided puts, and the
+step is split so the interior — which needs no halo at all — computes under
+the in-flight exchange.
+
+One schedule (:meth:`repro.kernels.plan.HaloPlan.schedule`), two executions:
+
+* ``fused_wave_step_tpu`` — ONE ``pallas_call`` runs the whole step: the
+  boundary slabs are deposited into the neighbors' VMEM landing windows via
+  ``pltpu.make_async_remote_copy`` (the ``ompx_put`` of the paper, below the
+  runtime), the interior 25-point stencil runs while the DMAs are in flight,
+  and a per-step neighbor barrier bounds skew to one step.
+* ``fused_wave_step_interpret`` — the CPU-CI emulation: the IDENTICAL phase
+  order with each remote copy realized as an ``ompx_put`` (a
+  ``collective-permute`` remote DMA) started before the interior compute.
+  Differentiable, runs under ``shard_map`` on any backend, and additionally
+  supports what the compiled kernel does not: 2-D (Z×Y) decomposition,
+  **asymmetric** per-rank Z extents (heterogeneous ranks own proportional
+  subdomains — the paper's asymmetric-allocation scenario), and carried
+  halos for the multi-step time loop.
+
+Carried-halo time loop (``return_halos=True``): the halos of the *current*
+field landed during the previous step, so each step computes the R-thick
+boundary output slabs FIRST, puts them one-sided to the neighbors (they are
+exactly the neighbors' next-step halos), computes the interior under the
+in-flight exchange, and fences.  Every put is recorded against the active
+context's :class:`~repro.core.rma.RMATracker` halo windows, so the wire
+traffic is auditable against the OMPCCL call log byte for byte.
+
+Asymmetric extents: SPMD tracing requires one static local shape, so every
+rank's shard is padded to the maximum extent and ``z_extents`` (a static
+per-rank tuple) marks the valid rows; slab extraction/placement happens at
+the traced valid edge and invalid rows are kept at zero.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.backends import payload_bytes
+from repro.core.groups import DiompGroup
+from repro.core.rma import RMAError, halo_window_names, ompx_fence, ompx_put
+from repro.core.vma import zeros_varying
+from repro.kernels.plan import HaloPlan, default_planner, resolve_interpret
+from .ref import COEFFS, RADIUS
+
+__all__ = [
+    "Halos",
+    "exchange_halos",
+    "fused_wave_step",
+    "fused_wave_step_interpret",
+    "fused_wave_step_tpu",
+]
+
+
+class Halos(NamedTuple):
+    """The four halo slabs of one shard (``None`` where the axis is whole).
+
+    ``z_lo``/``z_hi`` are (R, Y, X) slabs from the Z neighbors, ``y_lo``/
+    ``y_hi`` (Z, R, X) strips from the Y neighbors.  A pytree, so a Halos
+    rides directly in a ``lax.scan`` carry for the multi-step time loop.
+    """
+
+    z_lo: Optional[jax.Array] = None
+    z_hi: Optional[jax.Array] = None
+    y_lo: Optional[jax.Array] = None
+    y_hi: Optional[jax.Array] = None
+
+
+def _tracker():
+    from repro.core.context import default_context
+
+    return default_context().rma
+
+
+def _put_slab(slab, group: DiompGroup, *, shift: int, window: str):
+    """One-sided slab put, recorded against the tracker's halo window."""
+    tr = _tracker()
+    tr.ensure(window)
+    tr.on_put(window, payload_bytes(slab))
+    return ompx_put(slab, group, shift=shift)
+
+
+# ---------------------------------------------------------------------------
+# the 25-point star on halo-extended slabs (shared by every phase)
+# ---------------------------------------------------------------------------
+
+
+def _leap(uext, prev, c2, *, dx: float, dtype):
+    """One leapfrog update of the core of an already halo-extended slab.
+
+    ``uext`` carries R rows/cols of halo (real neighbor data or Dirichlet
+    zeros) on every axis; ``prev``/``c2`` are core-shaped.  The arithmetic
+    mirrors :func:`repro.kernels.stencil.ref.wave_step_ref` term for term
+    so the fused step stays within rounding of the oracle.
+    """
+    R = RADIUS
+    bz = uext.shape[0] - 2 * R
+    by = uext.shape[1] - 2 * R
+    bx = uext.shape[2] - 2 * R
+    zc, yc, xc = slice(R, R + bz), slice(R, R + by), slice(R, R + bx)
+    center = uext[zc, yc, xc]
+    c0, *cs = COEFFS
+    lap = 3.0 * c0 * center
+    for r, c in zip(range(1, R + 1), cs):
+        lap = lap + c * (uext[slice(R - r, R - r + bz), yc, xc]
+                         + uext[slice(R + r, R + r + bz), yc, xc])
+        lap = lap + c * (uext[zc, slice(R - r, R - r + by), xc]
+                         + uext[zc, slice(R + r, R + r + by), xc])
+        lap = lap + c * (uext[zc, yc, slice(R - r, R - r + bx)]
+                         + uext[zc, yc, slice(R + r, R + r + bx)])
+    lap = lap / (dx * dx)
+    return (2.0 * center - prev + c2 * lap).astype(dtype)
+
+
+def _mask_valid(a, zv, Z: int):
+    """Zero every row at or beyond the valid Z extent (the padding rows of
+    an asymmetric shard must stay zero — they are other ranks' Dirichlet
+    boundary as far as the star is concerned)."""
+    if isinstance(zv, int) and zv == Z:
+        return a
+    ziota = lax.broadcasted_iota(jnp.int32, (Z, 1, 1), 0)
+    return jnp.where(ziota < zv, a, jnp.zeros((), a.dtype))
+
+
+def _assemble(upad, halos: Halos, *, zv, Z: int, Y: int, X: int):
+    """Place the landed halos into the zero-padded field at the valid edge."""
+    R = RADIUS
+    uext = upad
+    if halos.z_lo is not None:
+        uext = lax.dynamic_update_slice(uext, halos.z_lo, (0, R, R))
+        uext = lax.dynamic_update_slice(uext, halos.z_hi, (zv + R, R, R))
+    if halos.y_lo is not None:
+        uext = lax.dynamic_update_slice(uext, halos.y_lo, (R, 0, R))
+        uext = lax.dynamic_update_slice(uext, halos.y_hi, (R, Y + R, R))
+    return uext
+
+
+# ---------------------------------------------------------------------------
+# halo exchange over one-sided puts (asymmetric- and 2-D-aware)
+# ---------------------------------------------------------------------------
+
+
+def _slabs_of(u, *, zv, nz: int, ny: int):
+    """(z_lo, z_hi, y_lo, y_hi) boundary slabs of a field, at the valid edge."""
+    R = RADIUS
+    Z, Y, X = u.shape
+    z_lo = z_hi = y_lo = y_hi = None
+    if nz > 1:
+        z_lo = lax.slice_in_dim(u, 0, R, axis=0)
+        z_hi = lax.dynamic_slice(u, (zv - R, 0, 0), (R, Y, X))
+    if ny > 1:
+        y_lo = _mask_valid(lax.slice_in_dim(u, 0, R, axis=1), zv, Z)
+        y_hi = _mask_valid(
+            lax.slice_in_dim(u, Y - R, Y, axis=1), zv, Z)
+    return z_lo, z_hi, y_lo, y_hi
+
+
+def _halo_puts(slabs, zgroup: DiompGroup, ygroup: Optional[DiompGroup],
+               *, nz: int, ny: int) -> Halos:
+    """Issue the one-sided puts of a step; returns the (un-fenced) halos.
+
+    Every put is a full-ring permute with the wrap-around edge masked to
+    zeros after landing — non-periodic boundaries, same receiver-side
+    guard the compiled kernel applies to its landing windows.
+    """
+    z_lo = z_hi = y_lo = y_hi = None
+    if nz > 1:
+        lo_w, hi_w = halo_window_names(zgroup, 0)
+        iz = lax.axis_index(zgroup.axes[0])
+        z_lo = _put_slab(slabs[1], zgroup, shift=1, window=lo_w)
+        z_hi = _put_slab(slabs[0], zgroup, shift=-1, window=hi_w)
+        z_lo = jnp.where(iz == 0, jnp.zeros_like(z_lo), z_lo)
+        z_hi = jnp.where(iz == nz - 1, jnp.zeros_like(z_hi), z_hi)
+    if ny > 1:
+        lo_w, hi_w = halo_window_names(ygroup, 1)
+        iy = lax.axis_index(ygroup.axes[0])
+        y_lo = _put_slab(slabs[3], ygroup, shift=1, window=lo_w)
+        y_hi = _put_slab(slabs[2], ygroup, shift=-1, window=hi_w)
+        y_lo = jnp.where(iy == 0, jnp.zeros_like(y_lo), y_lo)
+        y_hi = jnp.where(iy == ny - 1, jnp.zeros_like(y_hi), y_hi)
+    return Halos(z_lo, z_hi, y_lo, y_hi)
+
+
+def _fence_halos(halos: Halos, zgroup: DiompGroup,
+                 ygroup: Optional[DiompGroup]) -> Halos:
+    """Complete the step's puts; advances the tracker's window epochs so the
+    subsequent halo reads satisfy the put→fence→read discipline."""
+    live = [h for h in halos if h is not None]
+    if not live:
+        return halos
+    fenced = iter(ompx_fence(*live) if len(live) > 1
+                  else (ompx_fence(*live),))
+    out = Halos(*(next(fenced) if h is not None else None for h in halos))
+    tr = _tracker()
+    windows = []
+    if halos.z_lo is not None:
+        windows += list(halo_window_names(zgroup, 0))
+    if halos.y_lo is not None:
+        windows += list(halo_window_names(ygroup, 1))
+    tr.on_fence(*windows)
+    for w in windows:
+        tr.on_read(w)
+    return out
+
+
+def exchange_halos(u, zgroup: DiompGroup, ygroup: Optional[DiompGroup] = None,
+                   *, z_extents: Optional[Tuple[int, ...]] = None) -> Halos:
+    """One complete halo exchange of the current field (puts + one fence).
+
+    The time loop's prologue — and the whole exchange of the non-overlapped
+    fallback schedule.  Inside ``shard_map``.
+    """
+    from repro.core.compat import axis_size
+
+    nz = axis_size(zgroup.axes[0])
+    ny = axis_size(ygroup.axes[0]) if ygroup is not None else 1
+    Z = u.shape[0]
+    zv = Z if z_extents is None else \
+        jnp.asarray(z_extents, jnp.int32)[lax.axis_index(zgroup.axes[0])]
+    slabs = _slabs_of(u, zv=zv, nz=nz, ny=ny)
+    return _fence_halos(_halo_puts(slabs, zgroup, ygroup, nz=nz, ny=ny),
+                        zgroup, ygroup)
+
+
+# ---------------------------------------------------------------------------
+# the interpret / CPU emulation: identical schedule over ompx_put
+# ---------------------------------------------------------------------------
+
+
+def _boundary(uext, u_prev, c2, *, zv, nz: int, ny: int, dx: float, dtype):
+    """The R-thick boundary output slabs (phase "boundary" of the plan)."""
+    R = RADIUS
+    Z, Y, X = u_prev.shape
+    lo = hi = y_lo = y_hi = None
+    if nz > 1:
+        lo = _leap(uext[0:3 * R], u_prev[0:R], c2[0:R], dx=dx, dtype=dtype)
+        hi = _leap(
+            lax.dynamic_slice(uext, (zv - R, 0, 0), (3 * R, Y + 2 * R, X + 2 * R)),
+            lax.dynamic_slice(u_prev, (zv - R, 0, 0), (R, Y, X)),
+            lax.dynamic_slice(c2, (zv - R, 0, 0), (R, Y, X)),
+            dx=dx, dtype=dtype)
+    if ny > 1:
+        y_lo = _mask_valid(
+            _leap(uext[:, 0:3 * R], u_prev[:, 0:R], c2[:, 0:R],
+                  dx=dx, dtype=dtype), zv, Z)
+        y_hi = _mask_valid(
+            _leap(uext[:, Y - R:Y + 2 * R], u_prev[:, Y - R:Y],
+                  c2[:, Y - R:Y], dx=dx, dtype=dtype), zv, Z)
+    return lo, hi, y_lo, y_hi
+
+
+def _interior(upad, u_prev, c2, *, nz: int, ny: int, dx: float, dtype):
+    """The halo-independent interior (phase "interior"): computed from the
+    local field alone, so it runs entirely under the in-flight exchange."""
+    R = RADIUS
+    Z, Y, X = u_prev.shape
+    zsl = slice(R, Z + R) if nz > 1 else slice(0, Z + 2 * R)
+    ysl = slice(R, Y + R) if ny > 1 else slice(0, Y + 2 * R)
+    pz = slice(R, Z - R) if nz > 1 else slice(0, Z)
+    py = slice(R, Y - R) if ny > 1 else slice(0, Y)
+    return _leap(upad[zsl, ysl, :], u_prev[pz, py, :], c2[pz, py, :],
+                 dx=dx, dtype=dtype)
+
+
+def _combine(interior, boundary, like, *, zv, nz: int, ny: int):
+    """Stitch the passes back into one shard; invalid rows forced to zero."""
+    R = RADIUS
+    Z, Y, X = like.shape
+    out = zeros_varying((Z, Y, X), like.dtype, like)
+    if interior is not None:
+        out = lax.dynamic_update_slice(
+            out, interior, (R if nz > 1 else 0, R if ny > 1 else 0, 0))
+    lo, hi, y_lo, y_hi = boundary
+    if y_lo is not None:
+        out = lax.dynamic_update_slice(out, y_lo, (0, 0, 0))
+        out = lax.dynamic_update_slice(out, y_hi, (0, Y - R, 0))
+    if lo is not None:
+        out = lax.dynamic_update_slice(out, lo, (0, 0, 0))
+        out = lax.dynamic_update_slice(out, hi, (zv - R, 0, 0))
+    return _mask_valid(out, zv, Z)
+
+
+def fused_wave_step_interpret(
+    u, u_prev, c2dt2, zgroup: DiompGroup,
+    ygroup: Optional[DiompGroup] = None, *,
+    plan: HaloPlan, dx: float = 1.0, halos: Optional[Halos] = None,
+    z_extents: Optional[Tuple[int, ...]] = None, return_halos: bool = False,
+):
+    """Execute :meth:`HaloPlan.schedule` with ``ompx_put`` as the remote copy.
+
+    Differentiable and asymmetric/2-D-capable; this is what the application
+    driver trains and serves through on CPU, and what XLA still compiles
+    (and overlaps) on TPU for the configurations the compiled kernel does
+    not cover.  With ``return_halos=True`` the step returns
+    ``(u_next, halos_of_u_next)`` for the carried time loop.
+    """
+    R = plan.halo
+    Z, Y, X = u.shape
+    nz, ny = plan.nz, plan.ny
+    dtype = u.dtype
+    c2 = jnp.broadcast_to(jnp.asarray(c2dt2, dtype), u.shape)
+    zv = Z if z_extents is None else \
+        jnp.asarray(z_extents, jnp.int32)[lax.axis_index(zgroup.axes[0])]
+    u = _mask_valid(u, zv, Z)
+    u_prev = _mask_valid(u_prev, zv, Z)
+    upad = jnp.pad(u, R)
+
+    if halos is None and return_halos and plan.overlap:
+        # entering the carried loop: prologue exchange of the current field
+        halos = exchange_halos(u, zgroup, ygroup, z_extents=z_extents)
+    sched = plan.schedule(carried=halos is not None)
+
+    if sched == ("all",):                      # no exchanging axis at all
+        out = _mask_valid(_leap(upad, u_prev, c2, dx=dx, dtype=dtype), zv, Z)
+        return (out, None) if return_halos else out
+
+    if sched == ("put", "fence", "all"):       # planner fallback: no overlap
+        if halos is None:
+            halos = exchange_halos(u, zgroup, ygroup, z_extents=z_extents)
+        uext = _assemble(upad, halos, zv=zv, Z=Z, Y=Y, X=X)
+        out = _mask_valid(_leap(uext, u_prev, c2, dx=dx, dtype=dtype), zv, Z)
+        # fallback halos are of the INPUT field — stale after the step, so
+        # the time loop re-exchanges next step rather than carrying them
+        return (out, None) if return_halos else out
+
+    if sched == ("put", "interior", "fence", "boundary"):
+        # single step, no carried halos: exchange the current field's slabs
+        # while the interior computes under it
+        started = _halo_puts(_slabs_of(u, zv=zv, nz=nz, ny=ny),
+                             zgroup, ygroup, nz=nz, ny=ny)
+        interior = _interior(upad, u_prev, c2, nz=nz, ny=ny, dx=dx,
+                             dtype=dtype)
+        landed = _fence_halos(started, zgroup, ygroup)
+        uext = _assemble(upad, landed, zv=zv, Z=Z, Y=Y, X=X)
+        bnd = _boundary(uext, u_prev, c2, zv=zv, nz=nz, ny=ny, dx=dx,
+                        dtype=dtype)
+        out = _combine(interior, bnd, u, zv=zv, nz=nz, ny=ny)
+        return (out, None) if return_halos else out
+
+    assert sched == ("boundary", "put", "interior", "fence"), sched
+    # carried halos: boundary first (it has everything it needs), its fresh
+    # values go straight onto the wire, the interior hides the transfer
+    uext = _assemble(upad, halos, zv=zv, Z=Z, Y=Y, X=X)
+    bnd = _boundary(uext, u_prev, c2, zv=zv, nz=nz, ny=ny, dx=dx, dtype=dtype)
+    started = _halo_puts((bnd[0], bnd[1], bnd[2], bnd[3]), zgroup, ygroup,
+                         nz=nz, ny=ny)
+    interior = _interior(upad, u_prev, c2, nz=nz, ny=ny, dx=dx, dtype=dtype)
+    new_halos = _fence_halos(started, zgroup, ygroup)
+    out = _combine(interior, bnd, u, zv=zv, nz=nz, ny=ny)
+    return (out, new_halos) if return_halos else out
+
+
+# ---------------------------------------------------------------------------
+# the TPU kernel: one pallas_call for the whole step
+# ---------------------------------------------------------------------------
+
+
+def _fused_stencil_kernel(u_ref, uprev_ref, c2_ref, o_ref, halo_bufs,
+                          send_sems, recv_sems, *, axis: str, plan: HaloPlan,
+                          dx: float):
+    """Kernel body; the phase order is baked statically, ranks are traced.
+
+    ``halo_bufs``: VMEM (2, R, Y, X) landing windows — slot 0 receives the
+    down-neighbor's hi slab (my lo halo), slot 1 the up-neighbor's lo slab.
+    Like the emulation, the puts run the full ring and the wrap-around edge
+    is masked to zeros after landing (non-periodic boundaries).
+    """
+    R = plan.halo
+    nz = plan.nz
+    Z, Y, X = u_ref.shape
+    dtype = o_ref.dtype
+
+    if nz == 1:       # whole axis local: pure Dirichlet, no comm at all
+        o_ref[...] = _leap(jnp.pad(u_ref[...], R), uprev_ref[...],
+                           c2_ref[...], dx=dx, dtype=dtype)
+        return
+
+    me = lax.axis_index(axis)
+    up = lax.rem(me + 1, nz)
+    down = lax.rem(me + nz - 1, nz)
+
+    # startup barrier: both neighbors entered the kernel before any RDMA
+    # touches their landing windows
+    barrier = pltpu.get_barrier_semaphore()
+    pltpu.semaphore_signal(barrier, inc=1, device_id=(down,),
+                           device_id_type=pltpu.DeviceIdType.LOGICAL)
+    pltpu.semaphore_signal(barrier, inc=1, device_id=(up,),
+                           device_id_type=pltpu.DeviceIdType.LOGICAL)
+    pltpu.semaphore_wait(barrier, 2)
+
+    # phase "put": one-sided deposits of my boundary slabs — my hi slab is
+    # the up-neighbor's lo halo, my lo slab the down-neighbor's hi halo
+    rdma_hi = pltpu.make_async_remote_copy(
+        src_ref=u_ref.at[pl.ds(Z - R, R)], dst_ref=halo_bufs.at[0],
+        send_sem=send_sems.at[0], recv_sem=recv_sems.at[0],
+        device_id=(up,), device_id_type=pltpu.DeviceIdType.LOGICAL)
+    rdma_lo = pltpu.make_async_remote_copy(
+        src_ref=u_ref.at[pl.ds(0, R)], dst_ref=halo_bufs.at[1],
+        send_sem=send_sems.at[1], recv_sem=recv_sems.at[1],
+        device_id=(down,), device_id_type=pltpu.DeviceIdType.LOGICAL)
+    rdma_hi.start()
+    rdma_lo.start()
+
+    # phase "interior": the halo-independent slab computes under the wire
+    u = u_ref[...]
+    upad = jnp.pad(u, R)
+    if plan.overlap:
+        o_ref[pl.ds(R, Z - 2 * R)] = _leap(
+            upad[R:Z + R], uprev_ref[pl.ds(R, Z - 2 * R)],
+            c2_ref[pl.ds(R, Z - 2 * R)], dx=dx, dtype=dtype)
+
+    # phase "fence": the neighbor slabs must have landed
+    rdma_hi.wait()
+    rdma_lo.wait()
+
+    # phase "boundary": edge ranks see Dirichlet zeros, not the wrap-around
+    lo_halo = jnp.where(me == 0, jnp.zeros_like(halo_bufs[0]), halo_bufs[0])
+    hi_halo = jnp.where(me == nz - 1, jnp.zeros_like(halo_bufs[1]),
+                        halo_bufs[1])
+    uext = upad.at[0:R, R:Y + R, R:X + R].set(lo_halo)
+    uext = uext.at[Z + R:Z + 2 * R, R:Y + R, R:X + R].set(hi_halo)
+    if plan.overlap:
+        o_ref[pl.ds(0, R)] = _leap(uext[0:3 * R], uprev_ref[pl.ds(0, R)],
+                                   c2_ref[pl.ds(0, R)], dx=dx, dtype=dtype)
+        o_ref[pl.ds(Z - R, R)] = _leap(
+            uext[Z - R:Z + 2 * R], uprev_ref[pl.ds(Z - R, R)],
+            c2_ref[pl.ds(Z - R, R)], dx=dx, dtype=dtype)
+    else:             # degenerate grid: everything is boundary
+        o_ref[...] = _leap(uext, uprev_ref[...], c2_ref[...], dx=dx,
+                           dtype=dtype)
+
+
+def fused_wave_step_tpu(u, u_prev, c2dt2, *, axis: str, plan: HaloPlan,
+                        dx: float = 1.0):
+    """The compiled fused step (requires a real TPU backend).
+
+    Restrictions recorded here rather than hidden: 1-D Z decomposition with
+    symmetric extents (2-D, asymmetric and carried-halo configurations
+    route through the emulation, which XLA compiles and overlaps on TPU);
+    the ring must be a single mesh axis; the whole shard is staged resident
+    in VMEM (the dispatcher routes shards that don't fit to the emulation —
+    the HaloPlan's bz/by staging pipeline describes the emulation's XLA
+    fusion window, not this kernel's residency).
+    """
+    Z, Y, X = u.shape
+    R = plan.halo
+    c2 = jnp.broadcast_to(jnp.asarray(c2dt2, u.dtype), u.shape)
+    return pl.pallas_call(
+        functools.partial(_fused_stencil_kernel, axis=axis, plan=plan, dx=dx),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.VMEM),
+        out_shape=jax.ShapeDtypeStruct((Z, Y, X), u.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2, R, Y, X), u.dtype),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(collective_id=1),
+    )(u, u_prev, c2)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+
+def fused_wave_step(
+    u, u_prev, c2dt2, zgroup: DiompGroup,
+    ygroup: Optional[DiompGroup] = None, *,
+    dx: float = 1.0,
+    plan: Optional[HaloPlan] = None,
+    halos: Optional[Halos] = None,
+    z_extents: Optional[Tuple[int, ...]] = None,
+    interpret: Optional[bool] = None,
+    return_halos: bool = False,
+):
+    """The fused halo-overlapped wave step entry point (inside shard_map).
+
+    ``u``/``u_prev``: (Z, Y, X) local shards; ``plan`` defaults to the
+    process planner's :meth:`~repro.kernels.plan.OverlapPlanner.
+    plan_halo_slots` for the traced shapes; ``interpret=None`` resolves
+    from the backend at call time.  ``z_extents`` (static per-rank tuple)
+    enables asymmetric Z decomposition; ``halos``/``return_halos`` thread
+    the carried-halo state of the multi-step time loop.  Configurations the
+    compiled kernel does not cover (2-D, asymmetric, carried halos) always
+    route through the emulation — which XLA still compiles on TPU.
+    """
+    from repro.core.compat import axis_size
+
+    nz = axis_size(zgroup.axes[0])
+    ny = axis_size(ygroup.axes[0]) if ygroup is not None else 1
+    Z, Y, X = u.shape
+    if z_extents is not None:
+        z_extents = tuple(int(e) for e in z_extents)
+        if len(z_extents) != nz:
+            raise ValueError(
+                f"z_extents has {len(z_extents)} entries for {nz} Z ranks")
+        if max(z_extents) > Z:
+            raise ValueError(
+                f"z_extents {z_extents} exceed the padded shard extent {Z}")
+    min_z = Z if z_extents is None else min(z_extents)
+    if nz > 1 and min_z < RADIUS:
+        raise RMAError(
+            f"halo {RADIUS} exceeds the smallest local Z extent {min_z}: "
+            "the exchange would wrap non-neighbor data into the slab "
+            "(merge ranks or grow the grid)")
+    if ny > 1 and Y < RADIUS:
+        raise RMAError(
+            f"halo {RADIUS} exceeds the local Y extent {Y}")
+    if plan is None:
+        plan = default_planner().plan_halo_slots(
+            Z, Y, X, u.dtype, nz, ny=ny, halo=RADIUS)
+    if (plan.nz, plan.ny) != (nz, ny):
+        raise ValueError(
+            f"plan for (nz={plan.nz}, ny={plan.ny}) used on a "
+            f"(nz={nz}, ny={ny}) decomposition")
+    if plan.halo != RADIUS:
+        raise ValueError(f"plan.halo={plan.halo} != stencil radius {RADIUS}")
+
+    # the compiled kernel keeps u/u_prev/c2/out + the halo landing windows
+    # wholly resident in VMEM; larger shards take the emulation, which XLA
+    # pipelines through HBM on TPU
+    item = jnp.dtype(u.dtype).itemsize
+    kernel_bytes = (4 * Z + 2 * RADIUS) * Y * X * item
+    needs_emulation = (ny > 1 or z_extents is not None
+                       or halos is not None or return_halos
+                       or kernel_bytes > default_planner().vmem_budget)
+    if resolve_interpret(interpret) or needs_emulation:
+        return fused_wave_step_interpret(
+            u, u_prev, c2dt2, zgroup, ygroup, plan=plan, dx=dx,
+            halos=halos, z_extents=z_extents, return_halos=return_halos)
+    return fused_wave_step_tpu(u, u_prev, c2dt2, axis=zgroup.axes[0],
+                               plan=plan, dx=dx)

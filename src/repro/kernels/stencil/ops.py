@@ -3,6 +3,12 @@
 ``bz=None`` sizes the Z slab through the shared OverlapPlanner (the halo
 slab must double-buffer inside the VMEM budget — the StreamPool.plan_slots
 contract); ``interpret=None`` resolves from the backend at call time.
+
+The resolution happens HERE, before the jit boundary, so the jit cache is
+keyed on the *resolved* flag rather than on ``None``: a cached trace can
+never pin a stale backend resolution (the silent-interpretation bug class
+PR 2 fixed for the matmul path), and calling with ``interpret=None`` vs the
+explicitly resolved value hits the same cache entry.
 """
 
 from __future__ import annotations
@@ -13,22 +19,36 @@ from typing import Optional
 import jax
 
 from repro.kernels.plan import default_planner, resolve_interpret
+from .fused import exchange_halos, fused_wave_step  # noqa: F401 - re-export
 from .kernel import wave_step_pallas
 from .ref import RADIUS
 from .ref import wave_step_ref
 
-__all__ = ["wave_step"]
+__all__ = ["wave_step", "fused_wave_step", "exchange_halos"]
 
 
 @functools.partial(jax.jit, static_argnames=("dx", "impl", "bz", "interpret"))
-def wave_step(u, u_prev, c2dt2, *, dx: float = 1.0, impl: str = "ref",
-              bz: Optional[int] = None, interpret: Optional[bool] = None):
+def _wave_step_jit(u, u_prev, c2dt2, *, dx: float, impl: str,
+                   bz: Optional[int], interpret: Optional[bool]):
     if impl == "ref":
         return wave_step_ref(u, u_prev, c2dt2, dx=dx)
     if impl == "pallas":
+        return wave_step_pallas(u, u_prev, c2dt2, dx=dx, bz=bz,
+                                interpret=interpret)
+    raise ValueError(impl)
+
+
+def wave_step(u, u_prev, c2dt2, *, dx: float = 1.0, impl: str = "ref",
+              bz: Optional[int] = None, interpret: Optional[bool] = None):
+    """u, u_prev: (Z, Y, X) f32; c2dt2 scalar or (Z, Y, X).  One leapfrog step."""
+    if impl == "pallas":
+        interpret = resolve_interpret(interpret)
         if bz is None:
             bz = default_planner().plan_stencil_bz(
                 u.shape[0], u.shape[1], u.shape[2], u.dtype, radius=RADIUS)
-        return wave_step_pallas(u, u_prev, c2dt2, dx=dx, bz=bz,
-                                interpret=resolve_interpret(interpret))
-    raise ValueError(impl)
+    else:
+        # the ref path ignores both knobs: normalize them out of the jit key
+        # so explicit values cannot mint duplicate cache entries
+        bz = interpret = None
+    return _wave_step_jit(u, u_prev, c2dt2, dx=dx, impl=impl, bz=bz,
+                          interpret=interpret)

@@ -4,6 +4,12 @@ LM transformer shapes are seq_len × global_batch.  decode_* / long_* lower
 ``serve_step`` (one new token against a seq_len KV cache), not train_step.
 long_500k needs sub-quadratic attention: runs only for SSM/hybrid archs;
 encoder-only archs have no decode step at all.
+
+``STENCIL_SHAPES`` are the Minimod application cells — grid extents plus
+the (Z×Y) domain decomposition, including the heterogeneous-rank cells
+whose asymmetric Z extents exercise the PGAS asymmetric-allocation path
+(consumed by :mod:`repro.apps.minimod`, ``examples/minimod.py`` and
+``benchmarks/bench_minimod.py``).
 """
 
 from __future__ import annotations
@@ -14,7 +20,8 @@ from typing import Optional, Tuple
 from repro.models import api as model_api
 from repro.models.config import ModelConfig
 
-__all__ = ["SHAPES", "Shape", "applicable", "skip_reason"]
+__all__ = ["SHAPES", "Shape", "STENCIL_SHAPES", "StencilShape",
+           "applicable", "skip_reason"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,6 +37,37 @@ SHAPES = {
     "prefill_32k": Shape("prefill_32k", 32_768, 32, "prefill"),
     "decode_32k": Shape("decode_32k", 32_768, 128, "decode"),
     "long_500k": Shape("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class StencilShape:
+    """One Minimod cell: global grid + (Z×Y) decomposition + time steps.
+
+    ``weights`` (optional) makes the Z decomposition *asymmetric*: rank i
+    owns a subdomain proportional to ``weights[i]`` (heterogeneous ranks,
+    the paper's asymmetric-allocation scenario).  ``ny > 1`` additionally
+    splits the Y axis (symmetric) for the 2-D decomposition.
+    """
+
+    name: str
+    grid: Tuple[int, int, int]          # Z, Y, X
+    steps: int
+    nz: int
+    ny: int = 1
+    weights: Optional[Tuple[int, ...]] = None
+
+    @property
+    def ranks(self) -> int:
+        return self.nz * self.ny
+
+
+STENCIL_SHAPES = {
+    "minimod_64": StencilShape("minimod_64", (64, 64, 64), 10, 8),
+    "minimod_2d": StencilShape("minimod_2d", (64, 32, 64), 10, 4, ny=2),
+    "minimod_hetero": StencilShape(
+        "minimod_hetero", (60, 48, 48), 10, 4, weights=(3, 2, 2, 1)),
+    "minimod_smoke": StencilShape("minimod_smoke", (48, 16, 16), 3, 4),
 }
 
 

@@ -1,0 +1,126 @@
+"""Property-based halo-exchange tests (via tests/_minihyp.py).
+
+``rma.halo_exchange`` over random (halo, axis, shard-size, backend) tuples:
+
+* interior ranks receive exactly the neighbors' boundary slabs;
+* edge ranks receive zeros (non-periodic boundaries);
+* ``halo`` exceeding the local shard raises a clear ``RMAError`` instead
+  of silently wrapping neighbor-of-neighbor data;
+* every put is fenced before read — the RMATracker's epoch discipline
+  holds after each exchange, and the misuse (read with an un-fenced put
+  outstanding) raises.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                              # container has no hypothesis
+    from _minihyp import given, settings, st
+
+from repro.core import rma
+from repro.core.compat import make_mesh, shard_map
+from repro.core.context import DiompContext, use_default
+from repro.core.groups import DiompGroup
+from repro.core.rma import RMAError, RMATracker, halo_window_names
+
+NDEV = 4
+GROUP = DiompGroup(("x",), name="halo-ring")
+BACKENDS = ("xla", "hierarchical")
+
+
+def _run_exchange(per: int, halo: int, axis: int, backend: str):
+    """Returns (left, right, local shards, ctx) of one jitted exchange."""
+    mesh = make_mesh((NDEV,), ("x",), axis_types="auto")
+    shape = [3, 5]
+    shape.insert(axis, NDEV * per)
+    x = np.arange(np.prod(shape), dtype=np.float32).reshape(shape)
+    spec = [None, None]
+    spec.insert(axis, "x")
+
+    def ex(a):
+        return rma.halo_exchange(a, GROUP, halo=halo, axis=axis,
+                                 backend=backend)
+
+    ctx = DiompContext(mesh=mesh)
+    with use_default(ctx):
+        f = jax.jit(shard_map(ex, mesh=mesh, in_specs=(P(*spec),),
+                              out_specs=(P(*spec), P(*spec))))
+        left, right = f(x)
+    shards = np.split(x, NDEV, axis=axis)
+    return np.asarray(left), np.asarray(right), shards, ctx
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.tuples(st.integers(1, 8), st.integers(0, 1),
+                 st.integers(1, 6), st.integers(0, len(BACKENDS) - 1)))
+def test_halo_exchange_properties(case):
+    halo, axis, per, bidx = case
+    backend = BACKENDS[bidx]
+    if halo > per:
+        # over-wide halo must fail loudly, not wrap around the ring
+        with pytest.raises(RMAError):
+            _run_exchange(per, halo, axis, backend)
+        return
+    left, right, shards, ctx = _run_exchange(per, halo, axis, backend)
+    lefts = np.split(left, NDEV, axis=axis)
+    rights = np.split(right, NDEV, axis=axis)
+    for r in range(NDEV):
+        if r == 0:     # edge ranks receive zeros (the paper's rank guards)
+            assert not lefts[r].any()
+        else:          # interior: exactly the left neighbor's hi slab
+            want = np.take(shards[r - 1], range(per - halo, per), axis=axis)
+            np.testing.assert_array_equal(lefts[r], want)
+        if r == NDEV - 1:
+            assert not rights[r].any()
+        else:
+            want = np.take(shards[r + 1], range(0, halo), axis=axis)
+            np.testing.assert_array_equal(rights[r], want)
+    # epoch discipline: both windows saw a put, a fence, then the read —
+    # nothing left dirty, and the byte accounting matches the slab size
+    lo_w, hi_w = halo_window_names(GROUP, axis)
+    slab = shards[0].size // per * halo * 4
+    assert ctx.rma.puts == 2 and ctx.rma.fences == 1
+    assert ctx.rma.window_bytes[lo_w] == ctx.rma.window_bytes[hi_w] == slab
+    for w in (lo_w, hi_w):
+        ctx.rma.on_read(w)      # a clean window reads without raising
+
+
+def test_unfenced_read_raises():
+    """The discipline the windows enforce: put -> read without a fence is
+    exactly the bug class ompx_fence exists to prevent."""
+    tr = RMATracker()
+    tr.ensure("w")
+    tr.on_put("w", 128)
+    with pytest.raises(RMAError):
+        tr.on_read("w")
+    tr.on_fence("w")
+    tr.on_read("w")             # fenced: fine
+    assert tr.put_bytes == 128
+
+
+def test_halo_exchange_validates_before_any_put():
+    """A rejected exchange must not leave dirty windows behind."""
+    mesh = make_mesh((NDEV,), ("x",), axis_types="auto")
+    x = np.zeros((NDEV * 2, 3), np.float32)
+    ctx = DiompContext(mesh=mesh)
+    with use_default(ctx):
+        with pytest.raises(RMAError):
+            shard_map(lambda a: rma.halo_exchange(a, GROUP, halo=5, axis=0),
+                      mesh=mesh, in_specs=(P("x", None),),
+                      out_specs=(P("x", None), P("x", None)))(x)
+    assert ctx.rma.puts == 0    # validation fired before any recording
+
+
+def test_halo_zero_raises():
+    mesh = make_mesh((NDEV,), ("x",), axis_types="auto")
+    x = np.zeros((NDEV * 2, 3), np.float32)
+    with use_default(DiompContext(mesh=mesh)):
+        with pytest.raises(RMAError):
+            shard_map(lambda a: rma.halo_exchange(a, GROUP, halo=0, axis=0),
+                      mesh=mesh, in_specs=(P("x", None),),
+                      out_specs=(P("x", None), P("x", None)))(x)
