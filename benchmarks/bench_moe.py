@@ -1,0 +1,321 @@
+"""MoE dispatch & all-to-all overlap: none / a2a / host / fused.
+
+The dropless expert-parallel dispatch (:mod:`repro.kernels.moe_dispatch`)
+swept over EP group sizes under load-imbalanced routing, against the two
+baselines it replaces:
+
+* ``none``  — no expert parallelism emulation: allgather every rank's
+              tokens, compute the local experts on the full set, allreduce
+              the partial outputs back;
+* ``a2a``   — the capacity-factor collective (``moe_block``'s host path):
+              two serialized ``ompx_alltoall``s of capacity-PADDED buffers,
+              the expert GEMMs run on the padding too, overflow drops;
+* ``host``  — the one-sided ring serialized (all dispatch puts, fence,
+              GEMMs, all combine puts, fence): true asymmetric rows on the
+              wire, overlap left to the XLA scheduler;
+* ``fused`` — the ``AllToAllPlan`` overlapped schedule: the put feeding
+              step s+1 and the combine put of step s-1 both ride under
+              step s's GEMMs.
+
+All virtual devices share one physical core, so wall time cannot show the
+overlap win; the ``modeled_*`` columns walk each mode's schedule at
+DeepSeek-V3 scale (t_loc=8192 tokens, d=7168, k=8, E=256, f=2048, bf16,
+v5e: 197 TFLOP/s, 50 GB/s per ICI link direction) with per-expert loads
+stretched from the sweep's measured routing skew.  The fused mode must
+never model slower than ``a2a`` or ``host`` at any swept EP size —
+asserted here, so the benchmark doubles as a regression gate — and the
+fused run's put bytes must match the RMATracker dispatch/combine windows
+exactly.  Both one-sided modes must reproduce the single-device dropless
+oracle bit-for-bit with zero drops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.backends import (LinkModel, ring_allgather_time,
+                                 ring_allreduce_time)
+from repro.core.compat import make_mesh, shard_map
+from repro.core.context import DiompContext, default_context, use_default
+from repro.core.groups import DiompGroup
+from repro.core.rma import dispatch_window_names
+from repro.kernels.moe_dispatch import (measure_expert_load, moe_dispatch,
+                                        moe_ref, route_topk)
+from repro.kernels.plan import default_planner
+from repro.models.config import ModelConfig, ParallelCtx
+from repro.models.layers import moe_block
+
+from .common import timeit, write_csv
+
+# v5e-flavored model constants (per chip / per ICI link direction)
+PEAK_FLOPS = 197e12
+LINK = LinkModel()           # 50 GB/s per direction, 1 us hop latency
+DISPATCH_OVERHEAD = LINK.dispatch_s        # per host-issued launch
+
+# one DeepSeek-V3 MoE layer at serving scale, bf16 rows on the wire
+P_TLOC, P_D, P_K, P_E, P_F = 8192, 7168, 8, 256, 2048
+P_ITEM = 2
+# the padded collective must over-provision capacity to keep drops
+# tolerable (the repo's reduced configs train at cf=2.0; 1.25 is already
+# generous to the baseline) — and it wires AND GEMMs the padding
+CF_A2A = 1.25
+
+GROUP = DiompGroup(("x",), name="epx")
+MODES = ("none", "a2a", "host", "fused")
+EPS = (2, 4, 8)
+K = 2                        # experts per token in the tiny sweep
+
+
+def _gemm_t(rows: float) -> float:
+    """Three expert GEMMs (gate, up, down) over ``rows`` token rows."""
+    return 6.0 * rows * P_D * P_F / PEAK_FLOPS
+
+
+def _paper_plan(ep: int, frac, overlap: bool):
+    """The AllToAllPlan for the paper-scale layer, caps from ``frac``.
+
+    A paper-scale block cannot double-buffer whole in VMEM, so the planner
+    degrades to the serialized schedule; the kernel streams each block
+    through its staging slots instead (``moe_dispatch`` forces the
+    schedule to the impl), so the model walks the requested one.
+    """
+    rows_all = P_TLOC * P_K
+    loads = tuple(int(max(1, np.ceil(f * rows_all))) for f in frac)
+    plan = default_planner().plan_alltoall(
+        P_TLOC, P_D, P_K, P_E, ep, jnp.bfloat16, loads=loads,
+        overlap=overlap)
+    return dataclasses.replace(plan, overlap=overlap)
+
+
+def _modeled(ep: int, mode: str, frac):
+    """(per-layer seconds, wire bytes/rank, overlap) at the paper scale."""
+    rows_all = P_TLOC * P_K
+    if mode == "none":
+        tok = P_TLOC * P_D * P_ITEM
+        t = (2 * DISPATCH_OVERHEAD
+             + ring_allgather_time(tok * ep, ep, LINK)
+             + ring_allreduce_time(tok * ep, ep, LINK)
+             + _gemm_t(rows_all))
+        return t, 3 * (ep - 1) * tok, False
+    if mode == "a2a":
+        cap = int(np.ceil(rows_all / P_E * CF_A2A))
+        buf = P_E * cap * P_D * P_ITEM       # capacity-padded send buffer
+        t_x = ((ep - 1) / ep * buf / LINK.bandwidth_Bps
+               + (ep - 1) * LINK.latency_s)
+        # dispatch a2a, padded GEMMs, return a2a — strictly serialized
+        t = 2 * (DISPATCH_OVERHEAD + t_x) + _gemm_t(P_E * cap)
+        return t, int(2 * (ep - 1) / ep * buf), False
+
+    plan = _paper_plan(ep, frac, overlap=(mode == "fused"))
+    # critical path: the busiest rank's landing block, every ring step
+    rows_step = max(plan.block_rows(r) for r in range(ep))
+    blk = rows_step * P_D * P_ITEM           # true rows, not the pad
+    t_step = _gemm_t(rows_step)
+    t, link_free = DISPATCH_OVERHEAD, 0.0
+    put_done, ret_done = {}, []
+    for phase, s in plan.schedule():
+        if phase in ("put", "ret"):          # async: occupies the link only
+            start = max(t, link_free)
+            link_free = start + blk / LINK.bandwidth_Bps
+            if phase == "put":
+                put_done[s] = link_free + LINK.latency_s
+            else:
+                ret_done.append(link_free + LINK.latency_s)
+        elif phase == "fence":
+            t = max(t, put_done[s])
+        elif phase == "gemm":
+            t += t_step
+        else:                                # fence_ret
+            t = max(t, max(ret_done, default=t))
+    return t, plan.wire_bytes, plan.overlap
+
+
+# ---------------------------------------------------------------------------
+# the tiny real sweep
+# ---------------------------------------------------------------------------
+
+def _tiny_case(ep: int, E=16, t_loc=32, d=32, f=32, skew=1.5, seed=0):
+    """Imbalanced-routing case: arrays, load-sized plan, dropless oracle."""
+    rng = np.random.RandomState(seed)
+    toks = rng.randn(ep * t_loc, d).astype(np.float32)
+    router = (rng.randn(d, E) + skew * rng.randn(1, E)).astype(np.float32)
+    wg = (rng.randn(E, d, f) / np.sqrt(d)).astype(np.float32)
+    wu = (rng.randn(E, d, f) / np.sqrt(d)).astype(np.float32)
+    wd = (rng.randn(E, f, d) / np.sqrt(f)).astype(np.float32)
+    top_w, top_e = jax.jit(route_topk, static_argnums=2)(toks, router, K)
+    loads = measure_expert_load(
+        np.asarray(top_e).reshape(ep, t_loc, K), E, sources=ep)
+    plan = default_planner().plan_alltoall(t_loc, d, K, E, ep, jnp.float32,
+                                           loads=loads)
+    want = np.asarray(moe_ref(toks, top_e, top_w, wg, wu, wd))
+    return toks, router, (wg, wu, wd), plan, loads, want
+
+
+def _dispatch_fn(mesh, impl, plan):
+    def f(tk, rt, g, u, dn):
+        w, e = route_topk(tk, rt, K)
+        with default_context().dispatch_stats.collect() as ds:
+            out = moe_dispatch(tk, e, w, g, u, dn, GROUP,
+                               impl=impl, plan=plan)
+        return out, ds["moe_dropped"].reshape(1)
+
+    return jax.jit(shard_map(
+        f, mesh=mesh,
+        in_specs=(P("x", None), P(None, None), P("x", None, None),
+                  P("x", None, None), P("x", None, None)),
+        out_specs=(P("x", None), P("x"))))
+
+
+def _ref_fn():
+    def f(tk, rt, g, u, dn):
+        w, e = route_topk(tk, rt, K)
+        return moe_ref(tk, e, w, g, u, dn)
+
+    return jax.jit(f)
+
+
+def _a2a_fn(ep: int, E: int, f_dim: int):
+    """The real capacity collective: moe_block's a2a regime, EP = 'model'."""
+    cfg = ModelConfig(name="bench-moe", family="moe", num_layers=1,
+                      d_model=32, num_heads=4, d_ff=64, vocab_size=128,
+                      moe=True, num_experts=E, experts_per_token=K,
+                      moe_d_ff=f_dim, capacity_factor=CF_A2A,
+                      dtype="float32")
+    mesh = make_mesh((1, ep), ("data", "model"), axis_types="auto")
+    ctx = ParallelCtx.from_mesh(mesh)
+    espec = P("model", None, None)
+    lspecs = {"router": P(None, None), "w_gate_e": espec, "w_up_e": espec,
+              "w_down_e": espec}
+
+    def f(xx, pp):
+        return lax.pmean(moe_block(xx, pp, cfg, ctx), "model")
+
+    return jax.jit(shard_map(f, mesh=mesh, in_specs=(P(), lspecs),
+                             out_specs=P()))
+
+
+def _fused_put_parity(mesh, plan, toks, router, weights):
+    """Lower the fused dispatch under a fresh context; check the books."""
+    def f(tk, rt, g, u, dn):
+        w, e = route_topk(tk, rt, K)
+        return moe_dispatch(tk, e, w, g, u, dn, GROUP, impl="fused",
+                            plan=plan)
+
+    dctx = DiompContext()
+    with use_default(dctx):
+        jax.jit(shard_map(
+            f, mesh=mesh,
+            in_specs=(P("x", None), P(None, None), P("x", None, None),
+                      P("x", None, None), P("x", None, None)),
+            out_specs=P("x", None))).lower(toks, router, *weights)
+    desc = GROUP.descriptor()
+    puts = dctx.stats()[desc]["put"]
+    put_bytes = dctx.byte_stats()[desc]["put"]
+    dwin, cwin = dispatch_window_names(GROUP, plan.ep)
+    win_bytes = sum(dctx.rma.window_bytes[w] for w in dwin + cwin)
+    # acceptance: OMPCCL byte log == RMA window accounting, exactly
+    assert puts == 2 * (plan.ep - 1), (puts, plan.ep)
+    assert put_bytes == 2 * (plan.ep - 1) * plan.block_bytes
+    assert put_bytes == win_bytes == dctx.rma.put_bytes
+    return puts, put_bytes
+
+
+def run(quick: bool = False):
+    warmup, iters = (1, 2) if quick else (2, 5)
+    rows = []
+    frac = None
+    mesh = plan = None
+    for ep in EPS:
+        mesh = make_mesh((ep,), ("x",), axis_types="auto")
+        toks, router, weights, plan, loads, want = _tiny_case(ep)
+        # stretch this sweep's measured skew to the paper's 256 experts
+        rep = P_E // len(loads)
+        w = np.repeat(np.asarray(loads, float), rep) / rep
+        frac = w / w.sum()
+
+        walls, outs = {}, {}
+        for impl in ("host", "fused"):
+            fn = _dispatch_fn(mesh, impl, plan)
+            out, dropped = fn(toks, router, *weights)
+            outs[impl] = np.asarray(out)
+            assert float(np.asarray(dropped).sum()) == 0.0, impl
+            walls[impl] = timeit(fn, toks, router, *weights,
+                                 warmup=warmup, iters=iters)
+        # dropless: both one-sided modes reproduce the oracle bit-for-bit
+        np.testing.assert_array_equal(outs["fused"], want)
+        np.testing.assert_array_equal(outs["host"], want)
+        walls["none"] = timeit(_ref_fn(), toks, router, *weights,
+                               warmup=warmup, iters=iters)
+        a2a = _a2a_fn(ep, E=len(loads), f_dim=weights[0].shape[-1])
+        x3d = toks.reshape(ep, toks.shape[0] // ep, toks.shape[1])
+        lp = {"router": router, "w_gate_e": weights[0],
+              "w_up_e": weights[1], "w_down_e": weights[2]}
+        walls["a2a"] = timeit(a2a, x3d, lp, warmup=warmup, iters=iters)
+
+        puts, put_bytes = _fused_put_parity(mesh, plan, toks, router,
+                                            weights)
+        modeled = {m: _modeled(ep, m, frac) for m in MODES}
+        base = modeled["a2a"][0]
+        for m in MODES:
+            step_s, wire, overlap = modeled[m]
+            rows.append({
+                "ep": ep,
+                "mode": m,
+                "wall_s": round(walls[m], 4),
+                "wall_note": "1-core CPU serializes devices",
+                "modeled_layer_s": round(step_s, 6),
+                "modeled_speedup_vs_a2a": round(base / step_s, 2),
+                "wire_MB_per_rank": round(wire / 2**20, 2),
+                "puts": puts if m == "fused" else "-",
+                "put_bytes": put_bytes if m == "fused" else "-",
+                "modeled_overlap": overlap,
+            })
+        # the gate: the overlapped dropless schedule never models slower
+        # than the padded collective or the serialized one-sided listing
+        assert modeled["fused"][0] <= modeled["a2a"][0], (ep, modeled)
+        assert modeled["fused"][0] <= modeled["host"][0], (ep, modeled)
+
+    # asymmetric PGAS landing regions for the last sweep's plan: the home
+    # rank of expert e registers ep*caps[e] rows, every other rank zero
+    dctx = DiompContext(mesh=mesh)
+    item, asym_bytes = plan.itemsize, 0
+    for e_idx, region_rows in enumerate(plan.region_rows):
+        home = e_idx // plan.E_loc
+        sizes = [region_rows * plan.d * item if r == home else 0
+                 for r in range(plan.ep)]
+        dctx.memory.alloc_asymmetric(f"moe.dispatch.e{e_idx}", sizes, GROUP,
+                                     dtype="float32")
+        asym_bytes += region_rows * plan.d * item
+    pad_bytes = plan.E * plan.ep * plan.cap_pad * plan.d * item
+    pplan = _paper_plan(EPS[-1], frac, overlap=True)
+    p_asym = sum(pplan.region_rows) * P_D * P_ITEM
+    p_pad = P_E * pplan.ep * pplan.cap_pad * P_D * P_ITEM
+    rows.append({
+        "ep": plan.ep,
+        "mode": f"regions E={plan.E} asym {asym_bytes}B vs padded "
+                f"{pad_bytes}B",
+        "wall_s": "-",
+        "wall_note": f"paper scale: {round(p_asym / 2**30, 2)} GiB vs "
+                     f"{round(p_pad / 2**30, 2)} GiB padded",
+        "modeled_layer_s": "-",
+        "modeled_speedup_vs_a2a": "-",
+        "wire_MB_per_rank": "-",
+        "puts": "-", "put_bytes": "-", "modeled_overlap": "-",
+    })
+    assert asym_bytes <= pad_bytes
+
+    path = write_csv("moe.csv", rows)
+    print(f"[bench_moe] -> {path}")
+    for r in rows:
+        print("  ", r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

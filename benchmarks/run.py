@@ -9,6 +9,8 @@
   matmul       (paper Fig. 7: Cannon ring matmul scaling, 3 overlap modes)
   minimod      (paper Fig. 8 + Listings 1-2: none/host/fused halo modes,
                 asymmetric decomposition, fused-overlap gate + LOC)
+  moe          (dropless MoE dispatch: none/a2a/host/fused over EP sizes,
+                asymmetric expert regions, fused-overlap + parity gates)
   streams      (paper §3.2: stream-pool policy throughput)
   kvcache      (paper Fig. 2: asymmetric heap / page-table churn)
 
@@ -55,7 +57,7 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset (p2p,collectives,"
-                         "grad_reduce,matmul,minimod,streams,kvcache)")
+                         "grad_reduce,matmul,minimod,moe,streams,kvcache)")
     ap.add_argument("--json", nargs="?", const=SUMMARY_DEFAULT, default=None,
                     metavar="PATH",
                     help="write the consolidated BENCH_summary.json "
@@ -64,7 +66,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from . import (bench_collectives, bench_kvcache, bench_matmul,
-                   bench_minimod, bench_p2p, bench_streams)
+                   bench_minimod, bench_moe, bench_p2p, bench_streams)
 
     table = {
         "p2p": bench_p2p.run,
@@ -72,6 +74,7 @@ def main(argv=None):
         "grad_reduce": bench_collectives.run_grad_reduce,
         "matmul": bench_matmul.run,
         "minimod": bench_minimod.run,
+        "moe": bench_moe.run,
         "streams": bench_streams.run,
         "kvcache": bench_kvcache.run,
     }

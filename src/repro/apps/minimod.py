@@ -48,7 +48,7 @@ from repro.core import ompccl, rma
 from repro.core.compat import axis_size, make_mesh, shard_map
 from repro.core.context import DiompContext, use_default
 from repro.core.groups import DiompGroup
-from repro.kernels.plan import HaloPlan, default_planner
+from repro.kernels.plan import HaloPlan, default_planner, split_extents
 from repro.kernels.stencil.fused import (Halos, exchange_halos,
                                          fused_wave_step)
 from repro.kernels.stencil.ref import RADIUS, wave_step_ref
@@ -71,43 +71,9 @@ MODES = ("none", "host", "fused")
 # ---------------------------------------------------------------------------
 
 
-def split_extents(total: int, parts: int,
-                  weights: Optional[Sequence[float]] = None,
-                  *, minimum: int = 1) -> Tuple[int, ...]:
-    """Proportional largest-remainder split of ``total`` into ``parts``.
-
-    Every extent is at least ``minimum`` (the stencil needs ``RADIUS`` valid
-    rows per rank for the halo slabs).  ``weights=None`` degrades to the
-    near-even split, which also covers non-divisible grids — a non-divisible
-    symmetric request is just the asymmetric path with unit weights.
-    """
-    if parts < 1:
-        raise ValueError("parts must be >= 1")
-    weights = tuple(weights) if weights is not None else (1,) * parts
-    if len(weights) != parts:
-        raise ValueError(f"{len(weights)} weights for {parts} parts")
-    if min(weights) <= 0:
-        raise ValueError("weights must be positive")
-    if minimum * parts > total:
-        raise ValueError(
-            f"cannot give {parts} ranks at least {minimum} of {total} rows")
-    wsum = float(sum(weights))
-    raw = [total * w / wsum for w in weights]
-    ext = [max(int(r), minimum) for r in raw]
-    order = sorted(range(parts), key=lambda i: raw[i] - int(raw[i]),
-                   reverse=True)
-    i = 0
-    while sum(ext) < total:
-        ext[order[i % parts]] += 1
-        i += 1
-    donors = sorted(range(parts), key=lambda i: ext[i] - raw[i], reverse=True)
-    i = 0
-    while sum(ext) > total:
-        j = donors[i % parts]
-        if ext[j] > minimum:
-            ext[j] -= 1
-        i += 1
-    return tuple(ext)
+# split_extents lives in repro.kernels.plan (it now also sizes the MoE
+# dispatch planner's per-expert capacities); re-exported here unchanged so
+# the driver API and existing imports keep working.
 
 
 def pad_shards(a: np.ndarray, z_extents: Sequence[int]) -> np.ndarray:

@@ -48,6 +48,7 @@ from .streams import HybridPoller, StreamPool
 __all__ = [
     "Communicator",
     "CommTable",
+    "DispatchStats",
     "DiompContext",
     "init",
     "default_context",
@@ -255,6 +256,52 @@ class CommTable:
         return {k: dict(v) for k, v in self._nbytes.items() if v}
 
 
+class DispatchStats:
+    """Trace-scoped auxiliary-stat collector for the MoE dispatch paths.
+
+    The context's call/byte logs (:meth:`DiompContext.stats` /
+    :meth:`DiompContext.byte_stats`) are *host-side* trace-time counters;
+    token drops are *data-dependent* (the ``slot < cap`` overflow mask),
+    so they must flow out of the jitted step as traced scalars.  A caller
+    that wants them opens a collection frame INSIDE its traced function::
+
+        with ctx.dispatch_stats.collect() as ds:
+            loss = loss_fn(params, batch, cfg, pctx)
+        dropped, routed = ds.get("moe_dropped"), ds.get("moe_routed")
+
+    and returns the frame's values as ordinary outputs.  ``moe_block``
+    records ``moe_dropped`` (capacity-overflow drops of the host
+    ``a2a``/``gather`` paths; identically zero on the dropless fused
+    path) and ``moe_routed`` (total (token, choice) pairs) into the
+    innermost active frame; records outside any frame are discarded, so
+    steps that don't ask pay nothing.  Values recorded under the same key
+    accumulate by addition (layers and microbatches sum naturally).
+    """
+
+    def __init__(self):
+        self._frames = []
+
+    @property
+    def active(self) -> bool:
+        return bool(self._frames)
+
+    def record(self, **values) -> None:
+        if not self._frames:
+            return
+        frame = self._frames[-1]
+        for key, val in values.items():
+            frame[key] = frame[key] + val if key in frame else val
+
+    @contextmanager
+    def collect(self):
+        frame: Dict[str, object] = {}
+        self._frames.append(frame)
+        try:
+            yield frame
+        finally:
+            self._frames.pop()
+
+
 class DiompContext:
     """One deployment's unified runtime state (paper Fig. 1b, host side).
 
@@ -287,6 +334,7 @@ class DiompContext:
         self.poller = HybridPoller()
         self.rma = RMATracker()
         self.comms = CommTable()
+        self.dispatch_stats = DispatchStats()
         # bootstrap: validate every group's descriptor (UniqueID handshake)
         self._descriptors = {
             name: g.validate(mesh).descriptor()
@@ -325,7 +373,10 @@ class DiompContext:
 
     def byte_stats(self) -> Dict[str, Dict[str, int]]:
         """Per-group, per-op cumulative payload bytes (the wire-volume log
-        the bucketed gradient path is audited against)."""
+        the bucketed gradient path is audited against).  Data-dependent
+        MoE routing stats (capacity-overflow drop counts) are traced
+        scalars, not host counters — they live on :attr:`dispatch_stats`.
+        """
         return self.comms.byte_stats()
 
     def reset_stats(self) -> None:

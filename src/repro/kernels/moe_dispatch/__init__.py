@@ -1,0 +1,2 @@
+from .ops import moe_dispatch  # noqa: F401
+from .ref import measure_expert_load, moe_ref, route_topk  # noqa: F401

@@ -1,0 +1,89 @@
+"""MoE dispatch entry point — the op ``moe_block`` routes through.
+
+``moe_dispatch`` is the dropless one-sided counterpart of the host
+``ompccl.alltoall`` capacity path: same layout contract (inside shard_map,
+per-rank tokens + this rank's expert weights), the exchange realized as
+the :class:`~repro.kernels.plan.AllToAllPlan` ring of one-sided puts with
+the return combine overlapped under the expert GEMMs.
+
+Implementation selection mirrors :mod:`repro.kernels.ring_matmul.ops`:
+
+* ``impl="fused"`` — the overlapped schedule: compiled in-kernel RDMA on
+  TPU, the differentiable step-for-step emulation elsewhere (and whenever
+  a custom ``mlp`` is supplied);
+* ``impl="host"``  — the same one-sided traffic serialized (all dispatch
+  puts, fence, GEMMs, all combine puts, fence): the benchmark's middle
+  mode, overlap left to the XLA scheduler.
+
+Routing stats (``moe_dropped`` / ``moe_routed``) are recorded into the
+active :class:`~repro.core.context.DispatchStats` frame; on a plan sized
+from measured load the dropped count is identically zero — the property
+``tests/test_moe_fused.py`` pins.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+from repro.core.compat import axis_size
+from repro.core.groups import DiompGroup
+from repro.kernels.plan import (AllToAllPlan, default_planner,
+                                resolve_dispatch_impl, resolve_interpret)
+from .fused import fused_moe_dispatch_interpret, fused_moe_dispatch_tpu
+
+__all__ = ["moe_dispatch"]
+
+
+def moe_dispatch(toks, top_e, top_w, wg, wu, wd, group: DiompGroup, *,
+                 impl: Optional[str] = None,
+                 plan: Optional[AllToAllPlan] = None,
+                 interpret: Optional[bool] = None,
+                 mlp: Optional[Callable] = None):
+    """Dropless expert-parallel dispatch + MLP + combine (inside shard_map).
+
+    ``toks (t_loc, d)`` — my token rows; ``top_e/top_w (t_loc, k)`` — my
+    routing; ``wg/wu (E_loc, d, f)``, ``wd (E_loc, f, d)`` — MY experts'
+    weights.  Returns the gate-combined ``(t_loc, d)`` output.
+
+    ``plan`` defaults to the process planner's worst-case dropless plan
+    (``caps[e] = t_loc``: no measurement is available at trace time);
+    drivers that measured routing pass a load-sized plan and get the
+    asymmetric wire/region sizes.  The EP group must be a single mesh
+    axis (the put ring); ``plan.overlap`` is forced to match ``impl``.
+    """
+    impl = resolve_dispatch_impl(impl)
+    if impl == "a2a":
+        raise ValueError(
+            "impl='a2a' is the host collective path inside moe_block; "
+            "moe_dispatch implements the one-sided 'host'/'fused' modes")
+    if len(group.axes) != 1:
+        raise ValueError(
+            f"moe_dispatch needs a single-axis EP group, got {group.axes}")
+    ep = axis_size(group.axes[0])
+    t_loc, d = toks.shape
+    k = top_e.shape[-1]
+    E = wg.shape[0] * ep
+    if plan is None:
+        plan = default_planner().plan_alltoall(
+            t_loc, d, k, E, ep, toks.dtype, overlap=(impl == "fused"))
+    if plan.ep != ep:
+        raise ValueError(f"plan for ep={plan.ep} used on a ring of {ep}")
+    if plan.E != E:
+        raise ValueError(f"plan for E={plan.E} used with E={E}")
+    if plan.overlap != (impl == "fused"):
+        plan = dataclasses.replace(plan, overlap=(impl == "fused"))
+
+    if resolve_interpret(interpret) or mlp is not None:
+        combined, dropped = fused_moe_dispatch_interpret(
+            toks, top_e, top_w, wg, wu, wd, group, plan=plan, mlp=mlp)
+    else:
+        combined, dropped = fused_moe_dispatch_tpu(
+            toks, top_e, top_w, wg, wu, wd, group, plan=plan)
+
+    from repro.core.context import default_context
+
+    default_context().dispatch_stats.record(
+        moe_dropped=dropped,
+        moe_routed=dropped * 0 + t_loc * k)  # varying like dropped
+    return combined

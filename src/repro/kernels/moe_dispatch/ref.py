@@ -1,0 +1,90 @@
+"""Oracles + routing helpers for the MoE dispatch kernel family.
+
+The single-device oracle (:func:`moe_ref`) computes the dropless top-k MoE
+exactly: every (token, choice) pair reaches its expert, no capacity, no
+dispatch.  Both the fused one-sided dispatch and the host collective path
+are tested against it — the fused path must match it *bit for bit* under
+load-imbalanced routing because dropless dispatch is a pure data movement.
+
+:func:`route_topk` is the router of :func:`repro.models.layers.moe_block`
+factored out (same f32 softmax, same top-k renormalization), and
+:func:`measure_expert_load` turns concrete routing into the per-expert
+load vector :meth:`~repro.kernels.plan.OverlapPlanner.plan_alltoall` sizes
+the asymmetric PGAS landing regions from.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = ["expert_mlp_ref", "route_topk", "measure_expert_load", "moe_ref"]
+
+F32 = jnp.float32
+
+
+def expert_mlp_ref(x, wg, wu, wd):
+    """Grouped silu-gated expert MLP on per-expert row blocks.
+
+    ``x (E, C, d)``, ``wg/wu (E, d, f)``, ``wd (E, f, d)`` -> ``(E, C, d)``.
+    The einsum form matches ``moe_block``'s expert GEMMs exactly, so every
+    dispatch implementation runs its rows through identical numerics.
+    """
+    h = jnp.einsum("ecd,edf->ecf", x, wg)
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", x, wu)
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def route_topk(toks, router, k: int):
+    """``moe_block``'s router: f32 softmax, top-k, renormalized weights.
+
+    ``toks (t, d)``, ``router (d, E)`` -> ``(top_w, top_e)`` each ``(t, k)``.
+    """
+    logits = jnp.dot(toks.astype(F32), router.astype(F32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = lax.top_k(probs, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    return top_w, top_e
+
+
+def measure_expert_load(top_e, E: int, *,
+                        sources: Optional[int] = None) -> Tuple[int, ...]:
+    """Per-expert landing load from concrete routing (host-side numpy).
+
+    ``top_e`` is the routed expert index array — either one source rank's
+    ``(t_loc, k)`` choices, or all sources stacked as ``(sources, t_loc,
+    k)``.  Returns, per expert, the MAXIMUM rows any single source routes
+    to it: what one per-source slice of the expert's PGAS landing region
+    must absorb for the dispatch to be dropless.  Feed the result to
+    :meth:`~repro.kernels.plan.OverlapPlanner.plan_alltoall` as ``loads``.
+    """
+    a = np.asarray(top_e)
+    if a.ndim == 2:
+        a = a[None]
+    elif sources is not None and a.shape[0] != sources:
+        raise ValueError(f"expected {sources} sources, got {a.shape[0]}")
+    counts = np.zeros((a.shape[0], E), dtype=np.int64)
+    for s in range(a.shape[0]):
+        idx, n = np.unique(a[s].reshape(-1), return_counts=True)
+        counts[s, idx] = n
+    return tuple(int(v) for v in counts.max(axis=0))
+
+
+def moe_ref(toks, top_e, top_w, wg, wu, wd):
+    """Single-device dropless oracle: every choice reaches its expert.
+
+    ``toks (t, d)``; ``top_e/top_w (t, k)``; ``wg/wu (E, d, f)``;
+    ``wd (E, f, d)`` — the FULL expert weights (all E experts).  Returns
+    the combined ``(t, d)`` output in ``toks.dtype``.
+    """
+    t = toks.shape[0]
+    E = wg.shape[0]
+    x = jnp.broadcast_to(toks[None], (E, t, toks.shape[1]))
+    outs = expert_mlp_ref(x, wg, wu, wd).astype(toks.dtype)   # (E, t, d)
+    picked = outs[top_e, jnp.arange(t)[:, None]]              # (t, k, d)
+    gates = top_w.astype(toks.dtype)[..., None]
+    return (picked * gates).sum(axis=1)

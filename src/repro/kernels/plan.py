@@ -25,7 +25,7 @@ unrolled schedules/kernels.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from repro.core.streams import MAX_ACTIVE_STREAMS_DEFAULT, StreamPool
 
 __all__ = [
+    "AllToAllPlan",
     "RingStep",
     "RingPlan",
     "HaloPlan",
@@ -40,6 +41,8 @@ __all__ = [
     "default_planner",
     "resolve_interpret",
     "resolve_ring_impl",
+    "resolve_dispatch_impl",
+    "split_extents",
 ]
 
 # Per-core VMEM a kernel may plan against.  Real v5e cores have ~16 MiB more,
@@ -77,6 +80,69 @@ def resolve_ring_impl(impl: Optional[str]) -> str:
     if impl in ("host", "fused"):
         return impl
     raise ValueError(f"unknown ring matmul impl {impl!r}")
+
+
+def resolve_dispatch_impl(impl: Optional[str]) -> str:
+    """Resolve a MoE dispatch implementation knob to a concrete mode.
+
+    ``"auto"``/None keep the host collective ``"a2a"`` path (the status
+    quo: GShard capacity dispatch through ``ompccl.alltoall``); the
+    dropless one-sided paths — ``"host"`` (puts serialized around the
+    expert GEMMs) and ``"fused"`` (combine overlapped under the GEMMs per
+    :class:`AllToAllPlan`) — are explicit opt-ins because dropless
+    routing changes the numbers whenever the capacity path would have
+    dropped tokens.  The train/serve step builders call this once so the
+    whole jitted step traces against one concrete dispatch schedule.
+    """
+    if impl in (None, "auto"):
+        return "a2a"
+    if impl in ("a2a", "host", "fused"):
+        return impl
+    raise ValueError(f"unknown moe dispatch impl {impl!r}")
+
+
+def split_extents(total: int, parts: int,
+                  weights: Optional[Sequence[float]] = None,
+                  *, minimum: int = 1) -> Tuple[int, ...]:
+    """Proportional largest-remainder split of ``total`` into ``parts``.
+
+    The asymmetric-decomposition primitive shared by the Minimod driver
+    (per-rank Z extents proportional to device weights) and the MoE
+    dispatch planner (per-expert landing capacities proportional to
+    measured load).  Every extent is at least ``minimum``; with integral
+    weights summing to ``total`` the split reproduces the weights exactly
+    (largest-remainder assigns each raw quota its own floor).
+    ``weights=None`` degrades to the near-even split, which also covers
+    non-divisible grids — a non-divisible symmetric request is just the
+    asymmetric path with unit weights.
+    """
+    if parts < 1:
+        raise ValueError("parts must be >= 1")
+    weights = tuple(weights) if weights is not None else (1,) * parts
+    if len(weights) != parts:
+        raise ValueError(f"{len(weights)} weights for {parts} parts")
+    if min(weights) <= 0:
+        raise ValueError("weights must be positive")
+    if minimum * parts > total:
+        raise ValueError(
+            f"cannot give {parts} ranks at least {minimum} of {total} rows")
+    wsum = float(sum(weights))
+    raw = [total * w / wsum for w in weights]
+    ext = [max(int(r), minimum) for r in raw]
+    order = sorted(range(parts), key=lambda i: raw[i] - int(raw[i]),
+                   reverse=True)
+    i = 0
+    while sum(ext) < total:
+        ext[order[i % parts]] += 1
+        i += 1
+    donors = sorted(range(parts), key=lambda i: ext[i] - raw[i], reverse=True)
+    i = 0
+    while sum(ext) > total:
+        j = donors[i % parts]
+        if ext[j] > minimum:
+            ext[j] -= 1
+        i += 1
+    return tuple(ext)
 
 
 # ---------------------------------------------------------------------------
@@ -281,6 +347,139 @@ class HaloPlan:
 
 
 # ---------------------------------------------------------------------------
+# MoE dispatch schedule (expert-parallel all-to-all)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AllToAllPlan:
+    """Concrete schedule for one dropless expert-parallel MoE dispatch.
+
+    The ragged token→expert traffic is realized as a ring of one-sided
+    puts: at step ``s`` every rank puts the block destined for the rank
+    ``s + 1`` ahead (the exchange that feeds step ``s + 1``), runs the
+    expert GEMMs on the block that landed from the rank ``s`` behind
+    (step 0 computes the local block), and puts the *previous* GEMM's
+    result straight back to its source — the return combine rides under
+    the current compute.  One fence per landed block, one final fence for
+    the combine windows.  Both the TPU kernel and the differentiable
+    interpret emulation execute exactly :meth:`schedule`.
+
+    Capacities are per-expert and **asymmetric** (``caps[e]`` rows per
+    source rank, sized from measured load by
+    :meth:`OverlapPlanner.plan_alltoall` through :func:`split_extents`);
+    the home rank of expert ``e`` registers a PGAS landing region of
+    ``ep * caps[e]`` rows while the other ranks register zero bytes —
+    the paper's asymmetric-allocation story.  SPMD execution pads every
+    wire block to ``cap_pad = max(caps)`` rows per expert (the same
+    max-extent-shard trick Minimod uses); :meth:`block_rows` reports the
+    *true* per-destination row counts the cost model bills for.
+    """
+
+    ep: int                    # EP group size (ring length)
+    E: int                     # global expert count
+    t_loc: int                 # tokens per rank entering dispatch
+    k: int                     # experts per token
+    d: int                     # model dim of one token row
+    itemsize: int = 4
+    caps: Tuple[int, ...] = ()  # per-expert landing rows per source rank
+    slots: int = 2             # staging buffers granted by StreamPool
+    overlap: bool = True       # False: puts, fence, GEMMs, puts, fence
+
+    def __post_init__(self):
+        if self.ep < 1:
+            raise ValueError("EP group size must be >= 1")
+        if self.E % self.ep != 0:
+            raise ValueError(f"E={self.E} not divisible by ep={self.ep}")
+        if len(self.caps) != self.E:
+            raise ValueError(f"{len(self.caps)} caps for {self.E} experts")
+        if self.caps and min(self.caps) < 1:
+            raise ValueError("per-expert capacities must be >= 1")
+
+    @property
+    def E_loc(self) -> int:
+        return self.E // self.ep
+
+    @property
+    def cap_pad(self) -> int:
+        """Padded per-expert rows of one SPMD wire block (max over experts)."""
+        return max(self.caps)
+
+    @property
+    def block_bytes(self) -> int:
+        """Wire bytes of one padded dispatch/combine put."""
+        return self.E_loc * self.cap_pad * self.d * self.itemsize
+
+    def block_rows(self, rank: int) -> int:
+        """TRUE rows one source sends to ``rank`` (the asymmetric sizes the
+        PGAS regions and the cost model use; the wire block pads to
+        ``E_loc * cap_pad``)."""
+        lo = rank * self.E_loc
+        return sum(self.caps[lo:lo + self.E_loc])
+
+    @property
+    def region_rows(self) -> Tuple[int, ...]:
+        """Per-expert PGAS landing-region rows on the expert's home rank
+        (``ep`` sources × ``caps[e]`` rows each)."""
+        return tuple(self.ep * c for c in self.caps)
+
+    @property
+    def wire_bytes(self) -> int:
+        """Modeled wire bytes per rank per dispatch+combine (true rows,
+        remote destinations only)."""
+        me = 0  # symmetric in the model: every rank sends all remote blocks
+        remote = sum(self.block_rows(r) for r in range(self.ep) if r != me)
+        return 2 * remote * self.d * self.itemsize
+
+    @property
+    def staging_bytes(self) -> int:
+        """VMEM the pipeline pins: ``slots`` in-flight padded blocks."""
+        return self.slots * self.block_bytes
+
+    def schedule(self) -> Tuple[Tuple[str, int], ...]:
+        """Ordered ``(phase, ring_offset)`` records both executions follow.
+
+        * ``("put", s)``   — one-sided put of my block for the rank ``s``
+          ahead (dispatch direction);
+        * ``("fence", s)`` — complete the landing of the block from the
+          rank ``s`` behind before its GEMM reads it;
+        * ``("gemm", s)``  — expert GEMMs on that landed block (``s == 0``
+          is the local block);
+        * ``("ret", s)``   — one-sided put of that result back to its
+          source, overlapped under step ``s + 1``'s GEMM;
+        * ``("fence_ret", 0)`` — final fence of the combine windows.
+
+        ``overlap=False`` is the serialized ``"host"`` mode: all dispatch
+        puts, one fence, all GEMMs, all combine puts, one fence — the
+        same traffic with nothing hidden.
+        """
+        if self.ep == 1:
+            return (("gemm", 0),)
+        out = []
+        if self.overlap:
+            for s in range(self.ep):
+                if s + 1 < self.ep:
+                    out.append(("put", s + 1))
+                if s > 0:
+                    out.append(("fence", s))
+                out.append(("gemm", s))
+                if s > 0:
+                    out.append(("ret", s))
+            out.append(("fence_ret", 0))
+        else:
+            for s in range(1, self.ep):
+                out.append(("put", s))
+            for s in range(1, self.ep):
+                out.append(("fence", s))
+            for s in range(self.ep):
+                out.append(("gemm", s))
+            for s in range(1, self.ep):
+                out.append(("ret", s))
+            out.append(("fence_ret", 0))
+        return tuple(out)
+
+
+# ---------------------------------------------------------------------------
 # the planner
 # ---------------------------------------------------------------------------
 
@@ -373,6 +572,55 @@ class OverlapPlanner:
                 break
             b //= 2
         return b
+
+    # -- MoE dispatch all-to-all ----------------------------------------------
+    def plan_alltoall(self, t_loc: int, d: int, k: int, E: int, ep: int,
+                      dtype, *, loads: Optional[Sequence[int]] = None,
+                      slack: float = 1.0, overlap: bool = True
+                      ) -> AllToAllPlan:
+        """Schedule + asymmetric capacities for one dropless MoE dispatch.
+
+        ``loads`` are measured per-expert row counts — the *maximum over
+        source ranks* of rows routed to each expert (what one landing
+        region must absorb per source).  The staging budget
+        ``ceil(sum(loads) * slack)`` is decomposed over experts by the
+        largest-remainder split (:func:`split_extents`, the Minimod
+        decomposition); with ``slack == 1.0`` the split reproduces the
+        loads exactly, and any split is re-clamped to ``>= loads[e]`` so
+        the plan is dropless by construction.  ``loads=None`` is the
+        trace-time fallback (no measurement available inside a jitted
+        step): every expert gets the worst-case ``t_loc`` rows.
+
+        Slot count is ``StreamPool.plan_slots``' grant for one padded
+        wire block against the VMEM budget (the §3.2 bounded-concurrency
+        contract), and the plan degrades to ``overlap=False`` when the
+        budget cannot double-buffer the staging pipeline.
+        """
+        if E % ep != 0:
+            raise ValueError(f"E={E} not divisible by ep={ep}")
+        item = _itemsize(dtype)
+        if loads is None:
+            caps = (t_loc,) * E
+        else:
+            loads = tuple(int(l) for l in loads)
+            if len(loads) != E:
+                raise ValueError(f"{len(loads)} loads for {E} experts")
+            total = max(int(-(-sum(loads) * slack // 1)),
+                        sum(max(l, 1) for l in loads))
+            weights = tuple(max(l, 1e-6) for l in loads)
+            caps = split_extents(total, E, weights, minimum=1)
+            caps = tuple(max(c, l) for c, l in zip(caps, loads))
+        plan = AllToAllPlan(ep=ep, E=E, t_loc=t_loc, k=k, d=d,
+                            itemsize=item, caps=caps, overlap=overlap)
+        if ep == 1:
+            return dataclasses.replace(plan, slots=1)
+        block = plan.block_bytes
+        slots = self.pool.plan_slots(block, self.vmem_budget)
+        slots = max(2, min(slots, max(self.vmem_budget // max(block, 1), 2)))
+        slots = min(slots, ep)
+        if overlap and 2 * block > self.vmem_budget:
+            return dataclasses.replace(plan, overlap=False, slots=1)
+        return dataclasses.replace(plan, slots=slots)
 
     # -- gradient buckets -----------------------------------------------------
     def plan_grad_buckets(self, cfg, mesh, ctx):

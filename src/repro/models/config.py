@@ -148,6 +148,16 @@ class ParallelCtx:
     #                                    scheduled) | host (unidirectional XLA-
     #                                    overlap loop); resolved by the step
     #                                    builders via plan.resolve_ring_impl
+    dispatch_impl: str = "auto"        # MoE dispatch: auto (-> a2a, the host
+    #                                    collective capacity path) | a2a |
+    #                                    fused (dropless one-sided ring,
+    #                                    combine overlapped under the expert
+    #                                    GEMMs) | host (same puts serialized);
+    #                                    resolved by the step builders via
+    #                                    plan.resolve_dispatch_impl.  The
+    #                                    dropless modes are opt-in: they keep
+    #                                    tokens the capacity path would drop,
+    #                                    so they change the numbers.
     remat: bool = True
     microbatch: int = 1                # grad-accumulation factor
     seq_shard: bool = False            # sequence parallelism for norms/residual

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -37,7 +38,7 @@ __all__ = [
     "rmsnorm", "layernorm", "rope", "gather_fsdp", "tp_allreduce",
     "col_matmul", "row_matmul", "embed_lookup", "ce_loss",
     "attention_block", "mla_block", "mlp_block", "moe_block",
-    "cp_decode_attention",
+    "moe_capacity", "cp_decode_attention",
 ]
 
 F32 = jnp.float32
@@ -691,6 +692,21 @@ def gelu_mlp_block(x, lp, ctx: ParallelCtx):
 # MoE (expert-parallel over the "model" axis, all_to_all dispatch)
 # ---------------------------------------------------------------------------
 
+def moe_capacity(t_loc: int, k: int, E: int, capacity_factor: float) -> int:
+    """Per-expert slot capacity of the GShard dispatch: the TRUE ceiling
+    ``ceil((t_loc*k/E) * capacity_factor)``.
+
+    The former ``int(q + 1)`` overshot by one whole slot per expert
+    whenever the product was exactly integral (e.g. ``t_loc=64, k=2, E=8,
+    factor=1.0`` gave 17 instead of 16 — a 6% buffer and wire overhead for
+    nothing).  The quotient is rounded at 1e-9 before the ceiling so
+    binary float dust (``0.1 * 3``-style) cannot bump an exact product to
+    the next slot.
+    """
+    q = (t_loc * k / E) * capacity_factor
+    return max(int(math.ceil(round(q, 9))), 1)
+
+
 def moe_block(x, lp, cfg: ModelConfig, ctx: ParallelCtx):
     """Top-k expert-parallel FFN (GShard-style capacity dispatch).
 
@@ -710,9 +726,12 @@ def moe_block(x, lp, cfg: ModelConfig, ctx: ParallelCtx):
       sliced, partial-combine psum;
     * "local"      — tp == 1 or E unshardable.
 
-    Capacity = ceil(T_loc*k/E)*capacity_factor; overflow drops (combine
-    weights renormalized) — the deviation from DeepSeek's dropless kernel is
-    recorded in DESIGN.md.
+    Capacity = ceil((T_loc*k/E)*capacity_factor) (:func:`moe_capacity`);
+    overflow drops (combine weights renormalized), with the drop count
+    recorded into the context's ``dispatch_stats`` frame when one is open.
+    ``ctx.dispatch_impl`` = ``"fused"``/``"host"`` swaps the a2a regime's
+    collective for the dropless one-sided ring of
+    :mod:`repro.kernels.moe_dispatch` (docs/PERF.md).
     """
     B, T, d = x.shape
     E, k = cfg.num_experts, cfg.experts_per_token
@@ -749,8 +768,33 @@ def moe_block(x, lp, cfg: ModelConfig, ctx: ParallelCtx):
     top_w, top_e = lax.top_k(probs, k)                        # (t_loc, k)
     top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
 
-    cap = int((t_loc * k / E) * cfg.capacity_factor + 1)
-    cap = max(cap, 4)
+    # dropless one-sided dispatch (kernels/moe_dispatch): opt-in via the
+    # ParallelCtx knob, available whenever the a2a regime holds on a
+    # single-axis EP group (the put ring); expert2d's two-axis group and
+    # the replicated/local regimes fall through to the host paths below
+    impl = "a2a"
+    if regime == "a2a" and len(ctx.ep_group.axes) == 1:
+        from repro.kernels.plan import resolve_dispatch_impl
+
+        impl = resolve_dispatch_impl(getattr(ctx, "dispatch_impl", "auto"))
+    if impl in ("fused", "host"):
+        from repro.kernels.moe_dispatch.ops import moe_dispatch
+
+        wg = gather_fsdp(lp["w_gate_e"], ctx, dim=1)          # (E_loc, d, ffm)
+        wu = gather_fsdp(lp["w_up_e"], ctx, dim=1)
+        wd = gather_fsdp(lp["w_down_e"], ctx, dim=2)          # (E_loc, ffm, d)
+        combined = moe_dispatch(toks, top_e, top_w, wg, wu, wd,
+                                ctx.ep_group, impl=impl)
+        if "w_gate_s" in lp:  # shared experts (DeepSeek): full rows, then
+            shared = mlp_block(  # my slice (see the host path below)
+                toks_local, lp, ctx, names=("w_gate_s", "w_up_s", "w_down_s"))
+            combined = combined + lax.dynamic_slice_in_dim(
+                shared, t0, t_loc, axis=0)
+        out = ompccl.allgather(combined, ctx.tp_group, axis=0,
+                               invariant=ctx.inference)
+        return out.reshape(B, T, d)
+
+    cap = max(moe_capacity(t_loc, k, E, cfg.capacity_factor), 4)
 
     # slot assignment: position of each (token, choice) within its expert
     e_flat = top_e.reshape(-1)                                # (t_loc*k,)
@@ -759,6 +803,16 @@ def moe_block(x, lp, cfg: ModelConfig, ctx: ParallelCtx):
     slot = slot.sum(-1)                                       # (t_loc*k,)
     keep = slot < cap
     addr = e_flat * cap + jnp.clip(slot, 0, cap - 1)
+
+    # capacity overflow is a silent quality tax; surface it as a traced
+    # aux stat when a DispatchStats frame is open (ctx.dispatch_stats —
+    # the dropless moe_dispatch path above records identically zero)
+    from repro.core.context import default_context
+
+    dropped = jnp.sum(~keep).astype(F32)
+    default_context().dispatch_stats.record(
+        moe_dropped=dropped,
+        moe_routed=dropped * 0 + keep.size)  # varying like dropped
 
     from repro.core.vma import zeros_varying
 
@@ -820,9 +874,15 @@ def moe_block(x, lp, cfg: ModelConfig, ctx: ParallelCtx):
         combined = picked.reshape(t_loc, k, d).sum(axis=1)
 
     if "w_gate_s" in lp:  # shared experts (DeepSeek)
-        shared_in = toks if regime == "a2a" else toks_local
-        shared = mlp_block(shared_in, lp, ctx,
+        # the TP col->row shared MLP needs the SAME rows on every "model"
+        # rank (its row-parallel psum sums feature partials per row), so it
+        # runs on the full replicated token set; the a2a regime then takes
+        # this rank's slice.  Feeding the a2a path's per-rank token slice
+        # in directly would psum partials of DIFFERENT tokens together.
+        shared = mlp_block(toks_local, lp, ctx,
                            names=("w_gate_s", "w_up_s", "w_down_s"))
+        if regime == "a2a":
+            shared = lax.dynamic_slice_in_dim(shared, t0, t_loc, axis=0)
         combined = combined + shared
 
     if regime == "a2a":

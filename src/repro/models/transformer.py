@@ -86,6 +86,7 @@ def _scan_stack(x, stack, cfg, ctx, *, moe, mla, positions, prefix_len,
     residual stream stays exactly as replicated as it really is.
     """
     from repro.core.compat import typeof
+    from repro.core.context import default_context
     from repro.core.ompccl import ensure_varying
 
     in_vma = getattr(typeof(x), "vma", frozenset())
@@ -97,6 +98,14 @@ def _scan_stack(x, stack, cfg, ctx, *, moe, mla, positions, prefix_len,
             axes.add("data")        # ZeRO-3 weight gathers (AD: reduce-scatter)
     world = tuple(a for a in ctx.world.lax_axes if a in axes)
 
+    # dispatch stats recorded inside the scan body are tracers of the inner
+    # (scan/remat) trace — they can't escape through the context's side
+    # channel.  When a collection frame is open, re-thread them: collect
+    # per-layer inside the body, return them as scan outputs, and re-record
+    # the layer-summed totals into the outer frame after the scan.
+    stats = default_context().dispatch_stats
+    thread_stats = stats.active
+
     def body(carry, xs):
         h = carry
         if caches is None:
@@ -104,15 +113,24 @@ def _scan_stack(x, stack, cfg, ctx, *, moe, mla, positions, prefix_len,
             cache = None
         else:
             lp, cache = xs
-        h2, new_cache = _layer_body(
-            h, lp, cfg, ctx, moe=moe, mla=mla, positions=positions,
-            prefix_len=prefix_len, cache=cache, chunked=chunked)
-        return ensure_varying(h2, world), new_cache
+        if thread_stats:
+            with stats.collect() as ds:
+                h2, new_cache = _layer_body(
+                    h, lp, cfg, ctx, moe=moe, mla=mla, positions=positions,
+                    prefix_len=prefix_len, cache=cache, chunked=chunked)
+            aux = {k: ds[k] for k in sorted(ds)}
+        else:
+            h2, new_cache = _layer_body(
+                h, lp, cfg, ctx, moe=moe, mla=mla, positions=positions,
+                prefix_len=prefix_len, cache=cache, chunked=chunked)
+            aux = {}
+        return ensure_varying(h2, world), (new_cache, aux)
 
     if remat:
         body = jax.checkpoint(body)
     xs = stack if caches is None else (stack, caches)
-    x, new_caches = lax.scan(body, ensure_varying(x, world), xs)
+    x, (new_caches, aux) = lax.scan(body, ensure_varying(x, world), xs)
+    stats.record(**{k: jnp.sum(v) for k, v in aux.items()})
     return x, new_caches
 
 

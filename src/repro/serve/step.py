@@ -38,10 +38,12 @@ def build_decode_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx, *,
     import dataclasses
 
     from repro.distributed.sharding import rules_for_ctx
-    from repro.kernels.plan import resolve_ring_impl
+    from repro.kernels.plan import resolve_dispatch_impl, resolve_ring_impl
 
-    ctx = dataclasses.replace(ctx, inference=True, remat=False,
-                              ring_impl=resolve_ring_impl(ctx.ring_impl))
+    ctx = dataclasses.replace(
+        ctx, inference=True, remat=False,
+        ring_impl=resolve_ring_impl(ctx.ring_impl),
+        dispatch_impl=resolve_dispatch_impl(ctx.dispatch_impl))
     decode = model_api.decode_fn(cfg)
     pspecs = sch.partition_specs(cfg, mesh, rules_for_ctx(ctx))
     _, cspecs = model_api.cache_structs(cfg, mesh, ctx, B, S,
@@ -83,15 +85,17 @@ def build_chunk_prefill_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
     import dataclasses
 
     from repro.distributed.sharding import rules_for_ctx
-    from repro.kernels.plan import resolve_ring_impl
+    from repro.kernels.plan import resolve_dispatch_impl, resolve_ring_impl
     from repro.models.transformer import transformer_chunk_prefill
 
     if cfg.family not in model_api.TRANSFORMER_FAMILIES:
         raise ValueError(
             f"chunked prefill supports transformer families only, "
             f"got {cfg.family!r}")
-    ctx = dataclasses.replace(ctx, inference=True, remat=False,
-                              ring_impl=resolve_ring_impl(ctx.ring_impl))
+    ctx = dataclasses.replace(
+        ctx, inference=True, remat=False,
+        ring_impl=resolve_ring_impl(ctx.ring_impl),
+        dispatch_impl=resolve_dispatch_impl(ctx.dispatch_impl))
     pspecs = sch.partition_specs(cfg, mesh, rules_for_ctx(ctx))
     _, cspecs = model_api.cache_structs(cfg, mesh, ctx, B, S_cache)
     vs = "model" if sch.vocab_sharded(cfg) else None
@@ -122,10 +126,12 @@ def build_prefill_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx, *,
     from repro.models.ssm import zamba_forward
 
     from repro.distributed.sharding import rules_for_ctx
-    from repro.kernels.plan import resolve_ring_impl
+    from repro.kernels.plan import resolve_dispatch_impl, resolve_ring_impl
 
-    ctx = dataclasses.replace(ctx, inference=True, remat=False,
-                              ring_impl=resolve_ring_impl(ctx.ring_impl))
+    ctx = dataclasses.replace(
+        ctx, inference=True, remat=False,
+        ring_impl=resolve_ring_impl(ctx.ring_impl),
+        dispatch_impl=resolve_dispatch_impl(ctx.dispatch_impl))
     pspecs = sch.partition_specs(cfg, mesh, rules_for_ctx(ctx))
     _, cspecs = model_api.cache_structs(cfg, mesh, ctx, B, S_cache,
                                         seq_sharded=seq_sharded)

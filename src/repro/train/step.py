@@ -190,7 +190,8 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
     """Returns the jitted step:
 
     step(params, opt_state, batch, step_idx) ->
-        (params', opt_state', metrics{loss, grad_norm})
+        (params', opt_state', metrics{loss, grad_norm[, moe_dropped,
+        moe_drop_rate on MoE configs]})
 
     ``global_batch`` determines the batch sharding (divisibility over the DP
     axes); pass the real batch size — 0 falls back to dp-divisible.
@@ -198,11 +199,15 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
     import dataclasses
 
     from repro.distributed.sharding import rules_for_ctx
-    from repro.kernels.plan import default_planner, resolve_ring_impl
+    from repro.kernels.plan import (default_planner, resolve_dispatch_impl,
+                                    resolve_ring_impl)
 
     # resolve the ring-matmul schedule ONCE so the whole step traces against
-    # one concrete plan (fused bidirectional unless the ctx pins "host")
-    ctx = dataclasses.replace(ctx, ring_impl=resolve_ring_impl(ctx.ring_impl))
+    # one concrete plan (fused bidirectional unless the ctx pins "host");
+    # the MoE dispatch mode resolves the same way
+    ctx = dataclasses.replace(
+        ctx, ring_impl=resolve_ring_impl(ctx.ring_impl),
+        dispatch_impl=resolve_dispatch_impl(ctx.dispatch_impl))
     rules = rules_for_ctx(ctx)
     loss_fn = model_api.loss_fn(cfg)
     pspecs = sch.partition_specs(cfg, mesh, rules)
@@ -226,7 +231,14 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
                   if ctx.explicit_dp and dp_axes else params)
 
         def local_loss(p, mb):
-            return loss_fn(p, mb, cfg, ctx)
+            # drop stats are data-dependent (the capacity overflow mask), so
+            # they leave the trace as has_aux outputs; the frame must open
+            # INSIDE the traced function (DispatchStats is trace-scoped)
+            with default_context().dispatch_stats.collect() as ds:
+                loss = loss_fn(p, mb, cfg, ctx)
+            zero = jnp.zeros((), F32)
+            return loss, (ds.get("moe_dropped", zero),
+                          ds.get("moe_routed", zero))
 
         b_local = jax.tree.leaves(batch)[0].shape[0]
         k = max(min(ctx.microbatch, b_local), 1)
@@ -266,8 +278,9 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
                     for b in plan.buckets}
 
                 def micro(carry, mb):
-                    loss_acc, g_acc, sh_acc = carry
-                    l, g = jax.value_and_grad(local_loss)(p_diff, mb)
+                    loss_acc, aux_acc, g_acc, sh_acc = carry
+                    (l, aux), g = jax.value_and_grad(
+                        local_loss, has_aux=True)(p_diff, mb)
                     # unbucketed params accumulate whole, as before
                     g_acc = {n: g_acc[n] + g[n].astype(F32) for n in g_acc}
                     # bucketed params: pack THIS microbatch's grads and
@@ -281,8 +294,11 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
                                                            axis=0)
                         sh[b.key] = ompccl.ensure_varying(
                             sh_acc[b.key] + piece, all_axes)
+                    aux_acc = tuple(
+                        ompccl.ensure_varying(a + x, all_axes)
+                        for a, x in zip(aux_acc, aux))
                     return (ompccl.ensure_varying(loss_acc + l, all_axes),
-                            norm_g(g_acc), sh), None
+                            aux_acc, norm_g(g_acc), sh), None
 
                 zero_g = norm_g({n: jnp.zeros(params[n].shape, F32)
                                  for n in plan.local})
@@ -291,8 +307,11 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
                         jnp.zeros((b.shard_size(mesh_sizes),), F32), all_axes)
                     for b in plan.buckets}
                 loss0 = ompccl.ensure_varying(jnp.zeros((), F32), all_axes)
-                (loss, g_local, shards), _ = lax.scan(
-                    micro, (loss0, zero_g, zero_sh), mbs)
+                aux0 = tuple(ompccl.ensure_varying(jnp.zeros((), F32),
+                                                   all_axes)
+                             for _ in range(2))
+                (loss, aux, g_local, shards), _ = lax.scan(
+                    micro, (loss0, aux0, zero_g, zero_sh), mbs)
                 loss = loss / k
                 # the trailing exchange: ONE invariant all-gather per bucket
                 # (the only wire work not hidden behind backward compute)
@@ -306,23 +325,32 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
                 reduced = True
             else:
                 def micro(carry, mb):
-                    loss_acc, g_acc = carry
-                    l, g = jax.value_and_grad(local_loss)(p_diff, mb)
+                    loss_acc, aux_acc, g_acc = carry
+                    (l, aux), g = jax.value_and_grad(
+                        local_loss, has_aux=True)(p_diff, mb)
                     g_acc = {n: g_acc[n] + g[n].astype(F32) for n in g_acc}
+                    aux_acc = tuple(
+                        ompccl.ensure_varying(a + x, all_axes)
+                        for a, x in zip(aux_acc, aux))
                     # scalar loss: canonicalize to all mesh axes (an
                     # unsharded-vocab CE stays model-varying; a sharded one
                     # does not)
                     return (ompccl.ensure_varying(loss_acc + l, all_axes),
-                            norm_g(g_acc)), None
+                            aux_acc, norm_g(g_acc)), None
 
                 zero_g = norm_g({n: jnp.zeros(p.shape, F32)
                                  for n, p in params.items()})
                 loss0 = ompccl.ensure_varying(jnp.zeros((), F32), all_axes)
-                (loss, grads), _ = lax.scan(micro, (loss0, zero_g), mbs)
+                aux0 = tuple(ompccl.ensure_varying(jnp.zeros((), F32),
+                                                   all_axes)
+                             for _ in range(2))
+                (loss, aux, grads), _ = lax.scan(micro, (loss0, aux0, zero_g),
+                                                 mbs)
                 loss = loss / k
                 grads = jax.tree.map(lambda g: g / k, grads)
         else:
-            loss, grads = jax.value_and_grad(local_loss)(p_diff, batch)
+            (loss, aux), grads = jax.value_and_grad(
+                local_loss, has_aux=True)(p_diff, batch)
 
         if ctx.explicit_dp and dp_axes:
             if not reduced:
@@ -357,12 +385,23 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
             "loss": world_comm.allreduce(loss, op="mean"),
             "grad_norm": gnorm,
         }
+        if cfg.moe:
+            # drop counters are per-rank sums over layers x microbatches;
+            # the world sum gives the step's global capacity-overflow drops
+            # (identically zero under the dropless fused/host dispatch)
+            dropped = world_comm.allreduce(aux[0])
+            routed = world_comm.allreduce(aux[1])
+            metrics["moe_dropped"] = dropped
+            metrics["moe_drop_rate"] = dropped / jnp.maximum(routed, 1.0)
         return params, opt_state, metrics
 
+    mspecs = {"loss": P(), "grad_norm": P()}
+    if cfg.moe:
+        mspecs.update({"moe_dropped": P(), "moe_drop_rate": P()})
     mapped = shard_map(
         step, mesh=mesh,
         in_specs=(pspecs, ospecs, bspecs, P()),
-        out_specs=(pspecs, ospecs, {"loss": P(), "grad_norm": P()}),
+        out_specs=(pspecs, ospecs, mspecs),
     )
     jit_kwargs = {"donate_argnums": (0, 1)} if donate else {}
     return jax.jit(mapped, **jit_kwargs)

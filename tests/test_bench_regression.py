@@ -1,0 +1,50 @@
+"""tools/check_bench_regression.py — the bench-smoke CI gate's logic."""
+
+import sys
+
+sys.path.insert(0, "tools")
+
+from check_bench_regression import compare, row_key  # noqa: E402
+
+
+def _rows(step):
+    return [{"devices": 8, "mode": "fused", "wall_s": 0.5,
+             "modeled_step_s": step, "modeled_overlap": True}]
+
+
+def test_identical_summaries_pass():
+    regs, notes = compare({"m": _rows(0.01)}, {"m": _rows(0.01)}, 0.05)
+    assert regs == [] and notes == []
+
+
+def test_wall_noise_is_ignored():
+    fresh = _rows(0.01)
+    fresh[0]["wall_s"] = 99.0                  # machine noise: not identity,
+    regs, _ = compare({"m": _rows(0.01)}, {"m": fresh}, 0.05)
+    assert regs == []                          # not a comparison target
+
+
+def test_modeled_regression_beyond_tol_fails():
+    regs, _ = compare({"m": _rows(0.010)}, {"m": _rows(0.012)}, 0.05)
+    assert len(regs) == 1 and "modeled_step_s" in regs[0]
+    # within tolerance (and any speedup) passes
+    regs, _ = compare({"m": _rows(0.010)}, {"m": _rows(0.0104)}, 0.05)
+    assert regs == []
+    regs, _ = compare({"m": _rows(0.010)}, {"m": _rows(0.002)}, 0.05)
+    assert regs == []
+
+
+def test_new_rows_and_benches_note_but_pass():
+    fresh = {"m": _rows(0.01) + [{"devices": 16, "mode": "fused",
+                                  "modeled_step_s": 1.0}],
+             "new_bench": _rows(5.0)}
+    regs, notes = compare({"m": _rows(0.01), "gone": _rows(0.1)}, fresh, 0.05)
+    assert regs == []
+    assert len(notes) == 3                     # new row, new bench, gone bench
+
+
+def test_row_key_excludes_volatile_and_compared_fields():
+    a = _rows(0.01)[0]
+    b = dict(a, wall_s=123.0, modeled_step_s=9.9)
+    assert row_key(a) == row_key(b)
+    assert row_key(a) != row_key(dict(a, mode="host"))

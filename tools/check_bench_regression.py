@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Diff a fresh ``BENCH_summary.json`` against the committed baseline.
+
+The ``modeled_*_s`` columns are deterministic functions of the planners
+and cost models — they move only when code moves — so the bench-smoke CI
+job fails when a fresh run's modeled seconds regress beyond ``--tol`` on
+any row present in both summaries.  Wall-clock fields are machine noise
+and are ignored both as row identity and as comparison targets.  Rows or
+whole benches that exist on only one side are reported but do not fail
+(benches evolve); the gate is strictly "what we still model must not
+have gotten slower".
+
+Usage::
+
+    python tools/check_bench_regression.py --baseline BENCH_summary.json \
+        --fresh BENCH_summary.fresh.json [--tol 0.05]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def _volatile(field: str) -> bool:
+    """Machine-noise fields: never identity, never compared."""
+    return field.startswith("wall")
+
+
+def _compared(field: str) -> bool:
+    """Deterministic modeled seconds — the regression surface."""
+    return field.startswith("modeled_") and field.endswith("_s")
+
+
+def row_key(row: dict) -> tuple:
+    """Identity of a row: every stable, non-compared field, stringified."""
+    return tuple(sorted((f, str(v)) for f, v in row.items()
+                        if not _volatile(f) and not _compared(f)))
+
+
+def compare(baseline: dict, fresh: dict, tol: float):
+    """(regressions, notes) between two summary ``benches`` dicts."""
+    regressions, notes = [], []
+    for bench in sorted(fresh):
+        if bench not in baseline:
+            notes.append(f"{bench}: new bench (no baseline) — skipped")
+            continue
+        base_rows = {}
+        for row in baseline[bench]:
+            base_rows.setdefault(row_key(row), []).append(row)
+        for row in fresh[bench]:
+            matches = base_rows.get(row_key(row))
+            if not matches:
+                notes.append(f"{bench}: row {row_key(row)[:3]}... has no "
+                             "baseline — skipped")
+                continue
+            base = matches.pop(0)
+            for f, v in row.items():
+                if not (_compared(f) and _is_num(v) and _is_num(base.get(f))):
+                    continue
+                if v > base[f] * (1.0 + tol) + 1e-12:
+                    regressions.append(
+                        f"{bench}: {dict(row_key(row))} {f} "
+                        f"{base[f]:.6g} -> {v:.6g} "
+                        f"(+{(v / base[f] - 1.0) * 100:.1f}% > {tol:.0%})")
+    for bench in sorted(baseline):
+        if bench not in fresh:
+            notes.append(f"{bench}: in baseline only — not re-run")
+    return regressions, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_summary.json")
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--tol", type=float, default=0.05,
+                    help="allowed fractional slowdown per modeled field")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    regressions, notes = compare(base.get("benches", {}),
+                                 fresh.get("benches", {}), args.tol)
+    for n in notes:
+        print(f"[note] {n}")
+    if regressions:
+        print(f"\n{len(regressions)} modeled-time regression(s) "
+              f"beyond {args.tol:.0%}:")
+        for r in regressions:
+            print(f"  REGRESSION {r}")
+        return 1
+    print("bench regression check OK "
+          f"(tol {args.tol:.0%}, {len(notes)} note(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
