@@ -1,0 +1,144 @@
+"""Chaos overhead + degraded-mode economics (docs/RESILIENCE.md).
+
+Three measurements, written to ``faults.csv`` / ``BENCH_summary.json``:
+
+* **retry overhead model** — expected extra wire time per verb under a
+  fault rate ``p``: a transient fault re-issues the op, so the expected
+  retries per logical op are the geometric ``p / (1 - p)`` and the chaos
+  time is ``t_op + E[r] * (t_op + backoff)``.  The ``modeled_*_s`` columns
+  are the CI-gated perf trajectory (tolerance 5%).
+* **recovery wall smoke** — an actual seeded ``FaultPlan`` driven through
+  ``call_with_retries``: deterministic injected/recovered counts (identity
+  columns, so a changed seed or injection order fails the gate loudly) and
+  the measured wall cost of the backoff schedule.
+* **rank-death degradation model** — serving capacity and drain cost when
+  one of ``nranks`` page heaps disappears: graceful drain moves the dead
+  rank's pages at the modeled one-sided put bandwidth; abrupt death
+  regenerates the lost requests' KV from scratch at prefill cost.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.faults import FaultPlan
+from repro.core.resilience import RetryPolicy, call_with_retries
+
+from .common import write_csv
+
+# the modeled wire (matches the LinkModel smoke constants: a PCIe-ish
+# 12.5 GB/s one-sided lane with a 2 us verb issue cost)
+BW = 12.5e9
+LAT = 2e-6
+
+
+def _op_s(nbytes: int) -> float:
+    return LAT + nbytes / BW
+
+
+def _mean_backoff_s(policy: RetryPolicy, verb: str, n: int = 64) -> float:
+    return sum(policy.backoff_s(verb, k % 8 + 1) for k in range(n)) / n
+
+
+def _retry_rows() -> list:
+    # wire-tuned backoff: the default 5 ms cap is for host-visible stalls;
+    # per-verb retries back off at the scale of the op itself
+    policy = RetryPolicy(base_backoff_s=1e-5, max_backoff_s=1e-4)
+    rows = []
+    for verb, nbytes in (("put", 1 << 20), ("allreduce", 4 << 20),
+                         ("halo_exchange", 256 << 10)):
+        for p in (0.01, 0.05, 0.10):
+            clean = _op_s(nbytes)
+            retries = p / (1.0 - p)
+            chaos = clean + retries * (clean + _mean_backoff_s(policy, verb))
+            rows.append({
+                "bench": "retry_overhead",
+                "verb": verb,
+                "nbytes": nbytes,
+                "fault_p": p,
+                "retries_per_op": round(retries, 6),
+                "overhead_pct": round(100.0 * (chaos / clean - 1.0), 2),
+                "modeled_clean_s": clean,
+                "modeled_chaos_s": chaos,
+            })
+    return rows
+
+
+def _recovery_row(ops: int) -> dict:
+    plan = FaultPlan(7, p=0.05, kinds=("drop", "fail", "timeout"))
+    policy = RetryPolicy(max_retries=8, base_backoff_s=1e-5,
+                         max_backoff_s=1e-4)
+
+    def one(verb):
+        fault = plan.next_fault(verb)
+        if fault is not None:
+            from repro.core.resilience import TransientFault
+            raise TransientFault(f"injected {fault.kind}", fault=fault)
+        return True
+
+    t0 = time.perf_counter()
+    for i in range(ops):
+        verb = ("put", "allreduce")[i % 2]
+        call_with_retries(lambda v=verb: one(v), verb, policy)
+    wall = time.perf_counter() - t0
+    counts = plan.injected_counts()
+    return {
+        "bench": "recovery_smoke",
+        "seed": 7,
+        "fault_p": 0.05,
+        "ops": ops,
+        "injected": len(plan.injected),
+        "recovered": len(plan.injected) - len(plan.unrecovered()),
+        "kinds": "/".join(f"{k}:{counts[k]}" for k in sorted(counts)),
+        "wall_s": round(wall, 4),
+    }
+
+
+def _rank_death_rows() -> list:
+    rows = []
+    page_bytes = 64 * 256                     # page_tokens * kv_bytes/token
+    for nranks in (4, 8):
+        pages_per_rank = 256
+        reqs_per_rank = 16
+        drain_bytes = pages_per_rank * page_bytes
+        # serving throughput ~ live KV capacity (slots are page-bound)
+        tput = 1000.0
+        for mode in ("graceful", "abrupt"):
+            if mode == "graceful":
+                # one-sided drain of every page homed on the dead rank
+                stall = drain_bytes / BW + pages_per_rank * LAT
+            else:
+                # lost requests re-prefill: model 512 tokens at 1 ms/chunk
+                # of 16 tokens per request
+                stall = reqs_per_rank * (512 / 16) * 1e-3
+            rows.append({
+                "bench": "rank_death",
+                "nranks": nranks,
+                "mode": mode,
+                "pages_lost": pages_per_rank if mode == "abrupt" else 0,
+                "drain_bytes": drain_bytes if mode == "graceful" else 0,
+                "tput_before_rps": tput,
+                "tput_after_rps": round(tput * (nranks - 1) / nranks, 1),
+                "modeled_stall_s": stall,
+            })
+    return rows
+
+
+def run(quick: bool = False) -> list:
+    retry = _retry_rows()
+    recovery = [_recovery_row(ops=200 if quick else 2000)]
+    deaths = _rank_death_rows()
+    write_csv("faults_retry.csv", retry)
+    write_csv("faults_recovery.csv", recovery)
+    write_csv("faults_rank_death.csv", deaths)
+    rows = retry + recovery + deaths
+    for r in rows:
+        if r["bench"] == "recovery_smoke":
+            print(f"  recovery: {r['injected']} injected "
+                  f"({r['kinds']}), {r['recovered']} recovered "
+                  f"over {r['ops']} ops, wall {r['wall_s']}s")
+    worst = max((r for r in rows if r["bench"] == "retry_overhead"),
+                key=lambda r: r["overhead_pct"])
+    print(f"  retry overhead at p={worst['fault_p']}: "
+          f"{worst['overhead_pct']}% over clean")
+    return rows

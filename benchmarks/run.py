@@ -13,6 +13,8 @@
                 asymmetric expert regions, fused-overlap + parity gates)
   streams      (paper §3.2: stream-pool policy throughput)
   kvcache      (paper Fig. 2: asymmetric heap / page-table churn)
+  faults       (chaos overhead: retry model, seeded recovery smoke,
+                rank-death degraded-throughput model)
 
 CSVs land in experiments/bench/.  ``--json`` (implied by ``--quick``)
 additionally writes the consolidated ``BENCH_summary.json`` — the perf
@@ -57,7 +59,8 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset (p2p,collectives,"
-                         "grad_reduce,matmul,minimod,moe,streams,kvcache)")
+                         "grad_reduce,matmul,minimod,moe,streams,kvcache,"
+                         "faults)")
     ap.add_argument("--json", nargs="?", const=SUMMARY_DEFAULT, default=None,
                     metavar="PATH",
                     help="write the consolidated BENCH_summary.json "
@@ -65,8 +68,9 @@ def main(argv=None):
                          "implies this)")
     args = ap.parse_args(argv)
 
-    from . import (bench_collectives, bench_kvcache, bench_matmul,
-                   bench_minimod, bench_moe, bench_p2p, bench_streams)
+    from . import (bench_collectives, bench_faults, bench_kvcache,
+                   bench_matmul, bench_minimod, bench_moe, bench_p2p,
+                   bench_streams)
 
     table = {
         "p2p": bench_p2p.run,
@@ -77,6 +81,7 @@ def main(argv=None):
         "moe": bench_moe.run,
         "streams": bench_streams.run,
         "kvcache": bench_kvcache.run,
+        "faults": bench_faults.run,
     }
     only = args.only.split(",") if args.only else list(table)
     t0 = time.time()

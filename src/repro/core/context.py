@@ -40,8 +40,10 @@ import jax.numpy as jnp
 
 from . import backends as _backends
 from .backends import CclBackend, get_backend
+from .faults import ChaosBackend, FaultPlan
 from .groups import DiompGroup, standard_groups
 from .pgas import GlobalMemory
+from .resilience import RetryPolicy, call_with_retries
 from .rma import RMATracker
 from .streams import HybridPoller, StreamPool
 
@@ -80,16 +82,32 @@ class Communicator:
     delegating ops (``reduce`` via ``allreduce``, ``get`` via ``put``)
     log their bytes only at the leaf op, so summing a group's ops never
     double-counts wire volume.
+
+    Faults and retries: when the handle carries a :class:`RetryPolicy`
+    (the context default), every verb dispatch runs under
+    :func:`~repro.core.resilience.call_with_retries` — a backend raising
+    ``TransientFault`` (a chaos injection, or a real transport error) is
+    re-dispatched with backoff.  Re-issued *wire* traffic accumulates in
+    separate retry logs (``retries`` / ``retry_nbytes``), never in the
+    logical call/byte logs above, so the OMPCCL-byte-log == RMATracker
+    audits keep holding exactly under chaos.
     """
 
-    __slots__ = ("group", "backend", "calls", "nbytes")
+    __slots__ = ("group", "backend", "calls", "nbytes",
+                 "retries", "retry_nbytes", "policy")
 
     def __init__(self, group: DiompGroup, backend: CclBackend,
-                 calls: Dict[str, int], nbytes: Dict[str, int]):
+                 calls: Dict[str, int], nbytes: Dict[str, int],
+                 retries: Optional[Dict[str, int]] = None,
+                 retry_nbytes: Optional[Dict[str, int]] = None,
+                 policy: Optional[RetryPolicy] = None):
         self.group = group
         self.backend = backend
         self.calls = calls    # shared across handles of the same group
         self.nbytes = nbytes  # op -> cumulative payload bytes, same sharing
+        self.retries = {} if retries is None else retries
+        self.retry_nbytes = {} if retry_nbytes is None else retry_nbytes
+        self.policy = policy
 
     def record(self, op: str, payload=None) -> None:
         self.calls[op] = self.calls.get(op, 0) + 1
@@ -97,11 +115,30 @@ class Communicator:
             self.nbytes[op] = self.nbytes.get(op, 0) \
                 + _backends.payload_bytes(payload)
 
+    def record_retry(self, op: str, payload=None) -> None:
+        """Account one re-issued wire attempt — kept OUT of the logical
+        call/byte logs so planned-volume audits stay exact."""
+        self.retries[op] = self.retries.get(op, 0) + 1
+        if payload is not None:
+            self.retry_nbytes[op] = self.retry_nbytes.get(op, 0) \
+                + _backends.payload_bytes(payload)
+
+    def _dispatch(self, op: str, payload, thunk):
+        """Record the logical call once, then dispatch under the retry
+        policy (straight through when no policy is attached)."""
+        self.record(op, payload)
+        if self.policy is None:
+            return thunk()
+        return call_with_retries(
+            thunk, op, self.policy,
+            on_retry=lambda attempt, tf: self.record_retry(op, payload))
+
     # -- collectives --------------------------------------------------------
     def allreduce(self, x, *, op: str = "sum"):
         """ompx_allreduce: reduction across the group, result everywhere."""
-        self.record("allreduce", x)
-        return self.backend.allreduce(x, self.group, op=op)
+        return self._dispatch(
+            "allreduce", x,
+            lambda: self.backend.allreduce(x, self.group, op=op))
 
     def reduce(self, x, *, root: int = 0, op: str = "sum"):
         """ompx_reduce: like allreduce but only ``root`` keeps the result
@@ -117,8 +154,8 @@ class Communicator:
 
     def bcast(self, x, *, root: int = 0):
         """ompx_bcast: root's value delivered to every group member."""
-        self.record("bcast", x)
-        return self.backend.bcast(x, self.group, root=root)
+        return self._dispatch(
+            "bcast", x, lambda: self.backend.bcast(x, self.group, root=root))
 
     def allgather(self, x, *, axis: int = 0, tiled: bool = True,
                   invariant: bool = False):
@@ -127,41 +164,46 @@ class Communicator:
         ``invariant=True`` uses the Varying->Invariant gather: same wire
         bytes, but the type system records that every member ends with
         identical data.  Inference paths use it."""
-        self.record("allgather", x)
-        return self.backend.allgather(x, self.group, axis=axis, tiled=tiled,
-                                      invariant=invariant)
+        return self._dispatch(
+            "allgather", x,
+            lambda: self.backend.allgather(x, self.group, axis=axis,
+                                           tiled=tiled, invariant=invariant))
 
     def reducescatter(self, x, *, axis: int = 0):
         """ompx_reducescatter: sum across group, scatter along ``axis``."""
-        self.record("reducescatter", x)
-        return self.backend.reducescatter(x, self.group, axis=axis)
+        return self._dispatch(
+            "reducescatter", x,
+            lambda: self.backend.reducescatter(x, self.group, axis=axis))
 
     def alltoall(self, x, *, split_axis: int = 0, concat_axis: int = 0):
         """ompx_alltoall — the MoE dispatch primitive."""
-        self.record("alltoall", x)
-        return self.backend.alltoall(x, self.group, split_axis=split_axis,
-                                     concat_axis=concat_axis)
+        return self._dispatch(
+            "alltoall", x,
+            lambda: self.backend.alltoall(x, self.group,
+                                          split_axis=split_axis,
+                                          concat_axis=concat_axis))
 
     def permute(self, x, *, shift: int = 1):
         """Ring permute within the group — the transport under ompx_put."""
-        self.record("permute", x)
-        return self.backend.permute(x, self.group, shift=shift)
+        return self._dispatch(
+            "permute", x,
+            lambda: self.backend.permute(x, self.group, shift=shift))
 
     def barrier(self):
         """A collective-ordering token (the compiled ompx_barrier)."""
-        self.record("barrier")
-        return self.backend.barrier(self.group)
+        return self._dispatch(
+            "barrier", None, lambda: self.backend.barrier(self.group))
 
     # -- one-sided RMA ------------------------------------------------------
     def put(self, x, *, shift: int = 1):
         """One-sided put to the rank ``shift`` ahead on the group's ring."""
-        self.record("put", x)
-        return self.backend.put(x, self.group, shift=shift)
+        return self._dispatch(
+            "put", x, lambda: self.backend.put(x, self.group, shift=shift))
 
     def put_perm(self, x, perm: Sequence[Tuple[int, int]]):
         """General one-sided put along an arbitrary (src, dst) permutation."""
-        self.record("put", x)
-        return self.backend.put_perm(x, self.group, perm)
+        return self._dispatch(
+            "put", x, lambda: self.backend.put_perm(x, self.group, perm))
 
     def get(self, x, *, shift: int = 1):
         """One-sided get of the shard owned by the rank ``shift`` ahead
@@ -176,8 +218,10 @@ class Communicator:
 
     def halo_exchange(self, x, *, halo: int, axis: int = 0):
         """Minimod's halo pattern (paper Listing 1) as one fused exchange."""
-        self.record("halo_exchange", x)
-        return self.backend.halo_exchange(x, self.group, halo=halo, axis=axis)
+        return self._dispatch(
+            "halo_exchange", x,
+            lambda: self.backend.halo_exchange(x, self.group, halo=halo,
+                                               axis=axis))
 
     # -- introspection ------------------------------------------------------
     @property
@@ -196,13 +240,24 @@ class CommTable:
     for that group, mirroring how OMPCCL keys NCCL communicators by group —
     plus one cached backend instance per backend name (so stateful backends
     like the analytic cost model accumulate across handles).
+
+    When the table carries a :class:`~repro.core.faults.FaultPlan`, every
+    backend instance it creates is wrapped in a
+    :class:`~repro.core.faults.ChaosBackend` (caller-owned instances are
+    the caller's responsibility), and every handle carries the table's
+    :class:`RetryPolicy` so injected faults are retried and logged.
     """
 
-    def __init__(self):
+    def __init__(self, *, fault_plan: Optional[FaultPlan] = None,
+                 retry_policy: Optional[RetryPolicy] = None):
         self._comms: Dict[Tuple[str, str], Communicator] = {}
         self._calls: Dict[str, Dict[str, int]] = {}
         self._nbytes: Dict[str, Dict[str, int]] = {}
+        self._retries: Dict[str, Dict[str, int]] = {}
+        self._retry_nbytes: Dict[str, Dict[str, int]] = {}
         self._backends: Dict[str, CclBackend] = {}
+        self.fault_plan = fault_plan
+        self.retry_policy = retry_policy
 
     def backend_instance(self, backend: BackendLike,
                          default: str = "xla") -> CclBackend:
@@ -210,7 +265,11 @@ class CommTable:
             return backend
         name = backend or default
         if name not in self._backends:
-            self._backends[name] = get_backend(name)()
+            inst = get_backend(name)()
+            if self.fault_plan is not None \
+                    and not isinstance(inst, ChaosBackend):
+                inst = ChaosBackend(inst, self.fault_plan)
+            self._backends[name] = inst
         return self._backends[name]
 
     def communicator(self, group: DiompGroup,
@@ -226,7 +285,11 @@ class CommTable:
         if key not in self._comms:
             calls = self._calls.setdefault(key[0], {})
             nbytes = self._nbytes.setdefault(key[0], {})
-            self._comms[key] = Communicator(group, inst, calls, nbytes)
+            retries = self._retries.setdefault(key[0], {})
+            retry_nbytes = self._retry_nbytes.setdefault(key[0], {})
+            self._comms[key] = Communicator(
+                group, inst, calls, nbytes, retries, retry_nbytes,
+                self.retry_policy)
         return self._comms[key]
 
     def reset(self) -> None:
@@ -242,6 +305,10 @@ class CommTable:
             calls.clear()
         for nbytes in self._nbytes.values():
             nbytes.clear()
+        for retries in self._retries.values():
+            retries.clear()
+        for retry_nbytes in self._retry_nbytes.values():
+            retry_nbytes.clear()
 
     def stats(self) -> Dict[str, Dict[str, int]]:
         """descriptor -> per-op call counts, aggregated over backends."""
@@ -254,6 +321,15 @@ class CommTable:
         consumers keep their exact historical shape.
         """
         return {k: dict(v) for k, v in self._nbytes.items() if v}
+
+    def retry_stats(self) -> Dict[str, Dict[str, int]]:
+        """descriptor -> per-op re-issued wire attempts (the retry log)."""
+        return {k: dict(v) for k, v in self._retries.items() if v}
+
+    def retry_byte_stats(self) -> Dict[str, Dict[str, int]]:
+        """descriptor -> per-op re-issued wire bytes — the chaos overhead,
+        kept apart from the logical byte log by construction."""
+        return {k: dict(v) for k, v in self._retry_nbytes.items() if v}
 
 
 class DispatchStats:
@@ -310,6 +386,14 @@ class DiompContext:
     mesh-bearing context additionally validates its standard groups'
     descriptors (the UniqueID handshake) and sizes its PGAS arena per
     device.
+
+    Chaos/resilience: pass ``fault_plan`` (a
+    :class:`~repro.core.faults.FaultPlan`) to run every backend this
+    context creates under deterministic fault injection; absent that, the
+    ``DIOMP_CHAOS_SEED`` env var enables ambient chaos so existing suites
+    can run unmodified under a fixed seed.  ``retry_policy`` governs the
+    communicator-level retry/backoff (a default policy is always
+    attached; see :meth:`retry_stats`).
     """
 
     def __init__(
@@ -321,6 +405,8 @@ class DiompContext:
         max_active_streams: int = 8,
         default_backend: str = "xla",
         comm_backend: str = "gasnet-ex",  # config fidelity; no-op on TPU
+        fault_plan: Optional[FaultPlan] = None,
+        retry_policy: Optional[RetryPolicy] = None,
     ):
         self.mesh = mesh
         self.comm_backend = comm_backend
@@ -333,7 +419,12 @@ class DiompContext:
         self.streams = StreamPool(max_active=max_active_streams)
         self.poller = HybridPoller()
         self.rma = RMATracker()
-        self.comms = CommTable()
+        self.fault_plan = fault_plan if fault_plan is not None \
+            else FaultPlan.from_env()
+        self.retry_policy = retry_policy if retry_policy is not None \
+            else RetryPolicy()
+        self.comms = CommTable(fault_plan=self.fault_plan,
+                               retry_policy=self.retry_policy)
         self.dispatch_stats = DispatchStats()
         # bootstrap: validate every group's descriptor (UniqueID handshake)
         self._descriptors = {
@@ -378,6 +469,15 @@ class DiompContext:
         scalars, not host counters — they live on :attr:`dispatch_stats`.
         """
         return self.comms.byte_stats()
+
+    def retry_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-group, per-op re-issued wire attempts (chaos/fault retries)."""
+        return self.comms.retry_stats()
+
+    def retry_byte_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-group, per-op re-issued wire bytes — accounted apart from
+        :meth:`byte_stats` so planned-volume audits hold under chaos."""
+        return self.comms.retry_byte_stats()
 
     def reset_stats(self) -> None:
         self.comms.reset()

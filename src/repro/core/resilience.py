@@ -1,0 +1,169 @@
+"""Retry/timeout/backoff for the communication verbs (self-healing layer).
+
+The paper's GASNet-EX/GPI-2 substrate retries transient wire faults
+below the OpenMP runtime; our XLA lowering has no such substrate, so
+this module supplies the equivalent policy layer.  It is deliberately
+dependency-free (no jax, no repro imports) so it sits *below*
+``core/faults.py`` and ``core/context.py`` in the layering:
+
+* ``TransientFault`` / ``FaultTimeout`` — what a failed wire attempt
+  raises.  ``ChaosBackend`` (see `faults.py`) raises these at verb
+  dispatch time; a real GPI-2 transport would surface its error returns
+  through the same types.
+* ``RetryPolicy`` — per-verb retry budgets with capped exponential
+  backoff and deterministic jitter.  Deterministic matters: a chaos run
+  with a fixed seed must replay bit-identically, so jitter is derived
+  from ``sha256(seed, verb, attempt)`` rather than wall-clock entropy.
+* ``call_with_retries`` — the loop itself, used by the communicator
+  handles in ``core/context.py``.  Retried *wire* traffic is accounted
+  by the caller via ``on_retry`` so the logical call/byte logs (and the
+  OMPCCL-byte-log == RMATracker audit) stay exact.
+
+Digest helpers (``content_digest``/``corrupt_digest``) back the optional
+RMA-window checksum validation: corruption injection must be *detected*
+by the reader, never silently absorbed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import random
+import time
+from typing import Callable, Mapping, Optional
+
+__all__ = [
+    "TransientFault",
+    "FaultTimeout",
+    "RetryError",
+    "RetryPolicy",
+    "call_with_retries",
+    "derive_rng",
+    "content_digest",
+    "corrupt_digest",
+]
+
+
+class TransientFault(RuntimeError):
+    """A retryable wire fault: a dropped put, a failed collective, a
+    corrupted payload caught by the transport CRC.  Carries the injected
+    fault record (when raised by ``ChaosBackend``) as ``.fault`` so the
+    retry loop can mark it recovered."""
+
+    def __init__(self, msg: str, fault=None):
+        super().__init__(msg)
+        self.fault = fault
+
+
+class FaultTimeout(TransientFault):
+    """An attempt exceeded its completion budget (modeled, not slept)."""
+
+
+class RetryError(RuntimeError):
+    """The per-verb retry budget is exhausted; ``.last`` holds the final
+    ``TransientFault``.  This is the point where the runtime escalates —
+    the serving engine requeues, the trainer evicts and restores."""
+
+    def __init__(self, msg: str, last: Optional[TransientFault] = None):
+        super().__init__(msg)
+        self.last = last
+
+
+def derive_rng(*key) -> random.Random:
+    """A process-stable RNG for a structured key.
+
+    Python's ``hash()`` of strings is randomized per process, which
+    would make a "deterministic" fault plan differ between the run that
+    found a bug and the run trying to reproduce it — so all seeded
+    decisions in this layer and in `faults.py` go through sha256.
+    """
+    blob = ":".join(str(k) for k in key).encode()
+    return random.Random(int.from_bytes(
+        hashlib.sha256(blob).digest()[:8], "little"))
+
+
+def content_digest(buf) -> str:
+    """sha256 hex digest of a host buffer (what a put *should* land)."""
+    return hashlib.sha256(bytes(memoryview(buf).cast("B"))).hexdigest()
+
+
+def corrupt_digest(digest: str, salt) -> str:
+    """A deterministic wrong digest: what a corrupted/dropped put lands.
+
+    Guaranteed to differ from ``digest`` so window validation always
+    notices.
+    """
+    bad = hashlib.sha256(f"corrupt:{salt}:{digest}".encode()).hexdigest()
+    if bad == digest:  # pragma: no cover - sha256 collision
+        bad = "0" * 64 if digest != "0" * 64 else "f" * 64
+    return bad
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Timeout + capped exponential backoff + jitter, per verb.
+
+    ``max_retries`` is the default budget; ``per_verb`` overrides it for
+    verbs with different urgency (a barrier can afford more retries than
+    a latency-critical decode put).  Backoff for attempt *k* is
+    ``min(base * 2^(k-1), max) * jitter`` with jitter drawn
+    deterministically from ``(seed, verb, attempt)``.
+    """
+
+    max_retries: int = 8
+    per_verb: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    base_backoff_s: float = 1e-4
+    max_backoff_s: float = 5e-3
+    jitter: float = 0.5            # backoff scaled by [1 - j/2, 1 + j/2)
+    timeout_s: float = 0.25        # per-attempt completion budget (modeled)
+    seed: int = 0
+    sleep: bool = True             # False: account backoff, do not sleep
+
+    def budget(self, verb: str) -> int:
+        return int(self.per_verb.get(verb, self.max_retries))
+
+    def backoff_s(self, verb: str, attempt: int) -> float:
+        base = min(self.base_backoff_s * (2.0 ** max(attempt - 1, 0)),
+                   self.max_backoff_s)
+        u = derive_rng(self.seed, verb, attempt).random()
+        return base * (1.0 - self.jitter / 2.0 + self.jitter * u)
+
+
+def call_with_retries(thunk: Callable[[], object], verb: str,
+                      policy: RetryPolicy, *,
+                      on_retry: Optional[Callable] = None,
+                      on_recover: Optional[Callable] = None):
+    """Run ``thunk`` under ``policy``, retrying on ``TransientFault``.
+
+    ``on_retry(attempt, fault)`` fires before each re-issue — the
+    communicator uses it to log the retried wire bytes separately from
+    the logical byte log.  ``on_recover(n_faults)`` fires once when a
+    faulted call finally succeeds.  Injected-fault records attached to
+    the raised exceptions are marked ``recovered`` on success.
+    """
+    faults = []
+    backoff_total = 0.0
+    while True:
+        try:
+            out = thunk()
+        except TransientFault as tf:
+            faults.append(tf)
+            attempt = len(faults)
+            if attempt > policy.budget(verb):
+                raise RetryError(
+                    f"{verb}: retry budget ({policy.budget(verb)}) "
+                    f"exhausted after {attempt} attempts: {tf}",
+                    last=tf) from tf
+            if on_retry is not None:
+                on_retry(attempt, tf)
+            delay = policy.backoff_s(verb, attempt)
+            backoff_total += delay
+            if policy.sleep and delay > 0.0:
+                time.sleep(delay)
+            continue
+        for tf in faults:
+            if tf.fault is not None:
+                tf.fault.recovered = True
+        if faults and on_recover is not None:
+            on_recover(len(faults))
+        return out

@@ -180,6 +180,7 @@ def halo_exchange(x, group: DiompGroup, *, halo: int, axis: int = 0,
 class _WindowState:
     epoch: int = 0          # bumped by fence
     dirty_since: int = -1   # epoch of the last un-fenced put, -1 = clean
+    checksum: str = None    # digest the last put claims to have landed
 
 
 class RMATracker:
@@ -197,6 +198,11 @@ class RMATracker:
         self.fences = 0
         self.put_bytes = 0
         self.window_bytes: Dict[str, int] = {}
+        # re-issued wire traffic (fault retries) — accounted apart from the
+        # logical counters above so byte-parity audits hold under chaos
+        self.retry_puts = 0
+        self.retry_bytes = 0
+        self.window_retry_bytes: Dict[str, int] = {}
 
     def register(self, name: str) -> None:
         if name in self._windows:
@@ -226,9 +232,25 @@ class RMATracker:
         except KeyError:
             raise RMAError(f"unknown window {name!r}") from None
 
-    def on_put(self, name: str, nbytes: int = 0) -> None:
+    def on_put(self, name: str, nbytes: int = 0, *,
+               checksum: str = None, retry: bool = False) -> None:
+        """Record a put into ``name``.
+
+        ``checksum`` is the digest the transfer claims to have landed
+        (what :meth:`validate` checks after the fence); ``retry=True``
+        marks a re-issued wire attempt, accounted in the retry counters
+        instead of the logical put/byte log.
+        """
         st = self._state(name)
         st.dirty_since = st.epoch
+        st.checksum = checksum
+        if retry:
+            self.retry_puts += 1
+            self.retry_bytes += nbytes
+            if nbytes:
+                self.window_retry_bytes[name] = \
+                    self.window_retry_bytes.get(name, 0) + nbytes
+            return
         self.puts += 1
         self.put_bytes += nbytes
         if nbytes:
@@ -248,4 +270,25 @@ class RMATracker:
             raise RMAError(
                 f"window {name!r} read with un-fenced puts outstanding "
                 "(call ompx_fence first)"
+            )
+
+    def validate(self, name: str, checksum: str) -> None:
+        """Check that the last fenced put landed ``checksum`` — the get-side
+        integrity check that turns injected corruption into a detected,
+        retryable error instead of silent bad data.  Reading an un-fenced
+        window is the usual discipline violation; a digest mismatch after
+        the fence raises :class:`RMAError` so the caller re-puts (accounted
+        as retry traffic)."""
+        st = self._state(name)
+        if st.dirty_since >= 0:
+            raise RMAError(
+                f"window {name!r} validated with un-fenced puts outstanding "
+                "(call ompx_fence first)"
+            )
+        if st.checksum != checksum:
+            landed = (st.checksum or "<none>")[:12]
+            raise RMAError(
+                f"window {name!r} checksum mismatch: expected "
+                f"{checksum[:12]}..., wire landed {landed}... "
+                "(corrupted or dropped put)"
             )

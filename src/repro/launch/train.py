@@ -3,7 +3,11 @@
 Wires the full DiOMP substrate: runtime registration (PGAS planning),
 synthetic-shard data pipeline with async prefetch, the shard_map'd train
 step (explicit OMPCCL gradient reduction), async atomic checkpointing with
-auto-resume + elastic re-shard, and straggler monitoring.
+auto-resume + elastic re-shard, and straggler monitoring with a CLOSED
+eviction loop: when the monitor escalates (timing outliers, or a rank
+death scheduled via ``--chaos-seed``/``--kill-rank-step``), the driver
+checkpoints, shrinks the mesh to the surviving devices, restores from the
+latest verified checkpoint, and keeps training (docs/RESILIENCE.md).
 
 Smoke scale (default):
   PYTHONPATH=src python -m repro.launch.train --arch stablelm-3b --reduced \\
@@ -55,12 +59,30 @@ def main(argv=None):
     ap.add_argument("--grad-codec", default="none", choices=["none", "int8"])
     ap.add_argument("--dp-backend", default="hierarchical",
                     choices=["flat", "hierarchical"])
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="enable deterministic fault injection (FaultPlan)")
+    ap.add_argument("--chaos-p", type=float, default=0.05,
+                    help="per-dispatch fault probability under --chaos-seed")
+    ap.add_argument("--kill-rank-step", type=int, default=None,
+                    help="schedule a rank death at this step (elastic "
+                         "restore exercise; requires --checkpoint-dir)")
+    ap.add_argument("--max-restarts", type=int, default=1)
     args = ap.parse_args(argv)
+
+    fault_plan = None
+    if args.chaos_seed is not None:
+        from repro.core.faults import FaultPlan
+        fault_plan = FaultPlan(args.chaos_seed, p=args.chaos_p,
+                               kinds=("drop", "fail", "timeout"))
+        if args.kill_rank_step is not None:
+            fault_plan.kill_rank(args.kill_rank_step,
+                                 rank=len(jax.devices()) - 1)
 
     cfg = configs.get_reduced(args.arch) if args.reduced \
         else configs.get(args.arch)
+    ndev = len(jax.devices())
     mesh = (make_production_mesh(multi_pod=True) if args.mesh == "production"
-            else make_smoke_mesh(len(jax.devices())))
+            else make_smoke_mesh(ndev))
     ctx = ParallelCtx.from_mesh(mesh, remat=True, microbatch=args.microbatch,
                                 grad_codec=args.grad_codec,
                                 dp_backend=args.dp_backend)
@@ -68,7 +90,9 @@ def main(argv=None):
           f"mesh={dict(mesh.shape)} dp={ctx.dp} tp={ctx.tp}")
 
     # -- runtime: register every parameter into the PGAS plan ----------------
-    rt = DiompRuntime(mesh, segment_bytes=1 << 30)
+    from repro.core.context import DiompContext
+    rt = DiompRuntime(mesh, context=DiompContext(
+        mesh=mesh, segment_bytes=1 << 30, fault_plan=fault_plan))
     schema = sch.build_schema(cfg)
     for name, spec in schema.items():
         rt.register(name, spec.shape, spec.dtype, spec.axes)
@@ -83,8 +107,12 @@ def main(argv=None):
             "adafactor"
     else:
         opt, opt_name = adamw(lr), "adamw"
-    step_fn = build_train_step(cfg, mesh, ctx, opt, optimizer_name=opt_name,
-                               donate=False, global_batch=args.batch)
+
+    def build_step(mesh, ctx):
+        return build_train_step(cfg, mesh, ctx, opt, optimizer_name=opt_name,
+                                donate=False, global_batch=args.batch)
+
+    step_fn = build_step(mesh, ctx)
 
     # -- init or resume ----------------------------------------------------------
     ckpt = CheckpointManager(args.checkpoint_dir, pool=rt.streams) \
@@ -102,30 +130,71 @@ def main(argv=None):
     # -- data + monitoring ---------------------------------------------------------
     source = SyntheticLM(cfg, args.batch, args.seq, seed=17)
     prefetch = Prefetcher(source, depth=2, pool=rt.streams, start_step=start)
+    # the eviction loop is CLOSED: on_evict raises a flag the driver acts on
+    # (checkpoint -> shrink mesh -> restore), instead of only reporting
+    evict_flag = {"requested": False}
     monitor = StragglerMonitor(
-        on_prefetch_boost=lambda n: prefetch.boost(1))
+        on_prefetch_boost=lambda n: prefetch.boost(1),
+        on_evict=lambda: evict_flag.update(requested=True))
 
     # -- the loop -------------------------------------------------------------------
     t_start = time.time()
-    for i in range(start, start + args.steps):
+    restarts = 0
+    end = start + args.steps
+    i = start
+    while i < end:
         monitor.step_start()
         _, batch = prefetch.get()
         params, opt_state, metrics = step_fn(
             params, opt_state, batch, jnp.asarray(i))
         loss = float(metrics["loss"])
-        monitor.step_end(i)
-        if i % 5 == 0 or i == start + args.steps - 1:
+        if fault_plan is not None and fault_plan.deaths_at(i):
+            monitor.escalate(i, "rank-death")
+        else:
+            monitor.step_end(i)
+        if i % 5 == 0 or i == end - 1:
             print(f"step {i:5d}  loss {loss:.4f}  "
                   f"gnorm {float(metrics['grad_norm']):.3f}  "
                   f"({(time.time()-t_start)/max(i-start+1,1):.2f}s/step)")
         if ckpt and (i + 1) % args.checkpoint_every == 0:
             ckpt.save(i + 1, jax.device_get(params),
                       jax.device_get(opt_state))
+        i += 1
+        if evict_flag["requested"]:
+            evict_flag["requested"] = False
+            if ckpt is None or restarts >= args.max_restarts or ndev <= 2:
+                print(f"[elastic] eviction at step {i} but no restart "
+                      "possible (need --checkpoint-dir, restart budget, "
+                      ">2 devices); continuing degraded")
+                continue
+            # elastic restore: persist, shrink to the surviving devices,
+            # resume from the latest VERIFIED checkpoint on the new mesh
+            ckpt.wait()
+            if ckpt.latest() is None:
+                ckpt.save(i, jax.device_get(params),
+                          jax.device_get(opt_state), blocking=True)
+            ndev = max(ndev // 2, 2)
+            mesh = make_smoke_mesh(ndev)
+            ctx = ParallelCtx.from_mesh(
+                mesh, remat=True, microbatch=args.microbatch,
+                grad_codec=args.grad_codec, dp_backend=args.dp_backend)
+            step_fn = build_step(mesh, ctx)
+            i, params, opt_state, _ = ckpt.restore(
+                shard_fn=lambda name, arr: jax.device_put(arr))
+            params = {k: jnp.asarray(v) for k, v in params.items()}
+            prefetch = Prefetcher(source, depth=2, pool=rt.streams,
+                                  start_step=i)
+            monitor.reset()
+            restarts += 1
+            print(f"[elastic] restart {restarts}: resumed step {i} on "
+                  f"{ndev} devices (mesh {dict(mesh.shape)})")
     if ckpt:
         ckpt.wait()
         print(f"checkpoints: steps {ckpt.steps()}")
     if monitor.events:
         print(f"straggler events: {[(e.step, e.action) for e in monitor.events]}")
+    if restarts:
+        print(f"elastic restarts: {restarts}")
     rt.close()
     print("train driver done")
     return loss

@@ -40,6 +40,7 @@ import numpy as np
 from repro.core.context import DiompContext, use_default
 from repro.core.groups import DiompGroup
 from repro.core.pgas import GlobalMemory
+from repro.core.rma import RMAError
 from repro.models import api as model_api
 from repro.models.config import ModelConfig, ParallelCtx
 from .kvcache import PagedKVAllocator, Request
@@ -152,6 +153,13 @@ class ServeEngine:
         self.device_calls = 0
         self._arrival = 0
         self._all: List[GenRequest] = []
+        # rank-death recovery (docs/RESILIENCE.md): deaths scheduled on the
+        # context's FaultPlan fire in step(); dead ranks leave the scheduling
+        # set, their pages drain (graceful) or their requests requeue
+        self.faults = context.fault_plan
+        self.dead_ranks: set = set()
+        self.rank_death_log: List[tuple] = []
+        self.requeued = 0
 
     # -- API --------------------------------------------------------------
     def submit(self, prompt, max_new: int = 32, *,
@@ -192,6 +200,9 @@ class ServeEngine:
         """One engine iteration: preempt-on-pressure, admit/resume, chunked
         prefill for filling slots, one decode step for decode-ready slots."""
         self.steps += 1
+        if self.faults is not None:
+            for death in self.faults.deaths_at(self.steps):
+                self.on_rank_death(death.rank, graceful=death.graceful)
         self._maybe_preempt()
         self._admit()
         if not self.active:
@@ -204,21 +215,39 @@ class ServeEngine:
     def _order(reqs: List[GenRequest]) -> List[GenRequest]:
         return sorted(reqs, key=lambda r: (-r.priority, r.arrival))
 
+    def _live_ranks(self) -> List[int]:
+        return [r for r in range(self.memory.nranks)
+                if r not in self.dead_ranks]
+
     def _home(self, slot: int) -> int:
-        # every ACTIVE request's pages live on the controller heap (rank 0),
-        # so freeing a victim's pages always relieves the rank the OOM'd
-        # request allocates from; preempted requests park on spill ranks
+        # every ACTIVE request's pages live on the controller heap (the
+        # lowest LIVE rank; rank 0 until it dies), so freeing a victim's
+        # pages always relieves the rank the OOM'd request allocates from;
+        # preempted requests park on spill ranks
         del slot
-        return 0
+        live = self._live_ranks()
+        return live[0] if live else 0
 
     def _spill(self, req: GenRequest) -> int:
-        # round-robin over the non-home ranks so swapped-out requests
+        # round-robin over the live non-home ranks so swapped-out requests
         # spread across the remote heaps
-        n = self.memory.nranks
-        return 1 + (req.kv.rid % (n - 1)) if n > 1 else 0
+        live = [r for r in self._live_ranks() if r != req.kv.home_rank]
+        if not live:
+            return req.kv.home_rank
+        return live[req.kv.rid % len(live)]
 
     def _win(self, req: GenRequest) -> str:
         return f"kv/req{req.kv.rid}"
+
+    def _migrate_kw(self, req: GenRequest) -> dict:
+        kw = dict(comm=self._comm, tracker=self.dctx.rma,
+                  window=self._win(req))
+        if self.faults is not None:
+            # chaos active: validate every page transfer get-side so an
+            # injected corrupt/drop is detected and re-put, never absorbed
+            kw.update(faults=self.faults, policy=self.dctx.retry_policy,
+                      validate=True)
+        return kw
 
     def _admit(self) -> None:
         # resumptions first: preempted requests hold committed progress
@@ -229,8 +258,7 @@ class ServeEngine:
             home = self._home(slot)
             if req.kv.page_table:
                 if req.kv.home_rank != home and self.alloc.migrate(
-                        req.kv, home, comm=self._comm,
-                        tracker=self.dctx.rma, window=self._win(req)) == 0:
+                        req.kv, home, **self._migrate_kw(req)) == 0:
                     continue        # spill heap -> home heap OOM: wait
             else:
                 req.kv.home_rank = home
@@ -286,8 +314,7 @@ class ServeEngine:
             k: jax.device_get(v[:, slot:slot + 1])
             for k, v in self.cache.items() if k != "pos"}
         moved = self.alloc.migrate(req.kv, self._spill(req),
-                                   comm=self._comm, tracker=self.dctx.rma,
-                                   window=self._win(req))
+                                   **self._migrate_kw(req))
         if moved == 0 and req.kv.page_table:
             # spill heap full (or single-rank deployment): the swap moved
             # nothing, so drop the page plan instead — the snapshot above
@@ -310,6 +337,78 @@ class ServeEngine:
             homes = {req.kv.home_rank for req in self.active.values()}
             if self.alloc.pressure(homes) <= self.low_watermark:
                 break
+
+    # -- rank death (docs/RESILIENCE.md lifecycle) --------------------------
+    def on_rank_death(self, rank: int, *, graceful: bool = False) -> None:
+        """Remove ``rank`` from the serving set.
+
+        ``graceful`` (the rank announced eviction): its requests' paged KV
+        drains to surviving ranks over the one-sided ``migrate`` path
+        first.  Abrupt: pages homed there are gone — preempted requests
+        survive on their host row snapshots (resume re-reserves pages);
+        active requests requeue from scratch.  Either way the scheduler's
+        rank set shrinks and latency stats keep flowing.
+        """
+        if rank in self.dead_ranks or not (0 <= rank < self.memory.nranks):
+            return
+        live_after = [r for r in self._live_ranks() if r != rank]
+        if not live_after:
+            raise RuntimeError("cannot remove the last live rank")
+        holders = [r for r in (list(self.active.values())
+                               + list(self.preempted))
+                   if r.kv is not None and r.kv.home_rank == rank
+                   and r.kv.page_table]
+        drained, lost = 0, []
+        if graceful:
+            for req in holders:
+                dst = live_after[req.kv.rid % len(live_after)]
+                moved = self.alloc.migrate(req.kv, dst,
+                                           **self._migrate_kw(req))
+                if moved:
+                    drained += moved
+                else:
+                    lost.append(req)    # surviving heaps full: treat as lost
+        else:
+            lost = holders
+        self.dead_ranks.add(rank)
+        # purge the free list, forget remaining page tables homed there
+        self.alloc.forget_rank(rank)
+        for req in lost:
+            if req in self.preempted:
+                # pages gone, but the host snapshot holds the rows:
+                # recompute-style resume (reserve at re-admission)
+                continue
+            self._requeue(req)
+        self.rank_death_log.append(
+            (self.steps, rank, graceful, drained, len(lost)))
+
+    def _requeue(self, req: GenRequest) -> None:
+        """An active request lost its KV pages: reset all generation
+        progress and put it back on the arrival queue (priority kept)."""
+        slot = req.slot
+        if slot >= 0 and self.active.get(slot) is req:
+            del self.active[slot]
+            self.free_slots.append(slot)
+            self.pending[slot, 0] = 0
+            self.host_pos[slot] = 0
+        try:
+            self.dctx.rma.unregister(self._win(req))
+        except RMAError:
+            pass
+        if req.kv is not None:
+            self.alloc.forget_pages(req.kv)
+            self.alloc.forget(req.kv)
+            req.kv = None
+        req.slot = -1
+        req.fed = 0
+        req.out = []
+        req.done = False
+        req._snapshot = None
+        # deterministic replay: the fresh attempt samples the same stream
+        req._rng = np.random.default_rng(
+            self.seed * 1_000_003 + req.arrival)
+        self.requeued += 1
+        self.queue.append(req)
 
     # -- chunked prefill ----------------------------------------------------
     def _slot_cache(self, slot: int) -> dict:
@@ -478,6 +577,9 @@ class ServeEngine:
             "engine_steps": self.steps,
             "device_calls": self.device_calls,
             "preemptions": sum(r.preemptions for r in self._all),
+            "rank_deaths": len(self.rank_death_log),
+            "requeued": self.requeued,
+            "live_ranks": len(self._live_ranks()),
             "ttft_s": _agg(ttft),
             "request_s": _agg(total),
             "tokens_per_device_call": (toks / self.device_calls

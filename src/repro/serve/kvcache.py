@@ -43,6 +43,7 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core.groups import DiompGroup
 from repro.core.pgas import AllocError, GlobalMemory, SecondLevelPtr
+from repro.core.rma import RMAError
 
 __all__ = ["PagedKVAllocator", "ReallocKVAllocator", "Request"]
 
@@ -89,6 +90,7 @@ class PagedKVAllocator:
         self._free_pages: Dict[int, List[SecondLevelPtr]] = {}
         # (event, ...) tuples; tests assert the per-op allocation counts
         self.call_log: List[Tuple] = []
+        self.dead_ranks: set = set()
         self.stats = {
             "pages_allocated": 0,   # pages handed to requests (incl. reuse)
             "pages_freed": 0,       # pages returned (free list or rollback)
@@ -97,6 +99,8 @@ class PagedKVAllocator:
             "oom_events": 0,
             "migrations": 0,
             "bytes_migrated": 0,
+            "pages_lost": 0,        # pages on a dead rank (subset of freed)
+            "retried_page_puts": 0,  # re-issued page transfers (faults)
         }
         # watermark-pressure denominator; the buddy allocator rounds each
         # page up to a power-of-two block, so size pages accordingly for an
@@ -106,6 +110,8 @@ class PagedKVAllocator:
 
     # -- page pool ------------------------------------------------------------
     def _alloc_page(self, home: int, rid: int, idx: int) -> Optional[SecondLevelPtr]:
+        if home in self.dead_ranks:
+            return None
         free = self._free_pages.get(home)
         if free:
             slp = free.pop()
@@ -200,7 +206,8 @@ class PagedKVAllocator:
 
     # -- preemption / migration ----------------------------------------------
     def migrate(self, req: Request, dst_rank: int, *, comm=None,
-                tracker=None, window: Optional[str] = None) -> int:
+                tracker=None, window: Optional[str] = None,
+                faults=None, policy=None, validate: bool = False) -> int:
         """Move every page of ``req`` to ``dst_rank``'s heap; returns bytes.
 
         Per page: allocate a destination page, issue a one-sided transfer
@@ -208,8 +215,19 @@ class PagedKVAllocator:
         communicator handle and the RMA tracker window, see module
         docstring), then return the source page to its free list.  One
         fence completes the epoch.
+
+        ``validate=True`` turns on get-side integrity checking: each page
+        transfer carries a content digest, is fenced and validated through
+        the tracker, and a digest mismatch (an injected ``corrupt``/
+        ``drop`` from ``faults``) is repaired by re-putting the page —
+        retried wire traffic lands in the tracker/communicator *retry*
+        logs, so the logical byte-parity audits still hold.  The default
+        path (no validation) is byte-for-byte the historical one: N puts,
+        one fence.
         """
         import numpy as np
+
+        from repro.core.resilience import content_digest, corrupt_digest
 
         if dst_rank == req.home_rank:
             return 0
@@ -227,18 +245,52 @@ class PagedKVAllocator:
                 self.call_log.append(("migrate_oom", req.rid, dst_rank))
                 return 0
             new_table.append(page)
+        digest = content_digest(pagebuf) if validate else None
+        budget = policy.budget("migrate") if policy is not None else 3
         for _ in new_table:
-            if comm is not None:
-                # one-sided read of the page: count under "get", payload
-                # bytes under the leaf "put" (the communicator's delegating
-                # -op convention, so wire volume is never double-counted)
-                comm.record("get")
-                comm.record("put", pagebuf)
-            if tracker is not None:
-                tracker.on_put(name, self.page_bytes)
+            attempt = 0
+            pending = []          # faults hit on this page, not yet repaired
+            while True:
+                fault = faults.next_fault("migrate") \
+                    if faults is not None else None
+                wire = digest
+                if fault is not None:
+                    if fault.kind == "delay":
+                        fault.recovered = True
+                    elif validate:
+                        # damaged in flight: a wrong digest lands
+                        wire = corrupt_digest(digest, fault.call_index)
+                        pending.append(fault)
+                if comm is not None:
+                    if attempt == 0:
+                        # one-sided read of the page: count under "get",
+                        # payload bytes under the leaf "put" (the
+                        # communicator's delegating-op convention, so wire
+                        # volume is never double-counted)
+                        comm.record("get")
+                        comm.record("put", pagebuf)
+                    else:
+                        comm.record_retry("put", pagebuf)
+                if tracker is not None:
+                    tracker.on_put(name, self.page_bytes,
+                                   checksum=wire, retry=attempt > 0)
+                if not validate or tracker is None:
+                    break
+                tracker.on_fence(name)
+                try:
+                    tracker.validate(name, digest)
+                except RMAError:
+                    attempt += 1
+                    self.stats["retried_page_puts"] += 1
+                    if attempt > budget:
+                        raise
+                    continue
+                for hit in pending:   # a clean re-put repaired these
+                    hit.recovered = True
+                break
         for old in req.page_table:
             self._release_page(old, req.home_rank)
-        if tracker is not None:
+        if tracker is not None and not validate:
             tracker.on_fence(name)
         moved = len(new_table) * self.page_bytes
         self.call_log.append(
@@ -248,6 +300,44 @@ class PagedKVAllocator:
         self.stats["migrations"] += 1
         self.stats["bytes_migrated"] += moved
         return moved
+
+    # -- rank death -----------------------------------------------------------
+    def forget_pages(self, req: Request) -> int:
+        """A request's pages are GONE (their home rank died): unmap them
+        without recycling.  Lost pages count under ``pages_lost`` AND
+        ``pages_freed`` so the allocated-minus-freed == live ledger stays
+        balanced.  Returns the count."""
+        n = len(req.page_table)
+        if n == 0:
+            return 0
+        for slp in req.page_table:
+            self.memory.free(slp)
+        req.page_table = []
+        self.stats["pages_freed"] += n
+        self.stats["pages_lost"] += n
+        self.call_log.append(("forget_pages", req.rid, n))
+        return n
+
+    def forget(self, req: Request) -> None:
+        """Drop a request whose pages were forgotten (no release recycling)."""
+        req.page_table = []
+        self.requests.pop(req.rid, None)
+        self.call_log.append(("forget", req.rid))
+
+    def forget_rank(self, rank: int) -> int:
+        """Rank ``rank`` died abruptly: purge its free list, forget every
+        tracked request's pages homed there, and refuse future allocations
+        on it.  Returns pages lost from live requests (the engine decides
+        what to do with their owners)."""
+        self.dead_ranks.add(rank)
+        for slp in self._free_pages.pop(rank, []):
+            self.memory.free(slp)
+        lost = 0
+        for req in list(self.requests.values()):
+            if req.home_rank == rank and req.page_table:
+                lost += self.forget_pages(req)
+        self.call_log.append(("rank_death", rank, lost))
+        return lost
 
     # -- addressing -----------------------------------------------------------
     def lookup(self, req: Request, token_pos: int,
@@ -272,10 +362,12 @@ class PagedKVAllocator:
             if rank is None or k == rank)
 
     def pressure(self, ranks=None) -> float:
-        """max over ``ranks`` (default: all) of live-KV-page utilization —
-        the engine's watermark-preemption signal."""
+        """max over ``ranks`` (default: all live) of live-KV-page
+        utilization — the engine's watermark-preemption signal.  Dead
+        ranks are excluded: their heaps no longer exist."""
         ranks = range(self.memory.nranks) if ranks is None else ranks
-        util = [self.live_pages(r) / self.capacity_pages for r in ranks]
+        util = [self.live_pages(r) / self.capacity_pages
+                for r in ranks if r not in self.dead_ranks]
         return max(util, default=0.0)
 
     def trim(self) -> int:

@@ -6,9 +6,16 @@ Design (DESIGN.md §6):
   bounded-concurrency host lanes), so training continues while bytes drain.
 * **Atomic** — writes go to ``step_XXXX.tmp`` and are renamed only after
   every shard file + a checksum manifest are durable; a crash mid-write can
-  never leave a readable-but-corrupt checkpoint.
-* **Resumable** — ``latest()`` finds the newest complete step; restore
-  verifies checksums before any byte reaches a device.
+  never leave a readable-but-corrupt checkpoint.  *Durable* means fsynced:
+  each shard file, the manifest, the tmp directory, and the parent
+  directory around the rename — rename-without-fsync is not crash-safe
+  (the rename can land while the data blocks are still in the page
+  cache).  Orphaned ``.tmp`` directories from a crashed writer are
+  garbage-collected on manager startup.
+* **Resumable** — ``latest()`` finds the newest complete *and verified*
+  step (a damaged step is skipped, never silently half-loaded); restore
+  verifies checksums before any byte reaches a device and raises a clear
+  error naming the damaged file.
 * **Elastic re-shard** — arrays are saved in *global* layout; restore
   ``device_put``s against whatever mesh the new job brings up, so a restart
   on a different pod count (or after losing a slice) re-shards transparently
@@ -30,6 +37,21 @@ import numpy as np
 from repro.core.streams import StreamPool
 
 __all__ = ["CheckpointManager"]
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory entry (required for rename durability on POSIX);
+    best-effort where the filesystem refuses directory fds."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
 
 
 def _tree_to_flat(tree, prefix="") -> Dict[str, np.ndarray]:
@@ -61,6 +83,11 @@ class CheckpointManager:
         self.pool = pool or StreamPool(max_active=4)
         os.makedirs(directory, exist_ok=True)
         self._pending = []
+        # a crashed writer leaves step_XXXX.tmp behind; it can never become
+        # a checkpoint (the rename is what commits), so reclaim the space
+        for d in os.listdir(directory):
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
     # -- save -------------------------------------------------------------
     def save(self, step: int, params, opt_state, extra: Optional[dict] = None,
@@ -79,7 +106,10 @@ class CheckpointManager:
             dtype_name = str(arr.dtype)
             if dtype_name == "bfloat16":       # numpy can't round-trip bf16
                 arr = arr.view(np.uint16)
-            np.save(path, arr)
+            with open(path, "wb") as f:
+                np.save(f, arr)
+                f.flush()
+                os.fsync(f.fileno())           # durable BEFORE the rename
             with open(path, "rb") as f:
                 digest = hashlib.sha256(f.read()).hexdigest()
             return fn, digest, dtype_name
@@ -94,7 +124,11 @@ class CheckpointManager:
                                        "dtype": dtype_name}
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(meta, f)
+                f.flush()
+                os.fsync(f.fileno())
+            _fsync_dir(tmp)                  # entries durable before commit
             os.replace(tmp, final)           # atomic commit
+            _fsync_dir(self.dir)             # the rename itself durable
             self._gc()
 
         fut = self.pool.submit(finalize)
@@ -123,30 +157,59 @@ class CheckpointManager:
                     out.append(int(d[5:]))
         return sorted(out)
 
-    def latest(self) -> Optional[int]:
-        steps = self.steps()
-        return steps[-1] if steps else None
+    def verify_step(self, step: int) -> bool:
+        """True iff ``step``'s manifest parses and every shard file matches
+        its recorded checksum — a crashed/corrupted step returns False."""
+        d = os.path.join(self.dir, f"step_{step:08d}")
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                meta = json.load(f)
+            for name, info in meta["files"].items():
+                with open(os.path.join(d, info["file"]), "rb") as f:
+                    if hashlib.sha256(f.read()).hexdigest() != info["sha256"]:
+                        return False
+        except (OSError, ValueError, KeyError, TypeError):
+            return False
+        return True
+
+    def latest(self, *, verify: bool = True) -> Optional[int]:
+        """The newest restorable step.  ``verify`` (default) checksums each
+        candidate and *skips damaged steps* — a torn write of step N must
+        fall back to step N-1, not take the whole run down."""
+        for step in reversed(self.steps()):
+            if not verify or self.verify_step(step):
+                return step
+        return None
 
     def restore(self, step: Optional[int] = None, *,
                 shard_fn: Optional[Callable[[str, np.ndarray], jax.Array]] = None):
         """Returns (step, params, opt_state, extra).
 
         ``shard_fn(name, array)`` places each global array onto the *current*
-        mesh (elastic re-shard); identity if None.
+        mesh (elastic re-shard); identity if None.  A damaged step raises
+        ``IOError`` naming the file — garbage never reaches a device.
         """
         if step is None:
             step = self.latest()
         if step is None:
             raise FileNotFoundError("no complete checkpoint found")
         d = os.path.join(self.dir, f"step_{step:08d}")
-        with open(os.path.join(d, "manifest.json")) as f:
-            meta = json.load(f)
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                meta = json.load(f)
+        except (OSError, ValueError) as e:
+            raise IOError(
+                f"checkpoint step {step} is damaged: unreadable manifest "
+                f"({e}) — refusing to restore") from e
         flat = {}
         for name, info in meta["files"].items():
             path = os.path.join(d, info["file"])
             with open(path, "rb") as f:
                 if hashlib.sha256(f.read()).hexdigest() != info["sha256"]:
-                    raise IOError(f"checksum mismatch for {name} in step {step}")
+                    raise IOError(
+                        f"checkpoint step {step} is damaged: checksum "
+                        f"mismatch for {name} ({info['file']}) — refusing "
+                        "to load garbage")
             arr = np.load(path)
             if info.get("dtype") == "bfloat16":
                 import ml_dtypes

@@ -76,3 +76,24 @@ class StragglerMonitor:
         if action:
             self.events.append(StragglerEvent(step, dt, self.ewma, action))
         return action
+
+    def escalate(self, step: int, reason: str = "") -> str:
+        """Immediate eviction, bypassing the EWMA streak — for faults the
+        runtime *knows* about (a rank died, a retry budget exhausted)
+        rather than infers from timing.  Fires ``on_evict`` and records
+        the event; returns 'evict'."""
+        self.consecutive = 0
+        self.events.append(
+            StragglerEvent(step, 0.0, self.ewma or 0.0,
+                           f"evict:{reason}" if reason else "evict"))
+        if self._on_evict:
+            self._on_evict()
+        return "evict"
+
+    def reset(self) -> None:
+        """Forget the timing distribution — call after a topology change
+        (elastic restart on fewer devices shifts every step time, and the
+        old EWMA would flag the whole new regime as outliers)."""
+        self.ewma = None
+        self.consecutive = 0
+        self._t0 = None

@@ -1,0 +1,135 @@
+"""Checkpoint crash recovery: torn writes, corrupt manifests, orphan GC.
+
+The durability contract (train/checkpoint.py): a checkpoint is either
+complete-and-verified or it does not exist.  ``latest()`` must skip a
+damaged step and fall back to the newest intact one; ``restore`` must
+refuse garbage with a clear error naming the damage; a crashed writer's
+``step_XXXX.tmp`` must be reclaimed on the next startup, never promoted.
+"""
+
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import CheckpointManager
+
+
+def _params(seed=0):
+    rng = np.random.RandomState(seed)
+    return ({"w": rng.randn(8, 4).astype(np.float32),
+             "b": rng.randn(4).astype(np.float32)},
+            {"m": np.zeros((8, 4), np.float32)})
+
+
+def _save_steps(ckpt, steps):
+    for s in steps:
+        params, opt = _params(s)
+        ckpt.save(s, params, opt, blocking=True)
+
+
+def _step_dir(d, step):
+    return os.path.join(d, f"step_{step:08d}")
+
+
+def _shard_files(d, step):
+    sd = _step_dir(d, step)
+    return [os.path.join(sd, f) for f in os.listdir(sd) if f.endswith(".npy")]
+
+
+def test_truncated_shard_is_skipped_by_latest(tmp_path):
+    d = str(tmp_path)
+    ckpt = CheckpointManager(d, keep=5)
+    _save_steps(ckpt, [1, 2])
+    assert ckpt.latest() == 2
+
+    # tear the newest step mid-file, as a crash between write and fsync would
+    victim = _shard_files(d, 2)[0]
+    size = os.path.getsize(victim)
+    with open(victim, "r+b") as f:
+        f.truncate(size // 2)
+
+    assert ckpt.verify_step(2) is False
+    assert ckpt.verify_step(1) is True
+    assert ckpt.latest() == 1          # damaged step 2 skipped, not fatal
+    assert ckpt.latest(verify=False) == 2   # the unverified view still sees it
+
+    step, params, _opt, _extra = ckpt.restore()
+    want, _ = _params(1)
+    assert step == 1
+    np.testing.assert_array_equal(params["w"], want["w"])
+
+
+def test_restore_damaged_step_raises_clear_error(tmp_path):
+    d = str(tmp_path)
+    ckpt = CheckpointManager(d, keep=5)
+    _save_steps(ckpt, [3])
+
+    # flip bits in a shard: the manifest checksum no longer matches
+    victim = _shard_files(d, 3)[0]
+    with open(victim, "r+b") as f:
+        f.seek(100)
+        f.write(b"\xde\xad\xbe\xef")
+
+    with pytest.raises(IOError, match="damaged.*checksum mismatch"):
+        ckpt.restore(step=3)
+
+
+def test_restore_unreadable_manifest_raises(tmp_path):
+    d = str(tmp_path)
+    ckpt = CheckpointManager(d, keep=5)
+    _save_steps(ckpt, [4])
+    with open(os.path.join(_step_dir(d, 4), "manifest.json"), "w") as f:
+        f.write("{ not json")
+    with pytest.raises(IOError, match="unreadable manifest"):
+        ckpt.restore(step=4)
+    assert ckpt.latest() is None       # nothing restorable left
+
+
+def test_tampered_manifest_checksum_detected(tmp_path):
+    d = str(tmp_path)
+    ckpt = CheckpointManager(d, keep=5)
+    _save_steps(ckpt, [5])
+    mpath = os.path.join(_step_dir(d, 5), "manifest.json")
+    with open(mpath) as f:
+        meta = json.load(f)
+    name = next(iter(meta["files"]))
+    meta["files"][name]["sha256"] = "0" * 64
+    with open(mpath, "w") as f:
+        json.dump(meta, f)
+    assert ckpt.verify_step(5) is False
+    with pytest.raises(IOError, match="refusing to load garbage"):
+        ckpt.restore(step=5)
+
+
+def test_orphaned_tmp_dirs_reclaimed_on_startup(tmp_path):
+    d = str(tmp_path)
+    ckpt = CheckpointManager(d, keep=5)
+    _save_steps(ckpt, [1])
+    # a writer that died mid-save leaves a .tmp that must never be promoted
+    orphan = os.path.join(d, "step_00000009.tmp")
+    os.makedirs(orphan)
+    with open(os.path.join(orphan, "junk.npy"), "wb") as f:
+        f.write(b"partial")
+
+    fresh = CheckpointManager(d, keep=5)
+    assert not os.path.exists(orphan)
+    assert fresh.steps() == [1]        # the committed step untouched
+    assert fresh.latest() == 1
+
+
+def test_crash_between_saves_falls_back_across_gap(tmp_path):
+    # steps 1..3 saved; 3 torn AND 2 removed wholesale (disk died mid-GC):
+    # latest() must walk back to 1 rather than give up
+    d = str(tmp_path)
+    ckpt = CheckpointManager(d, keep=5)
+    _save_steps(ckpt, [1, 2, 3])
+    victim = _shard_files(d, 3)[0]
+    with open(victim, "r+b") as f:
+        f.truncate(1)
+    shutil.rmtree(_step_dir(d, 2))
+    assert ckpt.latest() == 1
+    step, params, _o, _e = ckpt.restore()
+    assert step == 1

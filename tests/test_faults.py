@@ -1,0 +1,406 @@
+"""Chaos-engineered communicator: deterministic fault injection + recovery.
+
+Contract under test (docs/RESILIENCE.md):
+
+* a ``FaultPlan`` is a pure function of its seed — two plans with the same
+  seed inject the identical (verb, call, kind) stream, so any chaos run
+  reproduces bit-for-bit;
+* every injected *transient* fault is absorbed by the communicator's retry
+  layer: results are bit-identical to the fault-free run, logical call/byte
+  logs are untouched, and the re-issued wire traffic lands in the separate
+  retry logs (the OMPCCL-log == RMATracker parity audits survive chaos);
+* the fused equivalence paths (ring matmul, Minimod wave step, MoE
+  dispatch) run unchanged under an injecting default context;
+* RMA checksum validation catches a corrupted page migration and repairs
+  it by re-putting — or raises once the retry budget is spent, never
+  silently absorbing garbage.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.compat import make_mesh, shard_map
+from repro.core.context import DiompContext, use_default
+from repro.core.faults import (INJECTABLE_VERBS, ChaosBackend, FaultPlan,
+                               FaultSpec)
+from repro.core.groups import DiompGroup
+from repro.core.pgas import GlobalMemory
+from repro.core.resilience import (RetryError, RetryPolicy, TransientFault,
+                                   call_with_retries, content_digest,
+                                   corrupt_digest)
+from repro.core.rma import RMAError, RMATracker
+from repro.serve.kvcache import PagedKVAllocator
+
+RNG = np.random.RandomState(0)
+WORLD = DiompGroup(("pod", "data", "model"), name="world")
+RING = DiompGroup(("x",), name="x")
+
+# tests drive many injected retries; don't actually sleep the backoffs
+FAST = RetryPolicy(sleep=False)
+
+
+def _clean_plan():
+    """Explicitly inert plan: keeps 'clean' runs fault-free even when the
+    chaos-smoke CI job exports DIOMP_CHAOS_SEED into the environment."""
+    return FaultPlan(0, p=0.0)
+
+
+def _chaos_ctx(mesh, seed=7, p=0.25, kinds=("drop", "fail", "timeout"),
+               specs=(), **kw):
+    plan = FaultPlan(seed, p=p, kinds=kinds, specs=tuple(specs))
+    return DiompContext(mesh=mesh, segment_bytes=1 << 20,
+                        fault_plan=plan, retry_policy=FAST, **kw), plan
+
+
+def _total(stats):
+    return sum(sum(ops.values()) for ops in stats.values())
+
+
+# ---------------------------------------------------------------------------
+# the plan is deterministic
+# ---------------------------------------------------------------------------
+
+def _stream(plan, verbs, n):
+    out = []
+    for verb in verbs:
+        for _ in range(n):
+            f = plan.next_fault(verb)
+            out.append(None if f is None
+                       else (f.verb, f.call_index, f.kind))
+    return out
+
+
+def test_fault_plan_same_seed_same_stream():
+    a = _stream(FaultPlan(7, p=0.5, kinds=("drop", "fail", "timeout")),
+                INJECTABLE_VERBS, 8)
+    b = _stream(FaultPlan(7, p=0.5, kinds=("drop", "fail", "timeout")),
+                INJECTABLE_VERBS, 8)
+    assert a == b
+    assert any(f is not None for f in a)          # p=0.5 over 88 rolls
+
+
+def test_fault_plan_seed_changes_stream():
+    a = _stream(FaultPlan(7, p=0.5), INJECTABLE_VERBS, 16)
+    b = _stream(FaultPlan(8, p=0.5), INJECTABLE_VERBS, 16)
+    assert a != b
+
+
+def test_fault_spec_targets_exact_call():
+    plan = FaultPlan(0, specs=(FaultSpec("put", 2, "corrupt"),))
+    hits = _stream(plan, ("put",), 5)
+    assert hits == [None, None, ("put", 2, "corrupt"), None, None]
+    assert plan.injected_counts() == {"corrupt": 1}
+
+
+def test_fault_plan_max_faults_cap():
+    plan = FaultPlan(3, p=1.0, kinds=("drop",), max_faults=4)
+    hits = [f for f in _stream(plan, ("allreduce",), 10) if f]
+    assert len(hits) == 4
+
+
+def test_fault_plan_from_env():
+    env = {"DIOMP_CHAOS_SEED": "42", "DIOMP_CHAOS_P": "0.9",
+           "DIOMP_CHAOS_KINDS": "drop,timeout",
+           "DIOMP_CHAOS_VERBS": "put,allreduce"}
+    plan = FaultPlan.from_env(env)
+    assert plan.seed == 42 and plan.p == 0.9
+    assert plan.kinds == ("drop", "timeout")
+    assert plan.verbs == ("put", "allreduce")
+    assert plan.next_fault("bcast") is None       # verb not opted in
+    assert FaultPlan.from_env({}) is None         # no seed: chaos off
+
+
+def test_kill_rank_fires_once():
+    plan = FaultPlan(0).kill_rank(5, rank=3, graceful=True)
+    assert plan.deaths_at(4) == []
+    first = plan.deaths_at(5)
+    assert [(d.rank, d.graceful) for d in first] == [(3, True)]
+    assert plan.deaths_at(5) == []                # already fired
+
+
+# ---------------------------------------------------------------------------
+# retry policy + driver
+# ---------------------------------------------------------------------------
+
+def test_backoff_capped_and_deterministic():
+    pol = RetryPolicy(base_backoff_s=1e-4, max_backoff_s=5e-4, jitter=0.5)
+    waits = [pol.backoff_s("put", k) for k in range(1, 10)]
+    assert all(w <= 5e-4 * 1.25 + 1e-12 for w in waits)
+    assert waits == [pol.backoff_s("put", k) for k in range(1, 10)]
+    assert pol.backoff_s("put", 3) != pol.backoff_s("allreduce", 3)
+
+
+def test_retry_budget_per_verb_override():
+    pol = RetryPolicy(max_retries=8, per_verb={"put": 2})
+    assert pol.budget("put") == 2 and pol.budget("barrier") == 8
+
+
+def test_call_with_retries_recovers():
+    state = {"n": 0}
+
+    def flaky():
+        state["n"] += 1
+        if state["n"] <= 3:
+            raise TransientFault(f"boom {state['n']}")
+        return "ok"
+
+    seen = []
+    out = call_with_retries(flaky, "put", FAST,
+                            on_retry=lambda k, tf: seen.append(k))
+    assert out == "ok" and seen == [1, 2, 3]
+
+
+def test_call_with_retries_exhausts_budget():
+    pol = RetryPolicy(max_retries=2, sleep=False)
+
+    def always():
+        raise TransientFault("down")
+
+    with pytest.raises(RetryError):
+        call_with_retries(always, "put", pol)
+
+
+# ---------------------------------------------------------------------------
+# the whole verb surface, bit-identical under chaos
+# ---------------------------------------------------------------------------
+
+def _verb_sweep(ctx, mesh):
+    comm = ctx.communicator(RING)
+    x = np.arange(32, dtype=np.float32).reshape(8, 4)
+
+    def fn(v):
+        y = comm.allreduce(v)
+        y = y + comm.bcast(v, root=1)
+        y = y + comm.permute(v, shift=1)
+        y = y + comm.put(v, shift=2)
+        lo, hi = comm.halo_exchange(v, halo=1, axis=0)
+        y = y + lo + hi
+        y = y + comm.reducescatter(comm.allgather(v, axis=0), axis=0)
+        return y + 0 * jnp.asarray(comm.barrier(), y.dtype)
+
+    return np.asarray(jax.jit(shard_map(
+        fn, mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x))
+
+
+def test_verbs_bit_identical_under_chaos(ring8):
+    clean_ctx = DiompContext(mesh=ring8, segment_bytes=1 << 20,
+                             fault_plan=_clean_plan())
+    chaos_ctx, plan = _chaos_ctx(ring8, seed=11, p=0.3)
+
+    want = _verb_sweep(clean_ctx, ring8)
+    got = _verb_sweep(chaos_ctx, ring8)
+
+    assert np.array_equal(got, want)              # bit-identical recovery
+    assert len(plan.injected) > 0                 # chaos actually fired
+    assert plan.unrecovered() == []               # ...and was absorbed
+    # logical logs are chaos-invariant; retries live in their own log
+    assert chaos_ctx.stats() == clean_ctx.stats()
+    assert chaos_ctx.byte_stats() == clean_ctx.byte_stats()
+    assert clean_ctx.retry_stats() == {}
+    assert _total(chaos_ctx.retry_stats()) == len(plan.injected)
+
+
+def test_retry_budget_exhaustion_surfaces(ring8):
+    # every roll faults and the budget is tiny: the failure must surface
+    # as RetryError, not hang or silently drop the op
+    plan = FaultPlan(1, p=1.0, kinds=("drop",))
+    ctx = DiompContext(mesh=ring8, segment_bytes=1 << 20, fault_plan=plan,
+                       retry_policy=RetryPolicy(max_retries=2, sleep=False))
+    comm = ctx.communicator(RING)
+    x = np.ones((8, 4), np.float32)
+    with pytest.raises(RetryError):
+        jax.jit(shard_map(lambda v: comm.allreduce(v), mesh=ring8,
+                          in_specs=P("x"), out_specs=P("x")))(x)
+
+
+def test_chaos_backend_wraps_any_registered_backend(ring8):
+    # ChaosBackend must delegate each verb directly (never through the
+    # base-class fallbacks, which would double-inject via allreduce)
+    from repro.core.backends import XlaBackend
+    plan = FaultPlan(5, specs=(FaultSpec("bcast", 0, "fail"),))
+    cb = ChaosBackend(XlaBackend(), plan)
+    assert cb.name == "chaos:xla"
+    x = np.arange(8, dtype=np.float32)
+
+    def fn(v):
+        return cb.bcast(v, RING, root=2)
+
+    with pytest.raises(TransientFault):
+        jax.jit(shard_map(fn, mesh=ring8, in_specs=P("x"),
+                          out_specs=P("x")))(x)
+    # only the bcast roll fired — delegation never touched allreduce
+    assert [f.verb for f in plan.injected] == ["bcast"]
+
+
+# ---------------------------------------------------------------------------
+# fused equivalence paths survive an injecting default context
+# ---------------------------------------------------------------------------
+
+def test_ring_matmul_bit_identical_under_chaos():
+    from repro.kernels.ring_matmul.ops import ring_allgather_matmul
+    ndev = 8
+    mesh = make_mesh((ndev,), ("x",), axis_types="auto")
+    A = RNG.randn(16, 24).astype(np.float32)
+    B = RNG.randn(24, 16).astype(np.float32)
+
+    def run(ctx):
+        f = jax.jit(shard_map(
+            lambda a, b: ring_allgather_matmul(a, b, RING),
+            mesh=mesh, in_specs=(P("x", None), P(None, "x")),
+            out_specs=P(None, "x")))
+        with use_default(ctx):
+            return np.asarray(f(A, B))
+
+    want = run(DiompContext(mesh=mesh, fault_plan=_clean_plan()))
+    chaos_ctx, plan = _chaos_ctx(mesh, seed=13, p=0.3)
+    got = run(chaos_ctx)
+    assert np.array_equal(got, want)
+    assert len(plan.injected) > 0 and plan.unrecovered() == []
+    assert _total(chaos_ctx.retry_stats()) == len(plan.injected)
+
+
+def test_minimod_step_bit_identical_under_chaos():
+    from repro.apps.minimod import pad_shards, unpad_shards
+    from repro.kernels.stencil.fused import fused_wave_step
+    ZG = DiompGroup(("z",), name="z")
+    Z, Y, X, nz = 32, 8, 8, 4
+    mesh = make_mesh((nz, 1), ("z", "y"), axis_types="auto")
+    ext = (Z // nz,) * nz
+    u = (RNG.randn(Z, Y, X) * 0.1).astype(np.float32)
+    up = (RNG.randn(Z, Y, X) * 0.1).astype(np.float32)
+    u_in, up_in = pad_shards(u, ext), pad_shards(up, ext)
+
+    def run(ctx):
+        f = jax.jit(shard_map(
+            lambda a, b: fused_wave_step(a, b, 0.1, ZG, None),
+            mesh=mesh, in_specs=(P("z", "y"), P("z", "y")),
+            out_specs=P("z", "y")))
+        with use_default(ctx):
+            return unpad_shards(np.asarray(f(u_in, up_in)), ext)
+
+    want = run(DiompContext(mesh=mesh, fault_plan=_clean_plan()))
+    chaos_ctx, plan = _chaos_ctx(mesh, seed=17, p=0.3)
+    got = run(chaos_ctx)
+    assert np.array_equal(got, want)
+    assert len(plan.injected) > 0 and plan.unrecovered() == []
+
+
+def test_moe_dispatch_bit_identical_under_chaos():
+    from repro.kernels.moe_dispatch import (measure_expert_load,
+                                            moe_dispatch, route_topk)
+    from repro.kernels.plan import default_planner
+    ndev, E, t_loc, d, f, k = 4, 8, 8, 16, 32, 2
+    mesh = make_mesh((ndev,), ("x",), axis_types="auto")
+    toks = RNG.randn(ndev * t_loc, d).astype(np.float32)
+    router = (RNG.randn(d, E) + 2.0 * RNG.randn(1, E)).astype(np.float32)
+    wg = (RNG.randn(E, d, f) / np.sqrt(d)).astype(np.float32)
+    wu = (RNG.randn(E, d, f) / np.sqrt(d)).astype(np.float32)
+    wd = (RNG.randn(E, f, d) / np.sqrt(f)).astype(np.float32)
+    _, top_e = jax.jit(route_topk, static_argnums=2)(toks, router, k)
+    loads = measure_expert_load(
+        np.asarray(top_e).reshape(ndev, t_loc, k), E, sources=ndev)
+    plan = default_planner().plan_alltoall(t_loc, d, k, E, ndev,
+                                          jnp.float32, loads=loads)
+
+    def run(ctx):
+        def fn(tk, rt, g, u, dn):
+            w, e = route_topk(tk, rt, k)
+            return moe_dispatch(tk, e, w, g, u, dn, RING,
+                                impl="host", plan=plan)
+        fjit = jax.jit(shard_map(
+            fn, mesh=mesh,
+            in_specs=(P("x", None), P(None, None), P("x", None, None),
+                      P("x", None, None), P("x", None, None)),
+            out_specs=P("x", None)))
+        with use_default(ctx):
+            return np.asarray(fjit(toks, router, wg, wu, wd))
+
+    want = run(DiompContext(mesh=mesh, fault_plan=_clean_plan()))
+    chaos_ctx, fplan = _chaos_ctx(mesh, seed=19, p=0.25)
+    got = run(chaos_ctx)
+    assert np.array_equal(got, want)
+    assert len(fplan.injected) > 0 and fplan.unrecovered() == []
+
+
+# ---------------------------------------------------------------------------
+# RMA checksum validation: corruption detected and repaired, never absorbed
+# ---------------------------------------------------------------------------
+
+def _kv(page_tokens=16):
+    mem = GlobalMemory(4, 1 << 22, allocator="buddy")
+    g = DiompGroup(("x",), name="x")
+    return PagedKVAllocator(mem, g, page_tokens=page_tokens,
+                            kv_bytes_per_token=64)
+
+
+class _Rec:
+    def __init__(self):
+        self.calls, self.nbytes = {}, {}
+        self.retries, self.retry_nbytes = {}, {}
+
+    def record(self, op, payload=None):
+        self.calls[op] = self.calls.get(op, 0) + 1
+        if payload is not None:
+            self.nbytes[op] = self.nbytes.get(op, 0) + payload.nbytes
+
+    def record_retry(self, op, payload=None):
+        self.retries[op] = self.retries.get(op, 0) + 1
+        if payload is not None:
+            self.retry_nbytes[op] = self.retry_nbytes.get(op, 0) \
+                + payload.nbytes
+
+
+def test_migrate_checksum_detects_and_repairs_corruption():
+    alloc = _kv()
+    r = alloc.admit(30, 60, home_rank=0)
+    npages = len(r.page_table)
+    comm, tr = _Rec(), RMATracker()
+    tr.register("w")
+    plan = FaultPlan(0, specs=(FaultSpec("migrate", 0, "corrupt"),))
+    moved = alloc.migrate(r, 3, comm=comm, tracker=tr, window="w",
+                          faults=plan, policy=FAST, validate=True)
+    assert moved == npages * alloc.page_bytes
+    assert r.home_rank == 3
+    # logical logs exactly as the fault-free path...
+    assert comm.calls == {"get": npages, "put": npages}
+    assert comm.nbytes["put"] == moved
+    assert tr.put_bytes == moved
+    # ...and the repair visible only in the retry logs
+    assert alloc.stats["retried_page_puts"] >= 1
+    assert comm.retries.get("put", 0) >= 1
+    assert tr.retry_bytes == comm.retry_nbytes["put"]
+    assert plan.injected[0].kind == "corrupt" and plan.injected[0].recovered
+
+
+def test_migrate_validation_exhausts_budget_raises():
+    alloc = _kv()
+    r = alloc.admit(20, 40, home_rank=0)
+    comm, tr = _Rec(), RMATracker()
+    tr.register("w")
+    # corrupt EVERY attempt on page 0: the budget must be spent and the
+    # error surfaced — garbage never lands silently
+    specs = tuple(FaultSpec("migrate", i, "corrupt") for i in range(16))
+    plan = FaultPlan(0, specs=specs)
+    pol = RetryPolicy(max_retries=2, sleep=False)
+    with pytest.raises(RMAError):
+        alloc.migrate(r, 2, comm=comm, tracker=tr, window="w",
+                      faults=plan, policy=pol, validate=True)
+
+
+def test_validate_rejects_unfenced_and_mismatched():
+    tr = RMATracker()
+    tr.register("w")
+    buf = np.arange(16, dtype=np.uint8)
+    good = content_digest(buf)
+    tr.on_put("w", buf.nbytes, checksum=good)
+    with pytest.raises(RMAError):
+        tr.validate("w", good)                    # unfenced epoch
+    tr.on_fence("w")
+    tr.validate("w", good)                        # clean pass
+    tr.on_put("w", buf.nbytes, checksum=corrupt_digest(good, 1))
+    tr.on_fence("w")
+    with pytest.raises(RMAError, match="checksum mismatch"):
+        tr.validate("w", good)
