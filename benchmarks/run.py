@@ -15,6 +15,9 @@
   kvcache      (paper Fig. 2: asymmetric heap / page-table churn)
   faults       (chaos overhead: retry model, seeded recovery smoke,
                 rank-death degraded-throughput model)
+  overload     (SLO-policed serving vs admit-everything baseline on a
+                seeded bursty trace: goodput, p99 TTFT, shed rate,
+                deadline violations, decision-log determinism)
 
 CSVs land in experiments/bench/.  ``--json`` (implied by ``--quick``)
 additionally writes the consolidated ``BENCH_summary.json`` — the perf
@@ -60,7 +63,7 @@ def main(argv=None):
     ap.add_argument("--only", default=None,
                     help="comma-separated subset (p2p,collectives,"
                          "grad_reduce,matmul,minimod,moe,streams,kvcache,"
-                         "faults)")
+                         "faults,overload)")
     ap.add_argument("--json", nargs="?", const=SUMMARY_DEFAULT, default=None,
                     metavar="PATH",
                     help="write the consolidated BENCH_summary.json "
@@ -69,8 +72,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from . import (bench_collectives, bench_faults, bench_kvcache,
-                   bench_matmul, bench_minimod, bench_moe, bench_p2p,
-                   bench_streams)
+                   bench_matmul, bench_minimod, bench_moe, bench_overload,
+                   bench_p2p, bench_streams)
 
     table = {
         "p2p": bench_p2p.run,
@@ -82,6 +85,7 @@ def main(argv=None):
         "streams": bench_streams.run,
         "kvcache": bench_kvcache.run,
         "faults": bench_faults.run,
+        "overload": bench_overload.run,
     }
     only = args.only.split(",") if args.only else list(table)
     t0 = time.time()

@@ -4,6 +4,14 @@ docs/SERVING.md).
 
   PYTHONPATH=src python examples/serve_lm.py --arch qwen1-5-110b \\
       --prefill-chunk 16 --temperature 0.7 --top-k 8
+
+Overload controls (docs/SERVING.md "Overload & SLOs") — any of these
+arms deadline-aware admission, bounded-queue backpressure, load
+shedding, and staged degraded modes:
+
+  PYTHONPATH=src python examples/serve_lm.py --requests 8 \\
+      --ttft-deadline-s 5.0 --total-deadline-s 30.0 \\
+      --rate-per-s 50 --max-queue 32 --queue-high 8 --queue-low 2
 """
 
 import os

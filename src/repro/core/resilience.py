@@ -18,6 +18,15 @@ dependency-free (no jax, no repro imports) so it sits *below*
   handles in ``core/context.py``.  Retried *wire* traffic is accounted
   by the caller via ``on_retry`` so the logical call/byte logs (and the
   OMPCCL-byte-log == RMATracker audit) stay exact.
+* ``CircuitBreaker`` — the escalation layer above the retry loop: when a
+  *destination* keeps spending whole retry budgets (not just single
+  attempts), retrying forever is the wrong policy.  The breaker counts
+  budget-level failures per key (the serving engine keys it per
+  ``(verb, rank)``), OPENs the key after ``failure_threshold`` of them so
+  callers route around it, and probes it again (HALF_OPEN) after a
+  cooldown — one clean success CLOSEs it.  The clock is injectable so
+  tests and the deterministic serving benchmarks drive the cooldown
+  explicitly.
 
 Digest helpers (``content_digest``/``corrupt_digest``) back the optional
 RMA-window checksum validation: corruption injection must be *detected*
@@ -37,6 +46,7 @@ __all__ = [
     "FaultTimeout",
     "RetryError",
     "RetryPolicy",
+    "CircuitBreaker",
     "call_with_retries",
     "derive_rng",
     "content_digest",
@@ -127,6 +137,121 @@ class RetryPolicy:
                    self.max_backoff_s)
         u = derive_rng(self.seed, verb, attempt).random()
         return base * (1.0 - self.jitter / 2.0 + self.jitter * u)
+
+
+class CircuitBreaker:
+    """Closed / open / half-open breaker over arbitrary hashable keys.
+
+    One failure here means "a whole retry budget was spent" (a
+    :class:`RetryError` / ``RMAError`` surfaced), so the breaker sits
+    strictly *above* :class:`RetryPolicy` in the escalation ladder:
+    transient faults are retried, repeat budget exhaustion quarantines
+    the destination.  States per key:
+
+    * ``closed`` — healthy; ``allow`` always grants.  ``failure_threshold``
+      consecutive failures trip it to ``open``.
+    * ``open`` — quarantined; ``allow`` denies until ``cooldown_s`` has
+      elapsed on the injected ``clock``, then flips to ``half_open``.
+    * ``half_open`` — probing; ``allow`` grants at most
+      ``half_open_probes`` attempts.  A recorded success closes the key,
+      a failure re-opens it (and restarts the cooldown).
+
+    ``record_success(key, retries=...)`` accepts the retry-ledger delta of
+    the successful call so per-key wear is visible in :meth:`snapshot`
+    even while the key stays closed.  All transitions land in
+    ``self.transitions`` — the deterministic audit log the overload tests
+    and ``bench_overload`` decision logs replay.
+    """
+
+    def __init__(self, *, failure_threshold: int = 3,
+                 cooldown_s: float = 0.25, half_open_probes: int = 1,
+                 clock: Callable[[], float] = time.monotonic):
+        self.failure_threshold = int(failure_threshold)
+        self.cooldown_s = float(cooldown_s)
+        self.half_open_probes = int(half_open_probes)
+        self.clock = clock
+        self._cells: dict = {}
+        self.transitions: list = []   # (key, old_state, new_state)
+        self.stats = {"opened": 0, "reopened": 0, "closed": 0, "probes": 0,
+                      "denied": 0}
+
+    def _cell(self, key) -> dict:
+        return self._cells.setdefault(
+            key, {"state": "closed", "failures": 0, "opened_at": 0.0,
+                  "probes": 0, "retries": 0, "successes": 0})
+
+    def _trans(self, key, cell: dict, new: str) -> None:
+        self.transitions.append((key, cell["state"], new))
+        cell["state"] = new
+
+    # -- the gate -----------------------------------------------------------
+    def allow(self, key) -> bool:
+        """May a call to ``key`` be attempted now?  Open keys flip to
+        half-open once the cooldown elapses; half-open keys grant at most
+        ``half_open_probes`` probe slots (``allow`` consumes one — call it
+        only when about to attempt)."""
+        cell = self._cell(key)
+        if cell["state"] == "open":
+            if self.clock() - cell["opened_at"] < self.cooldown_s:
+                self.stats["denied"] += 1
+                return False
+            self._trans(key, cell, "half_open")
+            cell["probes"] = 0
+        if cell["state"] == "half_open":
+            if cell["probes"] >= self.half_open_probes:
+                self.stats["denied"] += 1
+                return False
+            cell["probes"] += 1
+            self.stats["probes"] += 1
+        return True
+
+    # -- outcome feed (the retry ledger reports here) -----------------------
+    def record_failure(self, key) -> str:
+        """A call to ``key`` spent its whole retry budget.  Returns the
+        key's state after accounting."""
+        cell = self._cell(key)
+        if cell["state"] == "half_open":
+            self._trans(key, cell, "open")
+            cell["opened_at"] = self.clock()
+            self.stats["reopened"] += 1
+            return cell["state"]
+        cell["failures"] += 1
+        if cell["state"] == "closed" \
+                and cell["failures"] >= self.failure_threshold:
+            self._trans(key, cell, "open")
+            cell["opened_at"] = self.clock()
+            self.stats["opened"] += 1
+        return cell["state"]
+
+    def record_success(self, key, *, retries: int = 0) -> str:
+        """A call to ``key`` completed (``retries`` = re-issued attempts it
+        needed, from the caller's retry ledger)."""
+        cell = self._cell(key)
+        cell["retries"] += int(retries)
+        cell["successes"] += 1
+        if cell["state"] == "half_open":
+            self._trans(key, cell, "closed")
+            cell["failures"] = 0
+            self.stats["closed"] += 1
+        elif cell["state"] == "closed":
+            cell["failures"] = 0
+        return cell["state"]
+
+    # -- introspection ------------------------------------------------------
+    def state(self, key) -> str:
+        """Current recorded state (non-mutating: an elapsed cooldown shows
+        as ``open`` until :meth:`allow` probes it)."""
+        return self._cells.get(key, {"state": "closed"})["state"]
+
+    def open_keys(self) -> list:
+        return [k for k, c in self._cells.items() if c["state"] != "closed"]
+
+    def snapshot(self) -> dict:
+        return {k: dict(c) for k, c in self._cells.items()}
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (f"CircuitBreaker(keys={len(self._cells)}, "
+                f"open={len(self.open_keys())}, stats={self.stats})")
 
 
 def call_with_retries(thunk: Callable[[], object], verb: str,

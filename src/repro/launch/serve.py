@@ -1,8 +1,15 @@
 """Serving driver: continuous batching with chunked prefill on the DiOMP
-runtime (engine lifecycle + knob reference: docs/SERVING.md).
+runtime (engine lifecycle + knob reference: docs/SERVING.md; overload
+controls: docs/SERVING.md "Overload & SLOs").
 
   PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b --reduced \\
       --requests 6 --max-new 8 --prefill-chunk 16
+
+Passing any of --ttft-deadline-s / --total-deadline-s / --rate-per-s
+arms the SLO layer: deadline-aware admission, bounded queue with
+backpressure, load shedding, and staged degraded modes.  With deadlines
+active, late requests are shed instead of served late, so the driver
+reports done + shed == submitted rather than done == submitted.
 """
 
 import os
@@ -40,7 +47,33 @@ def main(argv=None):
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--high-watermark", type=float, default=0.92,
                     help="KV pressure above which the engine preempts")
+    ap.add_argument("--ttft-deadline-s", type=float, default=None,
+                    help="shed requests whose first token would miss this")
+    ap.add_argument("--total-deadline-s", type=float, default=None,
+                    help="cancel requests that cannot finish by this")
+    ap.add_argument("--rate-per-s", type=float, default=None,
+                    help="token-bucket admission rate limit")
+    ap.add_argument("--burst", type=float, default=8.0,
+                    help="token-bucket depth for --rate-per-s")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="hard queue bound: submissions beyond it reject")
+    ap.add_argument("--queue-high", type=int, default=16,
+                    help="backpressure/degrade watermark")
+    ap.add_argument("--queue-low", type=int, default=4,
+                    help="hysteresis watermark clearing backpressure")
     args = ap.parse_args(argv)
+
+    slo = None
+    if (args.ttft_deadline_s is not None or args.total_deadline_s is not None
+            or args.rate_per_s is not None):
+        from repro.serve.slo import SLOPolicy, TierPolicy
+        slo = SLOPolicy(
+            default_tier=TierPolicy(ttft_deadline_s=args.ttft_deadline_s,
+                                    total_deadline_s=args.total_deadline_s,
+                                    rate_per_s=args.rate_per_s,
+                                    burst=args.burst),
+            max_queue=args.max_queue, queue_high=args.queue_high,
+            queue_low=args.queue_low)
 
     cfg = configs.get_reduced(args.arch)
     mesh = make_smoke_mesh(len(jax.devices()))
@@ -51,7 +84,7 @@ def main(argv=None):
                       prefill_chunk=args.prefill_chunk,
                       page_tokens=args.page_tokens,
                       temperature=args.temperature, top_k=args.top_k,
-                      high_watermark=args.high_watermark)
+                      high_watermark=args.high_watermark, slo=slo)
     rng = np.random.RandomState(0)
     reqs = [eng.submit(rng.randint(0, cfg.vocab_size,
                                    size=rng.randint(2, args.max_prompt)),
@@ -61,6 +94,7 @@ def main(argv=None):
     eng.run()
     dt = time.time() - t0
     done = sum(r.done for r in reqs)
+    shed = sum(r.shed_reason is not None for r in reqs)
     toks = sum(len(r.out) for r in reqs)
     print(f"served {done}/{len(reqs)} requests, {toks} tokens in "
           f"{eng.steps} engine steps / {eng.device_calls} device calls "
@@ -70,7 +104,11 @@ def main(argv=None):
               f"(prefill_steps={r.prefill_steps})")
     print("kv stats:", eng.kv_stats)
     print("latency:", json.dumps(eng.latency_stats(), default=float))
-    assert done == len(reqs)
+    if slo is not None:
+        print(f"slo: {shed} shed, {len(eng.slo_log)} decision-log entries")
+        assert done + shed == len(reqs)
+    else:
+        assert done == len(reqs)
     print("serve driver done")
 
 

@@ -25,6 +25,21 @@ tokens / phantom position advances on released slots.
 The engine is single-controller host code: the paper's "single-process
 multi-GPU" deployment — the host orchestrates, OMPCCL moves data, and host
 threads (StreamPool) stay free for tokenize/detokenize work.
+
+Overload behavior (docs/SERVING.md "Overload & SLOs"): with an
+``SLOPolicy`` attached, ``submit()`` returns an explicit admit / reject /
+backpressure decision (``req.decision``) instead of queueing
+unconditionally; each ``step()`` sheds queued requests whose deadlines
+expired (or can no longer be met) and cancels mid-flight expired requests
+with their KV pages freed and accounted; sustained queue pressure walks a
+staged degraded-mode ladder (cap ``max_new`` → cap prefill chunk →
+suspend spill migration) with hysteretic recovery.  All timestamps come
+from an **injectable clock** (wall clock by default), so the whole
+decision sequence replays deterministically under a ``ManualClock``.
+Spill-target selection runs through a per-``(verb, rank)``
+``CircuitBreaker``: a spill rank that keeps exhausting migrate retry
+budgets is quarantined (open), routed around, probed after cooldown
+(half-open), and readmitted on a clean success.
 """
 
 from __future__ import annotations
@@ -40,10 +55,12 @@ import numpy as np
 from repro.core.context import DiompContext, use_default
 from repro.core.groups import DiompGroup
 from repro.core.pgas import GlobalMemory
+from repro.core.resilience import CircuitBreaker
 from repro.core.rma import RMAError
 from repro.models import api as model_api
 from repro.models.config import ModelConfig, ParallelCtx
 from .kvcache import PagedKVAllocator, Request
+from .slo import AdmissionController, AdmissionDecision, SLOPolicy, percentiles
 from .step import build_chunk_prefill_step, build_decode_step
 
 __all__ = ["ServeEngine", "GenRequest"]
@@ -70,8 +87,28 @@ class GenRequest:                      # scheduled objects, not values
     prefill_steps: int = 0      # chunk-prefill device calls for this request
     decode_steps: int = 0       # decode steps this request participated in
     preemptions: int = 0
+    # SLO surface (docs/SERVING.md "Overload & SLOs"): deadlines are
+    # ABSOLUTE clock times (submit_t + the relative deadline); `decision`
+    # is the explicit admission verdict, `shed_reason` is set when the
+    # engine rejected/shed/cancelled this request instead of finishing it
+    ttft_deadline: Optional[float] = None
+    total_deadline: Optional[float] = None
+    decision: Optional[AdmissionDecision] = None
+    shed_reason: Optional[str] = None
     _snapshot: Optional[dict] = None  # host copy of device rows while swapped
     _rng: Optional[np.random.Generator] = None
+
+    def deadline_met(self) -> bool:
+        """Did this request meet every deadline it carried?  (Vacuously
+        true with no deadlines; requires the respective timestamp.)"""
+        if self.ttft_deadline is not None and (
+                self.first_token_t is None
+                or self.first_token_t > self.ttft_deadline):
+            return False
+        if self.total_deadline is not None and (
+                self.finish_t is None or self.finish_t > self.total_deadline):
+            return False
+        return True
 
     def stats(self) -> dict:
         ttft = (self.first_token_t - self.submit_t
@@ -83,6 +120,8 @@ class GenRequest:                      # scheduled objects, not values
             "decode_steps": self.decode_steps,
             "preemptions": self.preemptions,
             "ttft_s": ttft, "total_s": total,
+            "shed_reason": self.shed_reason,
+            "deadline_met": self.deadline_met(),
         }
 
 
@@ -95,7 +134,10 @@ class ServeEngine:
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  high_watermark: float = 0.92, low_watermark: float = 0.80,
                  memory: Optional[GlobalMemory] = None,
-                 context: Optional[DiompContext] = None):
+                 context: Optional[DiompContext] = None,
+                 slo: Optional[SLOPolicy] = None,
+                 clock=None,
+                 breaker: Optional[CircuitBreaker] = None):
         if cfg.family not in model_api.TRANSFORMER_FAMILIES \
                 or not model_api.has_decode(cfg):
             raise ValueError(
@@ -160,10 +202,40 @@ class ServeEngine:
         self.dead_ranks: set = set()
         self.rank_death_log: List[tuple] = []
         self.requeued = 0
+        # SLO layer (docs/SERVING.md "Overload & SLOs"): injectable clock
+        # (every timestamp in the engine reads it), optional admission
+        # controller, spill-rank circuit breaker.  With slo=None behavior
+        # is identical to the pre-SLO engine except that timestamps come
+        # from `clock` and explicit per-submit deadlines are *recorded*
+        # (never enforced) — that is the bench's admit-everything baseline.
+        self.clock = clock if clock is not None else time.perf_counter
+        self._now = self.clock()
+        self.slo_log: List[tuple] = []   # (event, ...) decision record
+        self.shed: Dict[str, int] = {}   # per-reason shed counters
+        self.tokens_wasted = 0           # tokens generated for cancelled reqs
+        self.tokens_late = 0             # tokens committed past total deadline
+        self.slo_ctl = (AdmissionController(slo, self.clock,
+                                            log=self.slo_log)
+                        if slo is not None else None)
+        # one exhausted migrate budget marks a spill rank sick: quarantine
+        # immediately, probe again after the cooldown
+        self.breaker = breaker if breaker is not None else CircuitBreaker(
+            failure_threshold=1, cooldown_s=0.5, clock=self.clock)
 
     # -- API --------------------------------------------------------------
-    def submit(self, prompt, max_new: int = 32, *,
-               priority: int = 0) -> GenRequest:
+    def submit(self, prompt, max_new: int = 32, *, priority: int = 0,
+               ttft_deadline_s: Optional[float] = None,
+               total_deadline_s: Optional[float] = None) -> GenRequest:
+        """Submit a request.  Returns the :class:`GenRequest` either way;
+        with an SLO policy attached its ``decision`` field carries the
+        explicit admit / backpressure / reject verdict, and a rejected
+        request is NOT queued (``done`` stays False, ``shed_reason`` set).
+
+        ``ttft_deadline_s`` / ``total_deadline_s`` are RELATIVE deadlines
+        (seconds from now); omitted ones fall back to the request's SLO
+        tier.  Without an SLO policy, explicit deadlines are recorded for
+        measurement but never enforced — the admit-everything baseline.
+        """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if len(prompt) < 1:
             raise ValueError("empty prompt")
@@ -181,12 +253,36 @@ class ServeEngine:
                 f"{-(-len(prompt) // self.chunk) * self.chunk} cache rows "
                 f"for chunked prefill (chunk {self.chunk}, cache {self.S}); "
                 f"lower prefill_chunk or raise max_len")
+        now = self.clock()
+        if self.slo_ctl is not None:
+            tier = self.slo_ctl.policy.tier(priority)
+            if ttft_deadline_s is None:
+                ttft_deadline_s = tier.ttft_deadline_s
+            if total_deadline_s is None:
+                total_deadline_s = tier.total_deadline_s
         r = GenRequest(prompt=prompt, max_new=max_new, priority=priority,
-                       arrival=self._arrival, submit_t=time.perf_counter())
+                       arrival=self._arrival, submit_t=now)
+        if ttft_deadline_s is not None:
+            r.ttft_deadline = now + float(ttft_deadline_s)
+        if total_deadline_s is not None:
+            r.total_deadline = now + float(total_deadline_s)
         r._rng = np.random.default_rng(self.seed * 1_000_003 + self._arrival)
         self._arrival += 1
-        self.queue.append(r)
         self._all.append(r)
+        if self.slo_ctl is not None:
+            dec = self.slo_ctl.decide(
+                priority=priority, prompt_len=len(prompt), max_new=max_new,
+                chunk=self.chunk, queue_depth=len(self.queue),
+                ttft_deadline_s=ttft_deadline_s,
+                total_deadline_s=total_deadline_s)
+            r.decision = dec
+            self.slo_log.append(("submit", r.arrival, dec.action, dec.reason,
+                                 priority, int(len(prompt)), int(max_new)))
+            if not dec.admitted:
+                r.shed_reason = dec.reason
+                self.shed[dec.reason] = self.shed.get(dec.reason, 0) + 1
+                return r
+        self.queue.append(r)
         return r
 
     def run(self, max_steps: int = 10_000):
@@ -197,18 +293,85 @@ class ServeEngine:
         return self
 
     def step(self) -> None:
-        """One engine iteration: preempt-on-pressure, admit/resume, chunked
+        """One engine iteration: shed/cancel expired work, update the
+        degraded-mode ladder, preempt-on-pressure, admit/resume, chunked
         prefill for filling slots, one decode step for decode-ready slots."""
         self.steps += 1
+        self._now = self.clock()
         if self.faults is not None:
             for death in self.faults.deaths_at(self.steps):
                 self.on_rank_death(death.rank, graceful=death.graceful)
+        if self.slo_ctl is not None:
+            self._shed_expired()
+            self.slo_ctl.update_pressure(len(self.queue), self.steps)
         self._maybe_preempt()
         self._admit()
         if not self.active:
             return
         self._prefill_chunks()
         self._decode()
+
+    # -- deadline shedding / cancellation (SLO layer) -----------------------
+    def _shed(self, req: GenRequest, reason: str) -> None:
+        req.shed_reason = reason
+        self.shed[reason] = self.shed.get(reason, 0) + 1
+        self.slo_log.append(("shed", self.steps, req.arrival, reason))
+
+    def _cancel(self, req: GenRequest, reason: str) -> None:
+        """Cancel an admitted (active or preempted) request: free its slot,
+        release its KV pages back to the allocator (accounted in the
+        ledger), unregister its RMA window, count its generated tokens as
+        wasted work."""
+        slot = req.slot
+        if slot >= 0 and self.active.get(slot) is req:
+            del self.active[slot]
+            self.free_slots.append(slot)
+            self.pending[slot, 0] = 0
+            self.host_pos[slot] = 0
+            self.cache["pos"] = jnp.asarray(self.host_pos.copy())
+        elif req in self.preempted:
+            self.preempted.remove(req)
+        if req.kv is not None:
+            try:
+                self.dctx.rma.unregister(self._win(req))
+            except RMAError:
+                pass
+            self.alloc.release(req.kv)
+            req.kv = None
+        req.slot = -1
+        req._snapshot = None
+        self.tokens_wasted += len(req.out)
+        self._shed(req, reason)
+
+    def _shed_expired(self) -> None:
+        """Deadline enforcement, once per step BEFORE admission: expired
+        queued requests are shed (no resources were ever bound); queued
+        requests that can no longer make their deadline even if admitted
+        this instant are shed as hopeless; admitted requests past their
+        deadline are cancelled with pages freed."""
+        now = self._now
+        p = self.slo_ctl.policy
+        for req in list(self.queue):
+            reason = None
+            if req.ttft_deadline is not None and now > req.ttft_deadline:
+                reason = "queue_expired"
+            elif req.total_deadline is not None and now + p.min_service_s(
+                    len(req.prompt), req.max_new,
+                    self.chunk) > req.total_deadline:
+                reason = "hopeless"
+            elif req.ttft_deadline is not None and now + p.min_ttft_s(
+                    len(req.prompt), self.chunk) > req.ttft_deadline:
+                reason = "hopeless"
+            if reason is not None:
+                self.queue.remove(req)
+                self._shed(req, reason)
+        for req in list(self.active.values()) + list(self.preempted):
+            if req.total_deadline is not None and now > req.total_deadline:
+                self._cancel(req, "expired")
+            elif req.first_token_t is None \
+                    and req.ttft_deadline is not None \
+                    and now > req.ttft_deadline:
+                self._cancel(req, "ttft_expired")
 
     # -- scheduling ---------------------------------------------------------
     @staticmethod
@@ -230,11 +393,41 @@ class ServeEngine:
 
     def _spill(self, req: GenRequest) -> int:
         # round-robin over the live non-home ranks so swapped-out requests
-        # spread across the remote heaps
+        # spread across the remote heaps; ranks whose migrate breaker is
+        # open are routed around (returning home_rank makes the preemption
+        # recompute-style: migrate is a no-op, pages drop, snapshot holds)
         live = [r for r in self._live_ranks() if r != req.kv.home_rank]
         if not live:
             return req.kv.home_rank
-        return live[req.kv.rid % len(live)]
+        if self.slo_ctl is not None and self.slo_ctl.level >= 3:
+            return req.kv.home_rank     # L3 degraded: spill suspended
+        start = req.kv.rid % len(live)
+        for r in live[start:] + live[:start]:
+            if self.breaker.allow(("migrate", r)):
+                return r
+        return req.kv.home_rank         # every spill target quarantined
+
+    def _migrate(self, req: GenRequest, dst: int) -> int:
+        """``alloc.migrate`` with circuit-breaker accounting: an exhausted
+        retry budget (RMAError; the allocator already rolled the
+        destination pages back) records a breaker failure for
+        ``("migrate", dst)`` and reports 0 bytes moved; a successful move
+        records a success with the retry-ledger delta it cost."""
+        if req.kv is None or dst == req.kv.home_rank:
+            return 0
+        key = ("migrate", dst)
+        before = self.alloc.stats["retried_page_puts"]
+        try:
+            moved = self.alloc.migrate(req.kv, dst, **self._migrate_kw(req))
+        except RMAError:
+            state = self.breaker.record_failure(key)
+            self.slo_log.append(
+                ("breaker", self.steps, dst, "failure", state))
+            return 0
+        if moved:
+            self.breaker.record_success(
+                key, retries=self.alloc.stats["retried_page_puts"] - before)
+        return moved
 
     def _win(self, req: GenRequest) -> str:
         return f"kv/req{req.kv.rid}"
@@ -257,8 +450,8 @@ class ServeEngine:
             slot = self.free_slots[-1]
             home = self._home(slot)
             if req.kv.page_table:
-                if req.kv.home_rank != home and self.alloc.migrate(
-                        req.kv, home, **self._migrate_kw(req)) == 0:
+                if req.kv.home_rank != home \
+                        and self._migrate(req, home) == 0:
                     continue        # spill heap -> home heap OOM: wait
             else:
                 req.kv.home_rank = home
@@ -271,6 +464,12 @@ class ServeEngine:
             if not self.free_slots:
                 break
             slot = self.free_slots[-1]
+            if self.slo_ctl is not None and self.slo_ctl.level >= 1 \
+                    and self.slo_ctl.policy.degraded_max_new is not None:
+                # L1 degraded: fresh admissions get a capped token budget
+                # (shed load by finishing sooner, not by rejecting more)
+                req.max_new = min(req.max_new,
+                                  self.slo_ctl.policy.degraded_max_new)
             kv = self.alloc.admit(len(req.prompt),
                                   len(req.prompt) + req.max_new,
                                   home_rank=self._home(slot))
@@ -280,7 +479,7 @@ class ServeEngine:
             self.queue.remove(req)
             req.kv = kv
             req.slot = slot
-            req.admit_t = time.perf_counter()
+            req.admit_t = self.clock()
             req.admit_step = self.steps
             self.dctx.rma.register(self._win(req))
             self.pending[slot, 0] = 0
@@ -313,8 +512,7 @@ class ServeEngine:
         req._snapshot = {
             k: jax.device_get(v[:, slot:slot + 1])
             for k, v in self.cache.items() if k != "pos"}
-        moved = self.alloc.migrate(req.kv, self._spill(req),
-                                   **self._migrate_kw(req))
+        moved = self._migrate(req, self._spill(req))
         if moved == 0 and req.kv.page_table:
             # spill heap full (or single-rank deployment): the swap moved
             # nothing, so drop the page plan instead — the snapshot above
@@ -362,8 +560,7 @@ class ServeEngine:
         if graceful:
             for req in holders:
                 dst = live_after[req.kv.rid % len(live_after)]
-                moved = self.alloc.migrate(req.kv, dst,
-                                           **self._migrate_kw(req))
+                moved = self._migrate(req, dst)
                 if moved:
                     drained += moved
                 else:
@@ -425,12 +622,19 @@ class ServeEngine:
     def _prefill_chunks(self) -> None:
         if self.chunk_step is None:
             return                      # legacy: prompts feed through decode
+        cap = self.chunk
+        if self.slo_ctl is not None and self.slo_ctl.level >= 2 \
+                and self.slo_ctl.policy.degraded_chunk is not None:
+            # L2 degraded: feed fewer prompt tokens per device call so
+            # decode-ready slots keep their share of the engine loop (the
+            # device call shape stays (1, chunk); only `take` shrinks)
+            cap = max(1, min(cap, self.slo_ctl.policy.degraded_chunk))
         for slot in sorted(self.active):
             req = self.active[slot]
             plen = len(req.prompt)
             if req.fed >= plen:
                 continue
-            take = min(self.chunk, plen - req.fed)
+            take = min(cap, plen - req.fed)
             toks = np.zeros((1, self.chunk), np.int32)
             toks[0, :take] = req.prompt[req.fed:req.fed + take]
             with use_default(self.dctx):
@@ -522,14 +726,19 @@ class ServeEngine:
 
     def _commit(self, slot: int, req: GenRequest, row: np.ndarray) -> None:
         req.out.append(self._sample(req, row))
+        now = self.clock()
         if req.first_token_t is None:
-            req.first_token_t = time.perf_counter()
+            req.first_token_t = now
+        if req.total_deadline is not None and now > req.total_deadline:
+            # a token served past the deadline is wasted work the SLO
+            # engine sheds pre-emptively; the baseline accumulates these
+            self.tokens_late += 1
         if len(req.out) >= req.max_new:
             self._finish(slot, req)
 
     def _finish(self, slot: int, req: GenRequest) -> None:
         req.done = True
-        req.finish_t = time.perf_counter()
+        req.finish_t = self.clock()
         req.finish_step = self.steps
         self.dctx.rma.unregister(self._win(req))
         self.alloc.release(req.kv)
@@ -563,13 +772,18 @@ class ServeEngine:
         total = [r.finish_t - r.submit_t for r in done
                  if r.finish_t is not None]
         toks = sum(len(r.out) for r in done)
+        # goodput = deadline-met completions (the SLO layer's objective);
+        # a finished request that missed a deadline it carried is a
+        # violation (structurally zero under an SLO policy — violators are
+        # cancelled before they can finish)
+        good = [r for r in done if r.deadline_met()]
 
         def _agg(xs):
             if not xs:
                 return None
-            xs = sorted(xs)
             return {"mean": sum(xs) / len(xs),
-                    "p50": xs[len(xs) // 2], "max": xs[-1]}
+                    **percentiles(xs, (50, 95, 99)),
+                    "max": max(xs)}
 
         return {
             "requests_done": len(done),
@@ -584,4 +798,15 @@ class ServeEngine:
             "request_s": _agg(total),
             "tokens_per_device_call": (toks / self.device_calls
                                        if self.device_calls else 0.0),
+            # SLO surface (docs/SERVING.md "Overload & SLOs")
+            "goodput": len(good),
+            "goodput_tokens": sum(len(r.out) for r in good),
+            "deadline_violations": len(done) - len(good),
+            "shed": dict(self.shed),
+            "shed_total": sum(self.shed.values()),
+            "tokens_wasted": self.tokens_wasted,
+            "tokens_late": self.tokens_late,
+            "degrade_level": (self.slo_ctl.level
+                              if self.slo_ctl is not None else 0),
+            "breaker_open": len(self.breaker.open_keys()),
         }

@@ -247,47 +247,58 @@ class PagedKVAllocator:
             new_table.append(page)
         digest = content_digest(pagebuf) if validate else None
         budget = policy.budget("migrate") if policy is not None else 3
-        for _ in new_table:
-            attempt = 0
-            pending = []          # faults hit on this page, not yet repaired
-            while True:
-                fault = faults.next_fault("migrate") \
-                    if faults is not None else None
-                wire = digest
-                if fault is not None:
-                    if fault.kind == "delay":
-                        fault.recovered = True
-                    elif validate:
-                        # damaged in flight: a wrong digest lands
-                        wire = corrupt_digest(digest, fault.call_index)
-                        pending.append(fault)
-                if comm is not None:
-                    if attempt == 0:
-                        # one-sided read of the page: count under "get",
-                        # payload bytes under the leaf "put" (the
-                        # communicator's delegating-op convention, so wire
-                        # volume is never double-counted)
-                        comm.record("get")
-                        comm.record("put", pagebuf)
-                    else:
-                        comm.record_retry("put", pagebuf)
-                if tracker is not None:
-                    tracker.on_put(name, self.page_bytes,
-                                   checksum=wire, retry=attempt > 0)
-                if not validate or tracker is None:
+        try:
+            for _ in new_table:
+                attempt = 0
+                pending = []      # faults hit on this page, not yet repaired
+                while True:
+                    fault = faults.next_fault("migrate") \
+                        if faults is not None else None
+                    wire = digest
+                    if fault is not None:
+                        if fault.kind == "delay":
+                            fault.recovered = True
+                        elif validate:
+                            # damaged in flight: a wrong digest lands
+                            wire = corrupt_digest(digest, fault.call_index)
+                            pending.append(fault)
+                    if comm is not None:
+                        if attempt == 0:
+                            # one-sided read of the page: count under "get",
+                            # payload bytes under the leaf "put" (the
+                            # communicator's delegating-op convention, so wire
+                            # volume is never double-counted)
+                            comm.record("get")
+                            comm.record("put", pagebuf)
+                        else:
+                            comm.record_retry("put", pagebuf)
+                    if tracker is not None:
+                        tracker.on_put(name, self.page_bytes,
+                                       checksum=wire, retry=attempt > 0)
+                    if not validate or tracker is None:
+                        break
+                    tracker.on_fence(name)
+                    try:
+                        tracker.validate(name, digest)
+                    except RMAError:
+                        attempt += 1
+                        self.stats["retried_page_puts"] += 1
+                        if attempt > budget:
+                            raise
+                        continue
+                    for hit in pending:   # a clean re-put repaired these
+                        hit.recovered = True
                     break
-                tracker.on_fence(name)
-                try:
-                    tracker.validate(name, digest)
-                except RMAError:
-                    attempt += 1
-                    self.stats["retried_page_puts"] += 1
-                    if attempt > budget:
-                        raise
-                    continue
-                for hit in pending:   # a clean re-put repaired these
-                    hit.recovered = True
-                break
+        except RMAError:
+            # budget exhausted mid-migration: the source pages are intact
+            # (nothing released yet), so roll the destination table back to
+            # its free list — otherwise the allocated-minus-freed == live
+            # ledger breaks the moment a caller catches this error.  The
+            # caller (engine/circuit-breaker) decides whether dst is sick.
+            for p in new_table:
+                self._release_page(p, dst_rank)
+            self.call_log.append(("migrate_failed", req.rid, dst_rank))
+            raise
         for old in req.page_table:
             self._release_page(old, req.home_rank)
         if tracker is not None and not validate:

@@ -34,6 +34,26 @@ def test_modeled_regression_beyond_tol_fails():
     assert regs == []
 
 
+def test_higher_is_better_rates_fail_on_decrease():
+    def rows(rps):
+        return [{"mode": "slo", "seed": 17, "wall_s": 0.5,
+                 "modeled_goodput_rps": rps}]
+    # a >tol drop in a rate field is a regression
+    regs, _ = compare({"o": rows(10.0)}, {"o": rows(9.0)}, 0.05)
+    assert len(regs) == 1 and "modeled_goodput_rps" in regs[0]
+    # within tolerance, and any increase, passes
+    regs, _ = compare({"o": rows(10.0)}, {"o": rows(9.6)}, 0.05)
+    assert regs == []
+    regs, _ = compare({"o": rows(10.0)}, {"o": rows(14.0)}, 0.05)
+    assert regs == []
+
+
+def test_rate_fields_are_compared_not_identity():
+    a = {"mode": "slo", "modeled_goodput_rps": 10.0}
+    b = dict(a, modeled_goodput_rps=3.0)
+    assert row_key(a) == row_key(b)
+
+
 def test_new_rows_and_benches_note_but_pass():
     fresh = {"m": _rows(0.01) + [{"devices": 16, "mode": "fused",
                                   "modeled_step_s": 1.0}],

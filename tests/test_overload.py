@@ -1,0 +1,460 @@
+"""Overload-resilient serving: SLO admission, shedding, degraded modes,
+and spill-rank circuit breakers.
+
+Covers the docs/SERVING.md "Overload & SLOs" contracts: the percentile
+math behind ``latency_stats()``, the token-bucket/admission state machine
+and degraded-mode ladder on a deterministic clock, the seeded bursty
+trace generator, the ``CircuitBreaker`` lifecycle, the migrate-failure
+ledger rollback, and — end to end on the engine — explicit
+admit/reject/backpressure decisions, deadline shedding with KV pages
+freed, degraded-mode caps with recovery, identical-seed decision-log
+replay, and the acceptance scenario: a chaos-injected flaky spill rank is
+quarantined (open observed), migrations reroute around it, and the rank
+is readmitted through a half-open probe.
+"""
+
+import numpy as np
+import jax
+import pytest
+
+from repro import configs
+from repro.core.context import DiompContext
+from repro.core.faults import FaultPlan, FaultSpec
+from repro.core.groups import DiompGroup
+from repro.core.pgas import GlobalMemory
+from repro.core.resilience import CircuitBreaker, RetryPolicy
+from repro.core.rma import RMAError, RMATracker
+from repro.models import schema as sch
+from repro.models.config import ParallelCtx
+from repro.serve.engine import GenRequest, ServeEngine
+from repro.serve.kvcache import PagedKVAllocator
+from repro.serve.slo import (AdmissionController, ManualClock, SLOPolicy,
+                             TierPolicy, TokenBucket, percentile, percentiles)
+from repro.serve.trace import bursty_trace
+
+CFG = configs.get_reduced("stablelm-3b")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return sch.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def _engine(mesh8, params, **kw):
+    ctx = ParallelCtx.from_mesh(mesh8, remat=False, inference=True)
+    return ServeEngine(CFG, mesh8, ctx, params, **kw)
+
+
+def _prompts(lengths, seed=7):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, CFG.vocab_size, size=n).astype(np.int32)
+            for n in lengths]
+
+
+# -- percentile math (satellite: latency_stats aggregation) -----------------
+
+def test_percentile_math_pinned():
+    """Linear-interpolation percentiles, numpy's default convention."""
+    assert percentile([], 50) is None
+    assert percentile([3.0], 99) == 3.0
+    assert percentile([1, 2, 3, 4], 50) == 2.5
+    assert percentile(list(range(1, 101)), 99) == pytest.approx(99.01)
+    assert percentile(list(range(1, 101)), 50) == pytest.approx(50.5)
+    assert percentile([4, 1, 3, 2], 0) == 1.0       # order-independent
+    assert percentile([4, 1, 3, 2], 100) == 4.0
+    ps = percentiles([1, 2, 3, 4], (50, 95, 99))
+    assert ps == {"p50": 2.5,
+                  "p95": pytest.approx(3.85),
+                  "p99": pytest.approx(3.97)}
+    assert percentiles([], (50,)) is None
+
+
+def test_token_bucket_deterministic_refill():
+    clk = ManualClock()
+    tb = TokenBucket(rate_per_s=2.0, burst=2.0, clock=clk)
+    assert tb.try_take() and tb.try_take() and not tb.try_take()
+    clk.advance(0.5)                       # +1 token
+    assert tb.try_take() and not tb.try_take()
+    clk.advance(100.0)                     # refill caps at burst
+    assert tb.peek() == 2.0
+
+
+# -- admission state machine -------------------------------------------------
+
+def _controller(**kw):
+    clk = kw.pop("clock", ManualClock())
+    pol = SLOPolicy(**kw)
+    return AdmissionController(pol, clk), clk
+
+
+def test_admission_decision_order_and_reasons():
+    ctl, _ = _controller(
+        default_tier=TierPolicy(rate_per_s=1.0, burst=2.0),
+        max_queue=4, queue_high=2, queue_low=1, min_step_s=0.01)
+    kw = dict(priority=0, prompt_len=8, max_new=4, chunk=8,
+              ttft_deadline_s=None, total_deadline_s=None)
+    # infeasible beats everything: min service 5 steps * 0.01 > 0.01
+    d = ctl.decide(queue_depth=0, **{**kw, "total_deadline_s": 0.01})
+    assert (d.action, d.reason) == ("reject", "infeasible")
+    assert not d.admitted
+    # a ttft deadline below one chunk's floor is equally infeasible
+    d = ctl.decide(queue_depth=0, **{**kw, "ttft_deadline_s": 0.005})
+    assert (d.action, d.reason) == ("reject", "infeasible")
+    # queue bound
+    d = ctl.decide(queue_depth=4, **kw)
+    assert (d.action, d.reason) == ("reject", "queue_full")
+    # rate limit: burst of 2, no refill on a manual clock
+    assert ctl.decide(queue_depth=0, **kw).action == "admit"
+    assert ctl.decide(queue_depth=0, **kw).action == "admit"
+    d = ctl.decide(queue_depth=0, **kw)
+    assert (d.action, d.reason) == ("reject", "rate_limited")
+
+
+def test_backpressure_hysteresis():
+    ctl, _ = _controller(max_queue=16, queue_high=3, queue_low=1)
+    kw = dict(priority=0, prompt_len=4, max_new=2, chunk=4,
+              ttft_deadline_s=None, total_deadline_s=None)
+    assert ctl.decide(queue_depth=0, **kw).action == "admit"
+    d = ctl.decide(queue_depth=3, **kw)       # crosses high watermark
+    assert (d.action, d.reason) == ("backpressure", "queue_high")
+    assert d.admitted                         # backpressure still queues
+    # stays latched between the watermarks...
+    assert ctl.decide(queue_depth=2, **kw).action == "backpressure"
+    # ...and clears only at/below the low watermark
+    assert ctl.decide(queue_depth=1, **kw).action == "admit"
+
+
+def test_degrade_ladder_sustain_and_recover():
+    ctl, _ = _controller(max_queue=64, queue_high=4, queue_low=1,
+                         degrade_sustain_steps=3, degrade_recover_steps=2)
+    step = 0
+    for _ in range(3):                        # 3 sustained steps -> L1
+        step += 1
+        lvl = ctl.update_pressure(10, step)
+    assert lvl == 1
+    for _ in range(6):                        # keeps climbing, capped at 3
+        step += 1
+        lvl = ctl.update_pressure(10, step)
+    assert lvl == 3
+    step += 1
+    assert ctl.update_pressure(3, step) == 3  # between watermarks: hold
+    for _ in range(2):                        # 2 calm steps -> one level back
+        step += 1
+        lvl = ctl.update_pressure(0, step)
+    assert lvl == 2
+    for _ in range(4):
+        step += 1
+        lvl = ctl.update_pressure(0, step)
+    assert lvl == 0
+    # every move is on the decision log, one level at a time
+    assert [t[1:] for t in ctl.transitions] == \
+        [(0, 1), (1, 2), (2, 3), (3, 2), (2, 1), (1, 0)]
+
+
+# -- bursty trace ------------------------------------------------------------
+
+def test_bursty_trace_deterministic_and_shaped():
+    a = bursty_trace(13, 200)
+    b = bursty_trace(13, 200)
+    assert a == b                             # same seed, same trace
+    assert bursty_trace(14, 200) != a         # seed actually matters
+    assert len(a) == 200
+    arrivals = [t.arrival_s for t in a]
+    assert arrivals == sorted(arrivals)
+    assert all(4 <= t.prompt_len <= 96 for t in a)
+    assert all(t.priority in (0, 1, 2) for t in a)
+    assert len({t.priority for t in a}) == 3  # all tiers represented
+    # bursts: many identical arrival times (same-burst requests)
+    assert len(set(arrivals)) < len(arrivals)
+
+
+# -- circuit breaker ---------------------------------------------------------
+
+def test_breaker_lifecycle():
+    clk = ManualClock()
+    cb = CircuitBreaker(failure_threshold=2, cooldown_s=1.0,
+                        half_open_probes=1, clock=clk)
+    key = ("migrate", 3)
+    assert cb.allow(key) and cb.state(key) == "closed"
+    assert cb.record_failure(key) == "closed"     # 1 of 2
+    cb.record_success(key)                        # success resets the count
+    assert cb.record_failure(key) == "closed"
+    assert cb.record_failure(key) == "open"       # threshold reached
+    assert not cb.allow(key)                      # quarantined
+    assert cb.open_keys() == [key]
+    clk.advance(0.5)
+    assert not cb.allow(key)                      # cooldown not elapsed
+    clk.advance(0.6)
+    assert cb.allow(key)                          # half-open probe granted
+    assert cb.state(key) == "half_open"
+    assert not cb.allow(key)                      # only one probe slot
+    assert cb.record_failure(key) == "open"       # failed probe re-opens
+    clk.advance(1.1)
+    assert cb.allow(key)
+    assert cb.record_success(key) == "closed"     # clean probe closes
+    assert cb.allow(key)
+    assert cb.stats["opened"] == 1 and cb.stats["reopened"] == 1
+    assert cb.stats["closed"] == 1 and cb.stats["denied"] == 3
+    assert (key, "open", "half_open") in cb.transitions
+    assert (key, "half_open", "closed") in cb.transitions
+    # other keys are independent
+    assert cb.state(("migrate", 4)) == "closed"
+
+
+# -- migrate failure rollback (ledger safety for the breaker path) ----------
+
+def test_migrate_budget_exhaustion_rolls_back_ledger():
+    """When migrate raises after its retry budget, the destination pages
+    it allocated must return to the free list — the caller (the engine's
+    breaker path) catches the error, so the allocated-freed==live ledger
+    has to stay balanced."""
+    mem = GlobalMemory(4, 1 << 22, allocator="buddy")
+    alloc = PagedKVAllocator(mem, DiompGroup(("x",), name="x"),
+                             page_tokens=16, kv_bytes_per_token=64)
+    r = alloc.admit(20, 40, home_rank=0)
+    npages = len(r.page_table)
+    tr = RMATracker()
+    tr.register("w")
+    specs = tuple(FaultSpec("migrate", i, "corrupt") for i in range(16))
+    with pytest.raises(RMAError):
+        alloc.migrate(r, 2, tracker=tr, window="w",
+                      faults=FaultPlan(0, specs=specs),
+                      policy=RetryPolicy(max_retries=2, sleep=False),
+                      validate=True)
+    # source intact, destination rolled back, ledger balanced
+    assert r.home_rank == 0 and len(r.page_table) == npages
+    assert alloc.stats["pages_allocated"] - alloc.stats["pages_freed"] \
+        == alloc.live_pages()
+    assert alloc.free_list_pages(2) == npages
+    assert ("migrate_failed", r.rid, 2) in alloc.call_log
+    alloc.release(r)
+
+
+# -- engine: SLO wiring ------------------------------------------------------
+
+def test_slo_engine_unconstrained_matches_plain(mesh8, params):
+    """A permissive SLO policy changes nothing: identical outputs to the
+    plain engine, every decision an explicit admit."""
+    lengths = (3, 9, 12)
+    ref = _engine(mesh8, params, slots=2, max_len=64, prefill_chunk=8)
+    for p in _prompts(lengths):
+        ref.submit(p, max_new=4)
+    ref.run()
+    clk = ManualClock()
+    eng = _engine(mesh8, params, slots=2, max_len=64, prefill_chunk=8,
+                  slo=SLOPolicy(), clock=clk)
+    reqs = [eng.submit(p, max_new=4) for p in _prompts(lengths)]
+    while eng.active or eng.queue or eng.preempted:
+        eng.step()
+        clk.advance(0.01)
+    for a, b in zip(ref._all, reqs):
+        assert b.done and a.out == b.out
+        assert b.decision.action == "admit" and b.shed_reason is None
+    st = eng.latency_stats()
+    assert st["goodput"] == len(lengths) and st["shed_total"] == 0
+    assert st["deadline_violations"] == 0 and st["tokens_late"] == 0
+    assert st["ttft_s"]["p99"] >= st["ttft_s"]["p50"] > 0
+
+
+def test_submit_rejections_explicit_and_not_queued(mesh8, params):
+    clk = ManualClock()
+    slo = SLOPolicy(default_tier=TierPolicy(rate_per_s=1.0, burst=2.0),
+                    max_queue=3, queue_high=3, queue_low=1, min_step_s=0.01)
+    eng = _engine(mesh8, params, slots=1, max_len=64, prefill_chunk=8,
+                  slo=slo, clock=clk)
+    p = _prompts([6])[0]
+    # infeasible: 1 prefill chunk + 4 decode steps * 0.01 > deadline
+    r = eng.submit(p, max_new=4, total_deadline_s=0.02)
+    assert (r.decision.action, r.shed_reason) == ("reject", "infeasible")
+    # bucket burst 2: two admits, then rate_limited
+    a, b = eng.submit(p, max_new=2), eng.submit(p, max_new=2)
+    assert a.decision.admitted and b.decision.admitted
+    c = eng.submit(p, max_new=2)
+    assert (c.decision.action, c.decision.reason) == ("reject",
+                                                      "rate_limited")
+    # a refilled token admits the next one, filling the queue to max_queue
+    clk.advance(1.0)
+    d = eng.submit(p, max_new=2)
+    assert d.decision.admitted
+    # queue at max_queue (3): queue_full outranks the rate limiter
+    clk.advance(1.0)
+    e = eng.submit(p, max_new=2)
+    assert (e.decision.action, e.decision.reason) == ("reject", "queue_full")
+    assert len(eng.queue) == 3 and len(eng._all) == 6
+    st = eng.latency_stats()
+    assert st["shed"] == {"infeasible": 1, "rate_limited": 1,
+                          "queue_full": 1}
+    # rejected requests never run
+    while eng.active or eng.queue or eng.preempted:
+        eng.step()
+        clk.advance(0.001)
+    assert a.done and b.done and d.done
+    assert not (r.done or c.done or e.done)
+    assert r.out == c.out == e.out == []
+
+
+def test_queue_shedding_and_midflight_cancellation(mesh8, params):
+    """Expired queued requests shed without binding resources; a mid-flight
+    request past its total deadline is cancelled with pages freed and its
+    tokens counted as wasted — and no token is ever served late."""
+    clk = ManualClock()
+    eng = _engine(mesh8, params, slots=1, max_len=64, prefill_chunk=8,
+                  slo=SLOPolicy(min_step_s=0.01), clock=clk)
+    pa, pb, pc = _prompts((6, 6, 10))
+    a = eng.submit(pa, max_new=30, total_deadline_s=1.0)   # will expire
+    b = eng.submit(pb, max_new=2, ttft_deadline_s=0.5)     # starves in queue
+    c = eng.submit(pc, max_new=2, total_deadline_s=0.9)    # becomes hopeless
+    for _ in range(4):            # a admits and makes some progress
+        eng.step()
+        clk.advance(0.2)
+    assert a.slot >= 0 and len(a.out) > 0
+    # t=0.8: b's ttft deadline (0.5) passed while queued -> queue_expired;
+    # c needs >= 2 chunks + 2 decodes = 0.04 but only 0.1 remains... still
+    # feasible; at t>=0.9 it is hopeless/expired too
+    eng.step()
+    assert b.shed_reason == "queue_expired" and not b.done
+    clk.advance(0.3)              # t=1.1: a's total deadline (1.0) passed
+    eng.step()
+    assert a.shed_reason == "expired" and not a.done
+    assert a.slot == -1 and a.kv is None
+    assert c.shed_reason in ("hopeless", "queue_expired", "expired")
+    assert eng.active == {} and eng.queue == []
+    st = eng.latency_stats()
+    assert st["tokens_wasted"] == len(a.out) > 0
+    assert st["tokens_late"] == 0          # nothing served past a deadline
+    assert st["shed_total"] == 3
+    # allocator ledger balanced after the cancellation freed a's pages
+    kv = eng.kv_stats                      # (asserts the ledger internally)
+    assert kv["live_pages"] == 0
+    # shed events are on the decision log
+    kinds = [e[0] for e in eng.slo_log]
+    assert kinds.count("shed") == 3
+
+
+def test_degraded_modes_cap_work_and_recover(mesh8, params):
+    """Sustained queue pressure walks the ladder (max_new capped at L1),
+    and draining the queue recovers to L0."""
+    clk = ManualClock()
+    slo = SLOPolicy(max_queue=64, queue_high=2, queue_low=1,
+                    degrade_sustain_steps=2, degrade_recover_steps=2,
+                    degraded_max_new=2, degraded_chunk=4)
+    eng = _engine(mesh8, params, slots=1, max_len=64, prefill_chunk=8,
+                  slo=slo, clock=clk)
+    busy = eng.submit(_prompts([6])[0], max_new=8)
+    waiters = [eng.submit(p, max_new=6)
+               for p in _prompts((4, 4, 4, 4), seed=9)]
+    while eng.active or eng.queue or eng.preempted:
+        eng.step()
+        clk.advance(0.01)
+    assert busy.done and len(busy.out) == 8      # admitted pre-degrade
+    assert eng.slo_ctl.transitions, "ladder never engaged"
+    assert max(t[2] for t in eng.slo_ctl.transitions) >= 1
+    # at least one waiter was admitted under L1+ and got the capped budget
+    assert any(w.done and len(w.out) == 2 for w in waiters), \
+        [(w.done, len(w.out)) for w in waiters]
+    # queue drained: recovery steps bring the level back down
+    for _ in range(3 * slo.degrade_recover_steps + 2):
+        eng.step()
+        clk.advance(0.01)
+    assert eng.slo_ctl.level == 0
+    assert eng.latency_stats()["degrade_level"] == 0
+
+
+def test_identical_seeds_identical_decision_logs(mesh8, params):
+    """The whole decision sequence (submit verdicts, sheds, degrades) is a
+    pure function of (trace, policy, clock) — two runs replay exactly."""
+    def drive():
+        clk = ManualClock()
+        slo = SLOPolicy(default_tier=TierPolicy(ttft_deadline_s=0.4,
+                                                total_deadline_s=1.2),
+                        max_queue=6, queue_high=2, queue_low=1,
+                        min_step_s=0.01, degrade_sustain_steps=2,
+                        degrade_recover_steps=2, degraded_max_new=2)
+        eng = _engine(mesh8, params, slots=1, max_len=64, prefill_chunk=8,
+                      slo=slo, clock=clk)
+        trace = bursty_trace(21, 10, max_prompt=12,
+                             max_new_choices=(2, 4), burst_rate_per_s=8.0)
+        pending = list(trace)
+        rng = np.random.RandomState(5)
+        prompts = {id(t): rng.randint(0, CFG.vocab_size, t.prompt_len)
+                   .astype(np.int32) for t in pending}
+        for _ in range(60):
+            while pending and pending[0].arrival_s <= clk.now():
+                t = pending.pop(0)
+                eng.submit(prompts[id(t)], max_new=t.max_new,
+                           priority=t.priority)
+            eng.step()
+            clk.advance(0.05)
+            if not (pending or eng.active or eng.queue or eng.preempted):
+                break
+        return eng
+    a, b = drive(), drive()
+    assert a.slo_log == b.slo_log and len(a.slo_log) > 0
+    assert a.shed == b.shed
+    assert [r.out for r in a._all] == [r.out for r in b._all]
+
+
+# -- acceptance: flaky spill rank quarantined by the breaker -----------------
+
+def test_flaky_spill_rank_quarantined_and_recovers(mesh8, params):
+    """A spill rank whose migrations exhaust the retry budget is opened by
+    the breaker within that budget, further migrations reroute around it,
+    outputs stay correct, and after the cooldown a half-open probe
+    readmits it."""
+    lengths, max_new = (9, 14, 5), 6
+    ref = _engine(mesh8, params, slots=3, max_len=64, prefill_chunk=8)
+    for p in _prompts(lengths):
+        ref.submit(p, max_new=max_new)
+    ref.run()
+
+    # corrupt the first migrate put AND its retry: with a budget of 1 the
+    # first spill spends its whole budget and surfaces RMAError; every
+    # later transfer is clean
+    plan = FaultPlan(0, specs=(FaultSpec("migrate", 0, "corrupt"),
+                               FaultSpec("migrate", 1, "corrupt")))
+    clk = ManualClock()
+    cb = CircuitBreaker(failure_threshold=1, cooldown_s=50.0,
+                        half_open_probes=1, clock=clk)
+    ctx = DiompContext(mesh=mesh8, segment_bytes=1 << 26, allocator="buddy",
+                       fault_plan=plan,
+                       retry_policy=RetryPolicy(per_verb={"migrate": 1},
+                                                sleep=False))
+    eng = _engine(mesh8, params, slots=3, max_len=64, prefill_chunk=8,
+                  high_watermark=1e-4, low_watermark=5e-5,
+                  context=ctx, clock=clk, breaker=cb)
+    reqs = [eng.submit(p, max_new=max_new) for p in _prompts(lengths)]
+    while eng.active or eng.queue or eng.preempted:
+        eng.step()
+        clk.advance(0.01)
+
+    # correctness survived the flaky rank (recompute-preemption fallback)
+    for a, b in zip(ref._all, reqs):
+        assert b.done and a.out == b.out, (a.out, b.out)
+    # the breaker opened on exactly the rank that spent the budget...
+    assert cb.stats["opened"] == 1
+    open_keys = [k for k in cb.open_keys() if cb.state(k) == "open"]
+    assert len(open_keys) == 1 and open_keys[0][0] == "migrate"
+    flaky = open_keys[0][1]
+    assert any(e[0] == "breaker" and e[2] == flaky and e[4] == "open"
+               for e in eng.slo_log)
+    # ...while migrations rerouted and succeeded elsewhere
+    assert eng.alloc.stats["migrations"] >= 1
+    migrated_to = {e[3] for e in eng.alloc.call_log if e[0] == "migrate"}
+    assert flaky not in migrated_to
+    # ledger balanced despite the failed migration (rollback path)
+    assert eng.kv_stats["live_pages"] == 0
+
+    # half-open recovery: after the cooldown one probe is granted; a clean
+    # migrate to the formerly-flaky rank closes the breaker
+    clk.advance(60.0)
+    key = ("migrate", flaky)
+    assert cb.allow(key) and cb.state(key) == "half_open"
+    kv = eng.alloc.admit(4, 8, home_rank=eng._home(0))
+    probe = GenRequest(prompt=np.ones(4, np.int32), max_new=1, kv=kv)
+    eng.dctx.rma.register(eng._win(probe))
+    assert eng._migrate(probe, flaky) > 0
+    assert cb.state(key) == "closed"
+    assert (key, "open", "half_open") in cb.transitions
+    assert (key, "half_open", "closed") in cb.transitions
+    eng.alloc.release(kv)
+    assert eng.kv_stats["live_pages"] == 0

@@ -1,14 +1,16 @@
 #!/usr/bin/env python
 """Diff a fresh ``BENCH_summary.json`` against the committed baseline.
 
-The ``modeled_*_s`` columns are deterministic functions of the planners
+The ``modeled_*`` columns are deterministic functions of the planners
 and cost models — they move only when code moves — so the bench-smoke CI
-job fails when a fresh run's modeled seconds regress beyond ``--tol`` on
-any row present in both summaries.  Wall-clock fields are machine noise
-and are ignored both as row identity and as comparison targets.  Rows or
-whole benches that exist on only one side are reported but do not fail
-(benches evolve); the gate is strictly "what we still model must not
-have gotten slower".
+job fails when a fresh run's modeled numbers regress beyond ``--tol`` on
+any row present in both summaries.  ``modeled_*_s`` fields are seconds
+(lower is better, fails on increase); ``modeled_*_rps`` / ``_tput`` /
+``_goodput`` fields are rates (higher is better, fails on decrease).
+Wall-clock fields are machine noise and are ignored both as row identity
+and as comparison targets.  Rows or whole benches that exist on only one
+side are reported but do not fail (benches evolve); the gate is strictly
+"what we still model must not have gotten slower".
 
 Usage::
 
@@ -32,9 +34,19 @@ def _volatile(field: str) -> bool:
     return field.startswith("wall")
 
 
-def _compared(field: str) -> bool:
-    """Deterministic modeled seconds — the regression surface."""
+def _compared_lower(field: str) -> bool:
+    """Deterministic modeled seconds — regression = got bigger."""
     return field.startswith("modeled_") and field.endswith("_s")
+
+
+def _compared_higher(field: str) -> bool:
+    """Deterministic modeled rates — regression = got smaller."""
+    return field.startswith("modeled_") and \
+        field.endswith(("_rps", "_tput", "_goodput"))
+
+
+def _compared(field: str) -> bool:
+    return _compared_lower(field) or _compared_higher(field)
 
 
 def row_key(row: dict) -> tuple:
@@ -63,11 +75,17 @@ def compare(baseline: dict, fresh: dict, tol: float):
             for f, v in row.items():
                 if not (_compared(f) and _is_num(v) and _is_num(base.get(f))):
                     continue
-                if v > base[f] * (1.0 + tol) + 1e-12:
+                if _compared_lower(f) and v > base[f] * (1.0 + tol) + 1e-12:
                     regressions.append(
                         f"{bench}: {dict(row_key(row))} {f} "
                         f"{base[f]:.6g} -> {v:.6g} "
                         f"(+{(v / base[f] - 1.0) * 100:.1f}% > {tol:.0%})")
+                elif _compared_higher(f) \
+                        and v < base[f] * (1.0 - tol) - 1e-12:
+                    regressions.append(
+                        f"{bench}: {dict(row_key(row))} {f} "
+                        f"{base[f]:.6g} -> {v:.6g} "
+                        f"({(v / base[f] - 1.0) * 100:.1f}% < -{tol:.0%})")
     for bench in sorted(baseline):
         if bench not in fresh:
             notes.append(f"{bench}: in baseline only — not re-run")
