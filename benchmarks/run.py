@@ -11,6 +11,8 @@
                 asymmetric decomposition, fused-overlap gate + LOC)
   moe          (dropless MoE dispatch: none/a2a/host/fused over EP sizes,
                 asymmetric expert regions, fused-overlap + parity gates)
+  attention    (fused ring attention: none/allgather/host/fused over ring
+                sizes, modeled schedule walk + put-parity gates)
   streams      (paper §3.2: stream-pool policy throughput)
   kvcache      (paper Fig. 2: asymmetric heap / page-table churn)
   faults       (chaos overhead: retry model, seeded recovery smoke,
@@ -62,8 +64,8 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset (p2p,collectives,"
-                         "grad_reduce,matmul,minimod,moe,streams,kvcache,"
-                         "faults,overload)")
+                         "grad_reduce,matmul,minimod,moe,attention,streams,"
+                         "kvcache,faults,overload)")
     ap.add_argument("--json", nargs="?", const=SUMMARY_DEFAULT, default=None,
                     metavar="PATH",
                     help="write the consolidated BENCH_summary.json "
@@ -71,9 +73,9 @@ def main(argv=None):
                          "implies this)")
     args = ap.parse_args(argv)
 
-    from . import (bench_collectives, bench_faults, bench_kvcache,
-                   bench_matmul, bench_minimod, bench_moe, bench_overload,
-                   bench_p2p, bench_streams)
+    from . import (bench_attention, bench_collectives, bench_faults,
+                   bench_kvcache, bench_matmul, bench_minimod, bench_moe,
+                   bench_overload, bench_p2p, bench_streams)
 
     table = {
         "p2p": bench_p2p.run,
@@ -82,6 +84,7 @@ def main(argv=None):
         "matmul": bench_matmul.run,
         "minimod": bench_minimod.run,
         "moe": bench_moe.run,
+        "attention": bench_attention.run,
         "streams": bench_streams.run,
         "kvcache": bench_kvcache.run,
         "faults": bench_faults.run,

@@ -5,7 +5,11 @@ Layout contract with the model zoo: (B, T, H, D) in, (B, T, H, Dv) out.
 shard_map'd model steps, and for the dry-run HLO) and accepts *traced*
 ``q_offset`` / ``valid_len`` (decode).  ``impl='pallas'`` runs the TPU kernel
 (``interpret=True`` executes the kernel body in Python on CPU for
-validation) and requires static offsets.
+validation) and requires static offsets — traced ones raise here, at the
+API boundary, instead of failing inside Mosaic.  ``impl='ring'`` is the
+sequence-parallel path: per-rank K/V shards rotate through
+:func:`~repro.kernels.ring_attention.ring_attention` (requires ``group``;
+``q_sharded`` picks the training vs chunked-prefill query layout).
 
 ``block=None`` (the default) asks the shared
 :class:`~repro.kernels.plan.OverlapPlanner` for the largest block whose
@@ -20,11 +24,17 @@ from __future__ import annotations
 
 from typing import Optional
 
+import jax
+
 from repro.kernels.plan import default_planner, resolve_interpret
 from .kernel import flash_attention_pallas
 from .ref import flash_attention_ref
 
 __all__ = ["flash_attention"]
+
+
+def _traced(val) -> bool:
+    return isinstance(val, jax.core.Tracer)
 
 
 def flash_attention(
@@ -38,8 +48,26 @@ def flash_attention(
     block: Optional[int] = None,
     valid_len=None,
     interpret: Optional[bool] = None,
+    group=None,
+    q_sharded: bool = True,
 ):
     """q: (B, Tq, H, D); k: (B, Tk, KH, D); v: (B, Tk, KH, Dv)."""
+    if impl == "ring":
+        from repro.kernels.ring_attention import ring_attention
+
+        if group is None:
+            raise ValueError(
+                "impl='ring' is the sequence-parallel path: pass the "
+                "DiompGroup whose axis the K/V stripes rotate over")
+        if prefix_len:
+            raise ValueError(
+                "impl='ring' does not take prefix_len: bidirectional "
+                "prefix attention needs the full K/V, use the all-gather "
+                "path (seq_parallel='allgather') for prefix architectures")
+        return ring_attention(
+            q, k, v, group, causal=causal, q_offset=q_offset,
+            valid_len=valid_len, scale=scale, q_sharded=q_sharded,
+            interpret=interpret)
     if block is None:
         block = default_planner().plan_attention_block(
             q.shape[1], k.shape[1], q.shape[-1], v.shape[-1], q.dtype)
@@ -49,6 +77,17 @@ def flash_attention(
             scale=scale, block=block, valid_len=valid_len,
         )
     if impl == "pallas":
+        if _traced(q_offset) or _traced(valid_len):
+            traced = [name for name, val in
+                      (("q_offset", q_offset), ("valid_len", valid_len))
+                      if _traced(val)]
+            raise ValueError(
+                f"impl='pallas' bakes q_offset/valid_len into its block "
+                f"masks at trace time, but {' and '.join(traced)} "
+                f"{'are' if len(traced) > 1 else 'is'} traced.  Pass "
+                f"static Python ints (the static-offsets contract), or "
+                f"use impl='ref' / the ring emulation for dynamic "
+                f"chunked-prefill offsets.")
         qt = q.transpose(0, 2, 1, 3)  # (B, H, Tq, D)
         kt = k.transpose(0, 2, 1, 3)
         vt = v.transpose(0, 2, 1, 3)

@@ -34,6 +34,7 @@ from repro.core.streams import MAX_ACTIVE_STREAMS_DEFAULT, StreamPool
 
 __all__ = [
     "AllToAllPlan",
+    "AttentionRingPlan",
     "RingStep",
     "RingPlan",
     "HaloPlan",
@@ -42,6 +43,7 @@ __all__ = [
     "resolve_interpret",
     "resolve_ring_impl",
     "resolve_dispatch_impl",
+    "resolve_seq_parallel",
     "split_extents",
 ]
 
@@ -99,6 +101,25 @@ def resolve_dispatch_impl(impl: Optional[str]) -> str:
     if impl in ("a2a", "host", "fused"):
         return impl
     raise ValueError(f"unknown moe dispatch impl {impl!r}")
+
+
+def resolve_seq_parallel(impl: Optional[str]) -> str:
+    """Resolve the sequence-parallel attention knob to a concrete mode.
+
+    ``"auto"``/None keep the host collective ``"allgather"`` path (the
+    status quo: K/V all-gathered over the model group, then local flash
+    attention); ``"ring"`` — K/V stripes rotated through the bidirectional
+    one-sided ring while partial softmax accumulates per
+    :class:`AttentionRingPlan` — is an explicit opt-in because the
+    stripe-merge reduction order changes the numerics at float tolerance
+    against the all-gather scan.  The train/serve step builders call this
+    once so the whole jitted step traces against one concrete schedule.
+    """
+    if impl in (None, "auto"):
+        return "allgather"
+    if impl in ("allgather", "ring"):
+        return impl
+    raise ValueError(f"unknown seq_parallel mode {impl!r}")
 
 
 def split_extents(total: int, parts: int,
@@ -246,6 +267,156 @@ class RingPlan:
             if st.compute_ccw:
                 out.append((rank + st.index) % self.n)
         return tuple(out)
+
+    def fold_steps(self) -> Tuple[Tuple[str, int], ...]:
+        """Rank-agnostic ``(direction, step)`` of each fold, in schedule
+        order — the i-th entry describes where :meth:`sources`' i-th
+        stripe came from (``("cw", s)`` = owner ``rank - s``, ``("ccw",
+        s)`` = owner ``rank + s``).  The ring-attention backward keys its
+        canonical cotangent routing off this list."""
+        out = []
+        for st in self.schedule():
+            if st.compute_cw:
+                out.append(("cw", st.index))
+            if st.compute_ccw:
+                out.append(("ccw", st.index))
+        return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# ring attention schedule (sequence parallelism)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionRingPlan:
+    """Concrete schedule for one sequence-parallel ring attention pass.
+
+    The K/V stripes rotate through the same bidirectional ring as the
+    collective matmul (the step records ARE :meth:`RingPlan.schedule`),
+    but the compute is a flash-attention block per stripe whose partial
+    softmax states fold with the :mod:`~repro.kernels.ring_attention.
+    kernel` merge operator — so this plan adds the attention-specific
+    facts on top of the ring:
+
+    * **causal step skipping** — :meth:`computes` is the static predicate
+      for "does ``rank`` spend FLOPs on stripe ``src``".  A stripe whose
+      keys all lie in the rank's future (or beyond ``valid_len``) is
+      fully masked, its state is the merge identity, and the TPU kernel
+      skips it under ``pl.when`` — *bit-identically*, by the identity
+      property.  Sends are NEVER skipped (downstream ranks need the
+      forwarded stripe), so skipping changes FLOPs, not wire bytes.
+      ``q_offset=None`` means the query positions are traced (dynamic
+      chunked prefill): nothing can be skipped statically and every
+      stripe masks instead.
+    * **wire-byte accounting** — K and V are separate one-sided puts, so
+      a full pass issues ``2·(n-1)`` puts of ``stripe_bytes`` total wire
+      ``(n-1)·stripe_bytes`` per rank, the exact figure the RMATracker
+      windows and the OMPCCL byte log must both report.
+    * ``q_sharded=True`` is the training layout (rank ``r`` holds queries
+      ``q_offset + r·tq_loc ..``); ``False`` the chunked-prefill layout
+      (every rank holds the same ``tq_loc`` queries at ``q_offset``).
+    """
+
+    n: int
+    tq_loc: int
+    tk_loc: int
+    h: int                      # query heads
+    kh: int                     # kv heads (stripe width on the wire)
+    d: int
+    dv: int
+    b: int = 1
+    itemsize: int = 4
+    causal: bool = True
+    q_sharded: bool = True
+    q_offset: Optional[int] = 0     # None: traced offsets, no static skip
+    valid_len: Optional[int] = None  # None: all n*tk_loc key rows are real
+    direction: str = "bidi"
+    slots: int = 2
+    block: int = 512
+    overlap: bool = True            # False: serialized "host" listing
+    vmem_bytes: int = 0
+
+    def __post_init__(self):
+        if self.n < 1:
+            raise ValueError("group size must be >= 1")
+        if self.tq_loc < 1 or self.tk_loc < 1:
+            raise ValueError("per-rank extents must be >= 1")
+        if self.h % self.kh:
+            raise ValueError(f"H={self.h} not divisible by KH={self.kh}")
+        if self.direction not in ("bidi", "cw", "ccw"):
+            raise ValueError(f"unknown ring direction {self.direction!r}")
+
+    @property
+    def ring(self) -> RingPlan:
+        """The underlying exchange schedule (shared with the matmul ring)."""
+        return RingPlan(n=self.n, direction=self.direction, slots=self.slots,
+                        stripe_bytes=self.stripe_bytes)
+
+    @property
+    def exchange_steps(self) -> int:
+        return self.ring.exchange_steps
+
+    def schedule(self) -> Tuple[RingStep, ...]:
+        return self.ring.schedule()
+
+    def sources(self, rank: int = 0) -> Tuple[int, ...]:
+        """Stripe owners delivered to ``rank``, in schedule (= merge) order."""
+        return self.ring.sources(rank)
+
+    def fold_steps(self) -> Tuple[Tuple[str, int], ...]:
+        """Per-fold ``(direction, step)`` records (see
+        :meth:`RingPlan.fold_steps`)."""
+        return self.ring.fold_steps()
+
+    def q_lo(self, rank: int) -> int:
+        """First global query position of ``rank`` (static plans only)."""
+        if self.q_offset is None:
+            raise ValueError("dynamic q_offset has no static query range")
+        return self.q_offset + (rank * self.tq_loc if self.q_sharded else 0)
+
+    def computes(self, rank: int, src: int) -> bool:
+        """Does ``rank`` spend FLOPs on stripe ``src``?  False only when
+        every (query, key) pair of the stripe is masked — beyond
+        ``valid_len`` or entirely in the causal future — so skipping is
+        sound by the merge-identity property."""
+        k_lo = src * self.tk_loc
+        if self.valid_len is not None and k_lo >= self.valid_len:
+            return False
+        if not self.causal or self.q_offset is None:
+            return True
+        return k_lo <= self.q_lo(rank) + self.tq_loc - 1
+
+    def computed_sources(self, rank: int = 0) -> Tuple[int, ...]:
+        return tuple(s for s in self.sources(rank) if self.computes(rank, s))
+
+    @property
+    def stripe_bytes(self) -> int:
+        """Wire bytes of one K/V stripe (K put + V put)."""
+        return self.b * self.tk_loc * self.kh * (self.d + self.dv) \
+            * self.itemsize
+
+    @property
+    def puts_per_rank(self) -> int:
+        """One-sided puts per rank per pass (K and V put separately)."""
+        return 2 * (self.n - 1)
+
+    @property
+    def wire_bytes(self) -> int:
+        """Per-rank put bytes for the whole pass: every remote stripe
+        crosses each link once regardless of causal skipping."""
+        return (self.n - 1) * self.stripe_bytes
+
+    @property
+    def stripe_flops(self) -> int:
+        """FLOPs of one stripe's block: QK^T + PV einsums over all local
+        queries and ``h`` query heads."""
+        return 2 * self.b * self.tq_loc * self.tk_loc * self.h \
+            * (self.d + self.dv)
+
+    def flops(self, rank: int) -> int:
+        """FLOPs ``rank`` actually spends after causal step skipping."""
+        return len(self.computed_sources(rank)) * self.stripe_flops
 
 
 # ---------------------------------------------------------------------------
@@ -572,6 +743,42 @@ class OverlapPlanner:
                 break
             b //= 2
         return b
+
+    # -- ring attention -------------------------------------------------------
+    def plan_ring_attention(self, b: int, tq_loc: int, tk_loc: int,
+                            h: int, kh: int, d: int, dv: int, dtype, n: int,
+                            *, causal: bool = True, q_sharded: bool = True,
+                            q_offset: Optional[int] = 0,
+                            valid_len: Optional[int] = None,
+                            direction: str = "bidi",
+                            overlap: bool = True) -> AttentionRingPlan:
+        """Slot/block plan for the fused sequence-parallel attention ring.
+
+        Working set: per-slot K+V stripe buffers for BOTH ring directions
+        (what ``StreamPool.plan_slots`` bounds), against a budget net of
+        the residents — the grouped f32 queries and the (m, l, acc) merge
+        carry.  The flash block size reuses :meth:`plan_attention_block`
+        on the per-rank extents.  ``q_offset=None`` marks traced query
+        offsets (dynamic chunked prefill): the plan then skips nothing
+        and every stripe masks.
+        """
+        item = _itemsize(dtype)
+        block = self.plan_attention_block(tq_loc, tk_loc, d, dv, dtype)
+        stripe = max(b * tk_loc * kh * (d + dv) * item, 1)
+        resident = b * tq_loc * h * (d + 2 + dv) * 4   # qg + m/l + acc, f32
+        budget = max(self.vmem_budget - resident, stripe * 2)
+        ndir = 2 if direction == "bidi" else 1
+        slots = self.pool.plan_slots(ndir * stripe, budget)
+        # the grant is a concurrency bound; the pinned bytes must also fit
+        slots = min(slots, max(budget // (ndir * stripe), 2))
+        plan = AttentionRingPlan(
+            n=n, tq_loc=tq_loc, tk_loc=tk_loc, h=h, kh=kh, d=d, dv=dv, b=b,
+            itemsize=item, causal=causal, q_sharded=q_sharded,
+            q_offset=q_offset, valid_len=valid_len, direction=direction,
+            slots=1 if n == 1 else max(2, min(slots, n)), block=block,
+            overlap=overlap)
+        return dataclasses.replace(
+            plan, vmem_bytes=ndir * plan.slots * stripe + resident)
 
     # -- MoE dispatch all-to-all ----------------------------------------------
     def plan_alltoall(self, t_loc: int, d: int, k: int, E: int, ep: int,

@@ -1,0 +1,4 @@
+from .kernel import empty_state, finalize_state, merge_states, \
+    scaled_queries, stripe_state  # noqa: F401
+from .ops import resolve_attention_impl, ring_attention  # noqa: F401
+from .ref import ring_attention_ref  # noqa: F401

@@ -1,0 +1,151 @@
+"""Single-device oracle executing the EXACT stripe/merge chain of the ring.
+
+``flash_attention_ref`` is the mathematical ground truth, but it folds KV
+blocks with the *online* update (rescale-then-accumulate per block), so its
+float rounding differs from the ring's state-merge at the last ulp.  This
+oracle instead replays, on one device over the full gathered tensors, the
+identical computation every ring rank performs: one
+:func:`~.kernel.stripe_state` per K/V stripe, folded with
+:func:`~.kernel.merge_states` in the ring's schedule-arrival order
+(:meth:`AttentionRingPlan.sources`).  The equivalence tests therefore
+assert ``ring == ring_attention_ref`` **bitwise** and
+``ring_attention_ref ≈ flash_attention_ref`` at float tolerance — the
+merge-order difference is all that separates them.
+
+The oracle carries the same hand-written VJP as the emulation
+(:func:`~.kernel.chain_grads`), accumulating each stripe's K/V cotangent
+contributions in the identical canonical order (owner's own stripe, then
+clockwise deliveries by ascending step, then counter-clockwise) — so the
+bit contract extends to gradients.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.plan import AttentionRingPlan
+from .kernel import chain_grads, empty_state, finalize_state, merge_states, \
+    scaled_queries, stripe_mask, stripe_state
+
+__all__ = ["ring_attention_ref"]
+
+
+def ring_attention_ref(
+    q, k, v, *,
+    n: int,
+    causal: bool = True,
+    q_offset=0,
+    valid_len=None,
+    scale: Optional[float] = None,
+    plan: Optional[AttentionRingPlan] = None,
+    q_sharded: bool = True,
+):
+    """q: (B, Tq, H, D) FULL queries; k/v: (B, Tk, KH, D/Dv) FULL keys/values.
+
+    ``Tk`` must divide into ``n`` equal stripes (pad and pass ``valid_len``
+    for ragged lengths, exactly like the distributed caller would).  With
+    ``q_sharded=True`` rank ``r`` owns query rows ``[r·Tq/n, (r+1)·Tq/n)``
+    and the outputs concatenate to (B, Tq, H, Dv); with ``False`` every
+    rank holds the same ``Tq`` queries at ``q_offset`` (chunked prefill)
+    and the single shared output is returned.  ``q_offset``/``valid_len``
+    may be traced — masking handles what static skipping cannot.
+    """
+    B, Tq, H, D = q.shape
+    Tk, KH = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    if Tk % n:
+        raise ValueError(f"Tk={Tk} not divisible into {n} stripes")
+    tk_loc = Tk // n
+    if q_sharded and Tq % n:
+        raise ValueError(f"Tq={Tq} not divisible over {n} ranks")
+    tq_loc = Tq // n if q_sharded else Tq
+    if scale is None:
+        scale = D ** -0.5
+    if plan is None:
+        plan = AttentionRingPlan(n=n, tq_loc=tq_loc, tk_loc=tk_loc,
+                                 h=H, kh=KH, d=D, dv=Dv, b=B,
+                                 causal=causal, q_sharded=q_sharded)
+    R = n if q_sharded else 1
+    folds = plan.fold_steps()
+
+    def rank_stripes(r, k, v, masks):
+        return [(k[:, src * tk_loc:(src + 1) * tk_loc],
+                 v[:, src * tk_loc:(src + 1) * tk_loc],
+                 masks[r, i])
+                for i, src in enumerate(plan.sources(r))]
+
+    masks = []
+    for r in range(R):
+        q0 = jnp.asarray(q_offset) + (r * tq_loc if q_sharded else 0)
+        q_pos = q0.reshape(-1, 1) + jnp.arange(tq_loc)[None, :]
+        masks.append(jnp.stack([
+            jnp.broadcast_to(
+                stripe_mask(tk_loc, q_pos=q_pos, k_start=src * tk_loc,
+                            causal=causal, valid_len=valid_len),
+                (B, tq_loc, tk_loc))
+            for src in plan.sources(r)]))
+    masks = jnp.stack(masks).astype(jnp.float32)
+
+    def run(q, k, v, masks):
+        outs = []
+        for r in range(R):
+            qr = q[:, r * tq_loc:(r + 1) * tq_loc] if q_sharded else q
+            qg = scaled_queries(qr, KH, scale)
+            state = empty_state(qg, v)
+            for k_str, v_str, vis in rank_stripes(r, k, v, masks):
+                state = merge_states(state,
+                                     stripe_state(qg, k_str, v_str, vis=vis))
+            outs.append(finalize_state(state, q.dtype))
+        return jnp.concatenate(outs, axis=1) if q_sharded else outs[0]
+
+    @jax.custom_vjp
+    def ref(q, k, v, masks):
+        return run(q, k, v, masks)
+
+    def ref_fwd(q, k, v, masks):
+        return run(q, k, v, masks), (q, k, v, masks)
+
+    def ref_bwd(res, ct):
+        q, k, v, masks = res
+        G = H // KH
+        ct32 = ct.astype(jnp.float32)
+        gq_parts, gks_by_rank, gvs_by_rank = [], {}, {}
+        for r in range(R):
+            ctr = ct32[:, r * tq_loc:(r + 1) * tq_loc] if q_sharded else ct32
+            qr = q[:, r * tq_loc:(r + 1) * tq_loc] if q_sharded else q
+            qg = scaled_queries(qr, KH, scale)
+            gqg, gks, gvs = chain_grads(
+                qg, rank_stripes(r, k, v, masks),
+                ctr.reshape(B, tq_loc, KH, G, Dv))
+            gq_parts.append(
+                (gqg.reshape(B, tq_loc, H, D) * scale).astype(q.dtype))
+            gks_by_rank[r], gvs_by_rank[r] = gks, gvs
+        gq = jnp.concatenate(gq_parts, axis=1) if q_sharded else gq_parts[0]
+        own = folds.index(("cw", 0))
+        gk_stripes, gv_stripes = [], []
+        for p in range(n):
+            if q_sharded:
+                # the emulation's canonical owner-side accumulation, rank
+                # by rank: own stripe, then cw deliveries, then ccw
+                gk_p, gv_p = gks_by_rank[p][own], gvs_by_rank[p][own]
+                for want in ("cw", "ccw"):
+                    for i, (dirn, s) in enumerate(folds):
+                        if dirn != want or s == 0:
+                            continue
+                        rr = (p + s) % n if dirn == "cw" else (p - s) % n
+                        gk_p = gk_p + gks_by_rank[rr][i]
+                        gv_p = gv_p + gvs_by_rank[rr][i]
+            else:
+                i = plan.sources(0).index(p)
+                gk_p, gv_p = gks_by_rank[0][i], gvs_by_rank[0][i]
+            gk_stripes.append(gk_p)
+            gv_stripes.append(gv_p)
+        gk = jnp.concatenate(gk_stripes, axis=1).astype(k.dtype)
+        gv = jnp.concatenate(gv_stripes, axis=1).astype(v.dtype)
+        return gq, gk, gv, jnp.zeros_like(masks)
+
+    ref.defvjp(ref_fwd, ref_bwd)
+    return ref(q, k, v, masks)

@@ -158,6 +158,15 @@ class ParallelCtx:
     #                                    dropless modes are opt-in: they keep
     #                                    tokens the capacity path would drop,
     #                                    so they change the numbers.
+    seq_parallel: str = "auto"         # self-attention context strategy:
+    #                                    auto (-> allgather) | allgather
+    #                                    (materialize full K/V per rank, one
+    #                                    bulk collective) | ring (fused ring
+    #                                    attention: K/V stripes rotate as
+    #                                    one-sided puts folded with the
+    #                                    online-softmax merge, O(T/n) memory);
+    #                                    resolved by the step builders via
+    #                                    plan.resolve_seq_parallel
     remat: bool = True
     microbatch: int = 1                # grad-accumulation factor
     seq_shard: bool = False            # sequence parallelism for norms/residual

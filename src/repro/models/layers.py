@@ -435,6 +435,15 @@ def attention_block(
     token_parallel = ((not hp) and (not decode) and (not chunkfill)
                       and T % ctx.tp == 0 and ctx.tp > 1)
 
+    # sequence-parallel context strategy (ctx.seq_parallel, resolved by the
+    # step builders; "ring" rotates K/V stripes as one-sided puts folded
+    # with the online-softmax merge instead of materializing full K/V)
+    ring_attn = False
+    if ctx.tp > 1 and not hp and not kvs:
+        from repro.kernels.plan import resolve_seq_parallel
+
+        ring_attn = resolve_seq_parallel(ctx.seq_parallel) == "ring"
+
     if token_parallel:
         t_loc = T // ctx.tp
         t0 = lax.axis_index(ctx.tp_group.axes[0]) * t_loc
@@ -485,8 +494,33 @@ def attention_block(
                                      (0, p0, 0, 0)),
             p0 + T, seq_sharded=False,
         )
-        attn = flash_attention(q, new_cache.k, new_cache.v, causal=True,
-                               q_offset=p0, valid_len=p0 + T)
+        s_all = new_cache.k.shape[1]
+        if ring_attn and s_all % ctx.tp == 0:
+            # sequence-parallel chunked prefill: the cache is replicated
+            # over "model", so each rank takes its S-stripe and the chunk's
+            # (shared) queries ride the ring — every rank folds n stripes
+            # of S/n keys instead of scanning the whole prefix.  q_offset /
+            # valid_len are traced; the ring emulation masks dynamically.
+            s_loc = s_all // ctx.tp
+            me = lax.axis_index(ctx.tp_group.axes[0])
+            k_str = lax.dynamic_slice_in_dim(new_cache.k, me * s_loc,
+                                             s_loc, axis=1)
+            v_str = lax.dynamic_slice_in_dim(new_cache.v, me * s_loc,
+                                             s_loc, axis=1)
+            attn = flash_attention(
+                q, k_str, v_str, causal=True, impl="ring",
+                group=ctx.tp_group, q_offset=p0, valid_len=p0 + T,
+                q_sharded=False)
+        else:
+            attn = flash_attention(q, new_cache.k, new_cache.v, causal=True,
+                                   q_offset=p0, valid_len=p0 + T)
+    elif token_parallel and ring_attn and cache is None and prefix_len == 0:
+        # fused ring attention (token-parallel training): the K/V shards
+        # never materialize per-rank — stripes rotate through the
+        # bidirectional one-sided ring while the online-softmax state
+        # accumulates (O(T/n) context memory instead of O(T))
+        attn = flash_attention(q, k, v, causal=causal, impl="ring",
+                               group=ctx.tp_group, q_sharded=True)
     elif token_parallel:
         # KV must cover the full sequence: gather over the TP group
         k_full = ompccl.allgather(k, ctx.tp_group, axis=1,

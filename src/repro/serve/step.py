@@ -38,12 +38,14 @@ def build_decode_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx, *,
     import dataclasses
 
     from repro.distributed.sharding import rules_for_ctx
-    from repro.kernels.plan import resolve_dispatch_impl, resolve_ring_impl
+    from repro.kernels.plan import (resolve_dispatch_impl, resolve_ring_impl,
+                                    resolve_seq_parallel)
 
     ctx = dataclasses.replace(
         ctx, inference=True, remat=False,
         ring_impl=resolve_ring_impl(ctx.ring_impl),
-        dispatch_impl=resolve_dispatch_impl(ctx.dispatch_impl))
+        dispatch_impl=resolve_dispatch_impl(ctx.dispatch_impl),
+        seq_parallel=resolve_seq_parallel(ctx.seq_parallel))
     decode = model_api.decode_fn(cfg)
     pspecs = sch.partition_specs(cfg, mesh, rules_for_ctx(ctx))
     _, cspecs = model_api.cache_structs(cfg, mesh, ctx, B, S,
@@ -85,7 +87,8 @@ def build_chunk_prefill_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
     import dataclasses
 
     from repro.distributed.sharding import rules_for_ctx
-    from repro.kernels.plan import resolve_dispatch_impl, resolve_ring_impl
+    from repro.kernels.plan import (resolve_dispatch_impl, resolve_ring_impl,
+                                    resolve_seq_parallel)
     from repro.models.transformer import transformer_chunk_prefill
 
     if cfg.family not in model_api.TRANSFORMER_FAMILIES:
@@ -95,7 +98,8 @@ def build_chunk_prefill_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
     ctx = dataclasses.replace(
         ctx, inference=True, remat=False,
         ring_impl=resolve_ring_impl(ctx.ring_impl),
-        dispatch_impl=resolve_dispatch_impl(ctx.dispatch_impl))
+        dispatch_impl=resolve_dispatch_impl(ctx.dispatch_impl),
+        seq_parallel=resolve_seq_parallel(ctx.seq_parallel))
     pspecs = sch.partition_specs(cfg, mesh, rules_for_ctx(ctx))
     _, cspecs = model_api.cache_structs(cfg, mesh, ctx, B, S_cache)
     vs = "model" if sch.vocab_sharded(cfg) else None
@@ -126,12 +130,14 @@ def build_prefill_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx, *,
     from repro.models.ssm import zamba_forward
 
     from repro.distributed.sharding import rules_for_ctx
-    from repro.kernels.plan import resolve_dispatch_impl, resolve_ring_impl
+    from repro.kernels.plan import (resolve_dispatch_impl, resolve_ring_impl,
+                                    resolve_seq_parallel)
 
     ctx = dataclasses.replace(
         ctx, inference=True, remat=False,
         ring_impl=resolve_ring_impl(ctx.ring_impl),
-        dispatch_impl=resolve_dispatch_impl(ctx.dispatch_impl))
+        dispatch_impl=resolve_dispatch_impl(ctx.dispatch_impl),
+        seq_parallel=resolve_seq_parallel(ctx.seq_parallel))
     pspecs = sch.partition_specs(cfg, mesh, rules_for_ctx(ctx))
     _, cspecs = model_api.cache_structs(cfg, mesh, ctx, B, S_cache,
                                         seq_sharded=seq_sharded)

@@ -200,14 +200,16 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, ctx: ParallelCtx,
 
     from repro.distributed.sharding import rules_for_ctx
     from repro.kernels.plan import (default_planner, resolve_dispatch_impl,
-                                    resolve_ring_impl)
+                                    resolve_ring_impl, resolve_seq_parallel)
 
     # resolve the ring-matmul schedule ONCE so the whole step traces against
     # one concrete plan (fused bidirectional unless the ctx pins "host");
-    # the MoE dispatch mode resolves the same way
+    # the MoE dispatch mode and the sequence-parallel attention strategy
+    # resolve the same way
     ctx = dataclasses.replace(
         ctx, ring_impl=resolve_ring_impl(ctx.ring_impl),
-        dispatch_impl=resolve_dispatch_impl(ctx.dispatch_impl))
+        dispatch_impl=resolve_dispatch_impl(ctx.dispatch_impl),
+        seq_parallel=resolve_seq_parallel(ctx.seq_parallel))
     rules = rules_for_ctx(ctx)
     loss_fn = model_api.loss_fn(cfg)
     pspecs = sch.partition_specs(cfg, mesh, rules)

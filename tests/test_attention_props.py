@@ -1,0 +1,210 @@
+"""Property tests for the ring-attention online-softmax merge monoid.
+
+The ring delivers K/V stripes in a schedule order that depends on the
+ring size, the rank, and the direction mix — so the correctness of
+:mod:`repro.kernels.ring_attention` rests on algebraic properties of the
+``(m, l, acc)`` partial-state fold rather than on any one delivery order:
+
+* ``merge_states`` is **associative** and **permutation-invariant** (up
+  to float tolerance) — any arrival order finalizes to the same
+  attention;
+* the **masked-empty state** is the EXACT bitwise identity of the merge
+  (``-0.0`` and ``-inf`` rows included), which is what makes the causal
+  step-skip sound: a skipped stripe's state is the identity, so dropping
+  its FLOPs leaves the fold chain bit-identical;
+* :meth:`AttentionRingPlan.computes` — the static skip predicate — never
+  skips a stripe the positional mask oracle says any query attends to.
+
+Runs under real ``hypothesis`` when installed, else the deterministic
+``tests/_minihyp.py`` fallback.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                      # pragma: no cover
+    from _minihyp import given, settings, st
+
+from repro.kernels.plan import AttentionRingPlan
+from repro.kernels.ring_attention import (empty_state, finalize_state,
+                                          merge_states, scaled_queries,
+                                          stripe_state)
+from repro.kernels.ring_attention.kernel import stripe_mask
+
+
+# ---------------------------------------------------------------------------
+# state construction helpers
+# ---------------------------------------------------------------------------
+
+B, TQ, KH, G, D, DV = 2, 3, 2, 2, 4, 3
+H = KH * G
+
+
+def _qg(rng):
+    q = rng.randn(B, TQ, H, D).astype(np.float32)
+    return scaled_queries(jnp.asarray(q), KH, D ** -0.5)
+
+
+def _stripe(rng, qg, s, *, mask=None):
+    """One stripe's partial state; ``mask`` rows control -inf/-0 content."""
+    k = rng.randn(B, s, KH, D).astype(np.float32)
+    v = rng.randn(B, s, KH, DV).astype(np.float32)
+    if mask is None:
+        mask = rng.rand(B, TQ, s) < 0.8
+    return stripe_state(qg, jnp.asarray(k), jnp.asarray(v),
+                        vis=jnp.asarray(mask))
+
+
+def _final(state):
+    return np.asarray(finalize_state(state, jnp.float32))
+
+
+def _assert_state_bits_equal(a, b):
+    """Bitwise equality per component — distinguishes -0.0 from +0.0 and
+    matches -inf/-inf, which allclose-style checks cannot."""
+    for name, xa, xb in zip(("m", "l", "acc"), a, b):
+        ba = np.asarray(xa, np.float32).view(np.uint32)
+        bb = np.asarray(xb, np.float32).view(np.uint32)
+        np.testing.assert_array_equal(ba, bb, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# merge algebra
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 4), st.integers(1, 4),
+       st.integers(1, 4))
+def test_merge_associative(seed, s1, s2, s3):
+    rng = np.random.RandomState(seed)
+    qg = _qg(rng)
+    a, b, c = (_stripe(rng, qg, s) for s in (s1, s2, s3))
+    left = merge_states(merge_states(a, b), c)
+    right = merge_states(a, merge_states(b, c))
+    np.testing.assert_allclose(_final(left), _final(right),
+                               atol=1e-5, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 6))
+def test_merge_permutation_invariant(seed, n_stripes):
+    rng = np.random.RandomState(seed)
+    qg = _qg(rng)
+    stripes = [_stripe(rng, qg, int(rng.randint(1, 5)))
+               for _ in range(n_stripes)]
+    perm = rng.permutation(n_stripes)
+
+    def fold(order):
+        state = empty_state(qg, jnp.zeros((B, 1, KH, DV)))
+        for i in order:
+            state = merge_states(state, stripes[i])
+        return _final(state)
+
+    np.testing.assert_allclose(fold(range(n_stripes)), fold(perm),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# the masked-empty state is the EXACT (bitwise) merge identity
+# ---------------------------------------------------------------------------
+
+
+def _adversarial_state(rng):
+    """A state with -inf rows (fully masked queries), negative zeros in
+    live rows' ``acc``/``l``, and ordinary float content — every case the
+    identity pass-through must reproduce verbatim.  Dead rows carry the
+    canonical ``(-inf, +0.0, +0.0)`` (the only value :func:`stripe_state`
+    / :func:`merge_states` ever produce for them)."""
+    m = rng.randn(B, TQ, KH, G).astype(np.float32)
+    l = np.abs(rng.randn(B, TQ, KH, G)).astype(np.float32)
+    acc = rng.randn(B, TQ, KH, G, DV).astype(np.float32)
+    live = rng.rand(B, TQ, KH, G) >= 0.3
+    acc[(rng.rand(*acc.shape) < 0.2) & live[..., None]] = -0.0
+    l[(rng.rand(*l.shape) < 0.2) & live] = -0.0
+    m[~live], l[~live], acc[~live] = -np.inf, 0.0, 0.0
+    return jnp.asarray(m), jnp.asarray(l), jnp.asarray(acc)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_empty_state_is_bitwise_merge_identity(seed):
+    rng = np.random.RandomState(seed)
+    s = _adversarial_state(rng)
+    e = (jnp.full((B, TQ, KH, G), -jnp.inf, jnp.float32),
+         jnp.zeros((B, TQ, KH, G), jnp.float32),
+         jnp.zeros((B, TQ, KH, G, DV), jnp.float32))
+    _assert_state_bits_equal(merge_states(e, s), s)
+    _assert_state_bits_equal(merge_states(s, e), s)
+    _assert_state_bits_equal(merge_states(e, e), e)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 4))
+def test_fully_masked_stripe_is_bitwise_empty(seed, s):
+    """A stripe no query can see IS the identity — the fact the causal
+    step-skip banks on (skipping its FLOPs changes no bits)."""
+    rng = np.random.RandomState(seed)
+    qg = _qg(rng)
+    masked = _stripe(rng, qg, s, mask=np.zeros((B, TQ, s), bool))
+    v = jnp.asarray(rng.randn(B, s, KH, DV).astype(np.float32))
+    _assert_state_bits_equal(masked, empty_state(qg, v))
+    other = _stripe(rng, qg, int(rng.randint(1, 5)))
+    _assert_state_bits_equal(merge_states(masked, other), other)
+    _assert_state_bits_equal(merge_states(other, masked), other)
+
+
+# ---------------------------------------------------------------------------
+# the causal step-skip predicate vs the positional mask oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 3), st.integers(1, 3),
+       st.booleans(), st.booleans(), st.integers(0, 5), st.booleans(),
+       st.booleans(), st.integers(1, 24))
+def test_skip_predicate_never_skips_visible_stripe(
+        n, tq, tk, causal, q_sharded, q_offset, traced_offset,
+        has_valid, valid_raw):
+    valid_len = min(valid_raw, n * tk) if has_valid else None
+    plan = AttentionRingPlan(
+        n=n, tq_loc=tq, tk_loc=tk, h=4, kh=2, d=8, dv=8, causal=causal,
+        q_sharded=q_sharded, q_offset=None if traced_offset else q_offset,
+        valid_len=valid_len)
+    for rank in range(n):
+        # every stripe is delivered exactly once, whatever the schedule
+        assert sorted(plan.sources(rank)) == list(range(n))
+        q_lo = q_offset + (rank * tq if q_sharded else 0)
+        q_pos = jnp.asarray((q_lo + np.arange(tq)).reshape(1, tq))
+        for src in range(n):
+            vis = np.asarray(stripe_mask(tk, q_pos=q_pos, k_start=src * tk,
+                                         causal=causal, valid_len=valid_len))
+            if traced_offset:
+                # traced offsets: only valid_len skips are allowed, and
+                # soundness still holds (skip => oracle sees nothing)
+                if not plan.computes(rank, src):
+                    assert not vis.any(), (rank, src)
+            else:
+                # static offsets: the predicate is EXACT — it skips a
+                # stripe iff the oracle mask is empty
+                assert plan.computes(rank, src) == bool(vis.any()), \
+                    (rank, src, q_lo, valid_len)
+
+
+def test_skip_predicate_skips_future_stripes():
+    # pinned example: rank 0 of a causal 4-ring computes only stripe 0
+    plan = AttentionRingPlan(n=4, tq_loc=4, tk_loc=4, h=4, kh=2, d=8, dv=8,
+                             causal=True)
+    assert plan.computed_sources(0) == (0,)
+    assert plan.computed_sources(3) == (3, 2, 0, 1)
+    assert plan.flops(0) == plan.stripe_flops
+    # sends are never skipped: wire bytes are causal-invariant
+    assert plan.wire_bytes == 3 * plan.stripe_bytes
+    assert plan.puts_per_rank == 6
+
+
+if __name__ == "__main__":
+    raise SystemExit(pytest.main([__file__, "-q"]))
