@@ -46,6 +46,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import ompccl, rma
 from repro.core.compat import axis_size, make_mesh, shard_map
+from repro.core.coordination import fetch_global
 from repro.core.context import DiompContext, use_default
 from repro.core.groups import DiompGroup
 from repro.kernels.plan import HaloPlan, default_planner, split_extents
@@ -323,7 +324,7 @@ def run_minimod(
         stats = ctx.stats()
         bstats = ctx.byte_stats()
         result = MinimodResult(
-            field=unpad_shards(np.asarray(out), z_extents),
+            field=unpad_shards(fetch_global(out), z_extents),
             wall_s=wall, mode=mode, grid=grid, steps=steps, nz=nz, ny=ny,
             z_extents=z_extents, plan=used_plan,
             puts=sum(ops.get("put", 0) for ops in stats.values()),

@@ -40,8 +40,11 @@ import jax.numpy as jnp
 
 from . import backends as _backends
 from .backends import CclBackend, get_backend
+from .coordination import (LocalCoordinator, ProcessCoordinator,
+                           coordinator_for, init_distributed,
+                           process_local_ranks)
 from .faults import ChaosBackend, FaultPlan
-from .groups import DiompGroup, standard_groups
+from .groups import DiompGroup, GroupError, standard_groups
 from .pgas import GlobalMemory
 from .resilience import RetryPolicy, call_with_retries
 from .rma import RMATracker
@@ -394,6 +397,19 @@ class DiompContext:
     can run unmodified under a fixed seed.  ``retry_policy`` governs the
     communicator-level retry/backoff (a default policy is always
     attached; see :meth:`retry_stats`).
+
+    Multi-controller SPMD: when the job spans several processes (the mesh
+    holds devices of more than one ``jax`` process), the context detects
+    it, owns only its process-local PGAS arenas (remote ranks have none —
+    true per-process device visibility), runs every collective allocation
+    through the coordinated exchange protocol, and performs the UniqueID
+    handshake *across processes*: each process's group-descriptor table is
+    allgathered at construction and any divergence raises
+    :class:`~repro.core.groups.GroupError` on every process.  The
+    per-process call/byte logs stay host-local; :meth:`gather_stats`
+    collects all of them for rank-against-rank diffing.  Context
+    construction is therefore a **collective** in a multi-process job —
+    every process must construct the same contexts in the same order.
     """
 
     def __init__(
@@ -407,13 +423,32 @@ class DiompContext:
         comm_backend: str = "gasnet-ex",  # config fidelity; no-op on TPU
         fault_plan: Optional[FaultPlan] = None,
         retry_policy: Optional[RetryPolicy] = None,
+        coordinator: Optional[ProcessCoordinator] = None,
     ):
         self.mesh = mesh
         self.comm_backend = comm_backend
         self.default_backend = default_backend
         self.ndev = int(mesh.devices.size) if mesh is not None else 1
+        if coordinator is None:
+            # a meshless bootstrap context must never touch jax (the
+            # dry-run sets XLA_FLAGS first): assume single-process there
+            coordinator = coordinator_for(mesh) if mesh is not None \
+                else LocalCoordinator()
+        self.coordinator = coordinator
+        self.process_id = coordinator.process_id
+        self.num_processes = coordinator.num_processes
+        local_ranks = None
+        if mesh is not None and self.num_processes > 1:
+            local_ranks = process_local_ranks(mesh)
+            if not local_ranks:
+                raise GroupError(
+                    f"process {self.process_id} owns no device of the mesh "
+                    f"{dict(mesh.shape)} — every participating process "
+                    "must contribute devices")
         self.memory = GlobalMemory(self.ndev, segment_bytes,
-                                   allocator=allocator)
+                                   allocator=allocator,
+                                   local_ranks=local_ranks,
+                                   coordinator=coordinator)
         self.groups: Dict[str, DiompGroup] = (
             standard_groups(mesh) if mesh is not None else {})
         self.streams = StreamPool(max_active=max_active_streams)
@@ -431,6 +466,68 @@ class DiompContext:
             name: g.validate(mesh).descriptor()
             for name, g in self.groups.items()
         } if mesh is not None else {}
+        if mesh is not None and self.num_processes > 1:
+            self._descriptor_handshake()
+
+    def _descriptor_handshake(self) -> None:
+        """The cross-process UniqueID handshake: every process broadcasts
+        its (group name -> descriptor) table + mesh signature; any
+        divergence means the processes did not construct consistent
+        communicators, and every process raises before a collective can
+        silently mismatch."""
+        mine = {
+            "descriptors": sorted(self._descriptors.items()),
+            "mesh": [list(self.mesh.shape.items()), self.ndev],
+        }
+        rows = self.coordinator.allgather(mine)
+        # compare post-JSON rows against my own round-tripped row, so the
+        # check sees value differences, not serialization artifacts
+        me = rows[self.process_id]
+        for pid, row in enumerate(rows):
+            if row != me:
+                raise GroupError(
+                    f"group-descriptor handshake failed: process {pid} "
+                    f"registered {row}, process {self.process_id} "
+                    f"registered {me} — inconsistent SPMD bootstrap")
+
+    @property
+    def multiprocess(self) -> bool:
+        return self.num_processes > 1
+
+    def gather_stats(self) -> list:
+        """Per-process log snapshot, allgathered for rank-vs-rank diffing.
+
+        Returns one dict per process (indexed by process id) holding that
+        process's logical OMPCCL call/byte logs, retry logs, and RMA
+        tracker counters.  In a single-process job this is a one-element
+        list around the local logs — same shape, no wire traffic — so
+        harnesses diff the same structure at any scale.  Collective: in a
+        multi-process job every process must call it at the same point.
+        """
+        snapshot = {
+            "process_id": self.process_id,
+            "stats": self.stats(),
+            "byte_stats": self.byte_stats(),
+            "retry_stats": self.retry_stats(),
+            "retry_byte_stats": self.retry_byte_stats(),
+            "rma": {
+                "puts": self.rma.puts,
+                "fences": self.rma.fences,
+                "put_bytes": self.rma.put_bytes,
+                "window_bytes": dict(self.rma.window_bytes),
+                "retry_puts": self.rma.retry_puts,
+                "retry_bytes": self.rma.retry_bytes,
+            },
+            "pgas": {
+                "alloc_counts": dict(self.memory.alloc_counts),
+                "regions": [
+                    [r["name"], bool(r["symmetric"]), list(r["bytes"]),
+                     list(r["offsets"])]
+                    for r in self.memory.mapping_table()
+                ],
+            },
+        }
+        return self.coordinator.allgather(snapshot)
 
     # -- group management ---------------------------------------------------
     def group(self, name: str) -> DiompGroup:
@@ -495,9 +592,11 @@ class DiompContext:
 
     def __repr__(self) -> str:  # pragma: no cover - cosmetic
         shape = dict(self.mesh.shape) if self.mesh is not None else None
+        proc = (f", process={self.process_id}/{self.num_processes}"
+                if self.num_processes > 1 else "")
         return (f"DiompContext(ndev={self.ndev}, mesh={shape}, "
                 f"groups={sorted(self.groups)}, "
-                f"default_backend={self.default_backend!r})")
+                f"default_backend={self.default_backend!r}{proc})")
 
 
 # ---------------------------------------------------------------------------
@@ -523,13 +622,40 @@ def install_default(ctx: DiompContext) -> DiompContext:
     return ctx
 
 
-def init(mesh=None, **kwargs) -> DiompContext:
+def init(mesh=None, *, coordinator=None, num_processes: Optional[int] = None,
+         process_id: Optional[int] = None,
+         local_device_count: Optional[int] = None, **kwargs) -> DiompContext:
     """Create a :class:`DiompContext` and install it as the process default.
 
     ``diomp.init(mesh=...)`` is the one entry point the paper's listings
     assume: after it, both explicit handles (``ctx.communicator(...)``) and
     the compat free functions (``ompx_allreduce`` etc.) hit the same table.
+
+    Multi-controller SPMD entry (built on ``jax.distributed.initialize``)::
+
+        diomp.init(coordinator="host:1234", num_processes=4, process_id=i,
+                   local_device_count=2)      # join the job, no mesh yet
+        mesh = make_process_mesh(ndev_per_proc=2)
+        ctx = diomp.init(mesh=mesh)           # the process-aware context
+
+    ``coordinator`` is process 0's ``host:port`` (every process passes the
+    same address), or a ready
+    :class:`~repro.core.coordination.ProcessCoordinator` for tests that
+    stub the exchange.  The two-step shape exists because a mesh can only
+    be built *after* the job is joined (device visibility is per-process);
+    passing ``mesh`` together with ``coordinator`` does both at once.
     """
+    if isinstance(coordinator, str):
+        init_distributed(coordinator, num_processes, process_id,
+                         local_device_count=local_device_count)
+        coordinator = None
+    elif coordinator is None and (num_processes is not None
+                                  or process_id is not None):
+        raise ValueError(
+            "num_processes/process_id need coordinator='host:port' "
+            "(the jax.distributed coordination service address)")
+    if coordinator is not None:
+        kwargs["coordinator"] = coordinator
     return install_default(DiompContext(mesh=mesh, **kwargs))
 
 

@@ -1,0 +1,268 @@
+"""Multi-controller process coordination — the SPMD bootstrap layer.
+
+Everything before PR 10 ran one Python process driving N virtual XLA
+devices, so "coordination" was a loop over arenas that all lived in the
+same address space.  DiOMP's runtime is *multi-controller*: every process
+runs the same program, sees only its own devices, and global state (the
+PGAS mapping table, group descriptors, call/byte logs) is only consistent
+because the processes *exchange* their contributions (GASNet-EX's
+segment-exchange bootstrap, OMPCCL's UniqueID handshake).  This module is
+that exchange, in three pieces:
+
+* :func:`init_distributed` — ``jax.distributed.initialize`` wrapped with
+  the CPU (gloo) collectives knob and an idempotence guard; the transport
+  under ``diomp.init(coordinator=...)``.
+* :class:`ProcessCoordinator` — host-metadata allgather/broadcast/barrier
+  over the initialized jax runtime.  :class:`LocalCoordinator` is the
+  single-process no-op (today's behavior, bit for bit);
+  :class:`JaxCoordinator` moves JSON payloads over device collectives via
+  ``jax.experimental.multihost_utils``.  Both are deterministic: every
+  process receives the identical, process-indexed list.
+* :func:`fetch_global` — materialize a (possibly non-addressable) global
+  ``jax.Array`` as a full numpy array on every process, the harness's way
+  of comparing outputs bit-for-bit across runs with different process
+  counts.
+
+Design rule: everything here is **collective** — either every process of
+the job calls it in the same order, or none does.  The PGAS allocator and
+the context handshake are built on that discipline, mirroring the paper's
+"all participating nodes coordinate" allocation contract.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, List, Optional, Sequence
+
+__all__ = [
+    "CoordinationError",
+    "ProcessCoordinator",
+    "LocalCoordinator",
+    "JaxCoordinator",
+    "coordinator_for",
+    "init_distributed",
+    "is_distributed",
+    "fetch_global",
+    "process_local_ranks",
+]
+
+
+class CoordinationError(RuntimeError):
+    """Raised when the multi-controller bootstrap or an exchange fails."""
+
+
+# ---------------------------------------------------------------------------
+# jax.distributed bootstrap
+# ---------------------------------------------------------------------------
+
+_initialized = False
+
+
+def is_distributed() -> bool:
+    """True once :func:`init_distributed` has run in this process."""
+    return _initialized
+
+
+def init_distributed(
+    coordinator: str,
+    num_processes: Optional[int] = None,
+    process_id: Optional[int] = None,
+    *,
+    local_device_count: Optional[int] = None,
+) -> tuple:
+    """Join the multi-controller job; returns ``(process_id, num_processes)``.
+
+    ``coordinator`` is the ``host:port`` of process 0's coordination
+    service (the GASNet-EX conduit bootstrap analogue);  ``num_processes``
+    / ``process_id`` may be None when the cluster environment provides
+    them (SLURM & co. auto-detection in ``jax.distributed``).
+
+    ``local_device_count`` pins the number of virtual CPU devices this
+    process exposes and must be set BEFORE anything initializes jax —
+    we set ``XLA_FLAGS`` here and raise if jax already has a backend with
+    a different count (device visibility is per-process and immutable).
+
+    Idempotent: a second call with the same topology is a no-op; a second
+    call with a different one raises :class:`CoordinationError`.
+    """
+    global _initialized
+    import jax
+
+    if local_device_count is not None and not _initialized:
+        flag = f"--xla_force_host_platform_device_count={local_device_count}"
+        cur = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in cur:
+            os.environ["XLA_FLAGS"] = (cur + " " + flag).strip()
+
+    if _initialized:
+        if process_id is not None and jax.process_index() != process_id:
+            raise CoordinationError(
+                f"init_distributed called twice with different process_id "
+                f"({jax.process_index()} then {process_id})")
+        return (jax.process_index(), jax.process_count())
+
+    # CPU collectives need the gloo transport to cross process boundaries;
+    # on TPU/GPU the platform transport is already cross-process.
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except Exception:  # pragma: no cover - very old/new jax: flag renamed
+        pass
+    try:
+        jax.distributed.initialize(
+            coordinator_address=coordinator,
+            num_processes=num_processes,
+            process_id=process_id,
+        )
+    except Exception as e:
+        raise CoordinationError(
+            f"jax.distributed.initialize({coordinator!r}, "
+            f"num_processes={num_processes}, process_id={process_id}) "
+            f"failed: {e}") from e
+    _initialized = True
+    return (jax.process_index(), jax.process_count())
+
+
+# ---------------------------------------------------------------------------
+# host-metadata exchange
+# ---------------------------------------------------------------------------
+
+
+class ProcessCoordinator:
+    """Deterministic host-metadata exchange among the job's processes.
+
+    The unit of exchange is a JSON-serializable object; every collective
+    returns the same process-indexed list on every process.  Subclasses
+    provide :meth:`allgather_bytes`; the object layer is shared.
+    """
+
+    process_id: int = 0
+    num_processes: int = 1
+
+    def allgather_bytes(self, payload: bytes) -> List[bytes]:
+        raise NotImplementedError
+
+    def allgather(self, obj: Any) -> List[Any]:
+        """Every process contributes ``obj``; all receive ``[obj_0..obj_n]``.
+
+        JSON round-trips the payload, so tuples come back as lists —
+        callers normalize shapes themselves (the PGAS layer does).
+        """
+        rows = self.allgather_bytes(
+            json.dumps(obj, sort_keys=True).encode("utf-8"))
+        return [json.loads(r.decode("utf-8")) for r in rows]
+
+    def broadcast(self, obj: Any, *, root: int = 0) -> Any:
+        return self.allgather(obj)[root]
+
+    def agree(self, obj: Any) -> bool:
+        """True iff every process contributed an identical value."""
+        rows = self.allgather(obj)
+        return all(r == rows[0] for r in rows[1:]) if rows else True
+
+    def barrier(self, tag: str = "barrier") -> None:
+        self.allgather_bytes(tag.encode("utf-8"))
+
+
+class LocalCoordinator(ProcessCoordinator):
+    """The single-process job: every exchange is the identity."""
+
+    def allgather_bytes(self, payload: bytes) -> List[bytes]:
+        return [payload]
+
+    def barrier(self, tag: str = "barrier") -> None:
+        pass
+
+
+class JaxCoordinator(ProcessCoordinator):
+    """Exchange over the initialized ``jax.distributed`` runtime.
+
+    Payloads ride device collectives (``multihost_utils``): lengths are
+    exchanged first, then the max-length-padded byte rows — two tiny
+    allgathers per exchange, which is bootstrap/audit traffic, never a hot
+    path.
+    """
+
+    def __init__(self):
+        import jax
+
+        if jax.process_count() <= 1:
+            # legal (a 1-process distributed job) — behaves like Local
+            pass
+        self.process_id = jax.process_index()
+        self.num_processes = jax.process_count()
+
+    def allgather_bytes(self, payload: bytes) -> List[bytes]:
+        import numpy as np
+        from jax.experimental import multihost_utils
+
+        if self.num_processes == 1:
+            return [payload]
+        lens = multihost_utils.process_allgather(np.int64(len(payload)))
+        lens = np.asarray(lens).reshape(self.num_processes)
+        width = max(int(lens.max()), 1)
+        row = np.zeros(width, np.uint8)
+        row[: len(payload)] = np.frombuffer(payload, np.uint8)
+        rows = np.asarray(multihost_utils.process_allgather(row))
+        rows = rows.reshape(self.num_processes, width)
+        return [bytes(rows[i, : int(lens[i])])
+                for i in range(self.num_processes)]
+
+
+def coordinator_for(mesh=None) -> ProcessCoordinator:
+    """The coordinator matching the active jax runtime.
+
+    Single-process jobs (including every pre-PR-10 test) get the
+    :class:`LocalCoordinator` — no jax traffic, identical semantics.
+    ``mesh`` is accepted for call-site symmetry; topology comes from the
+    process, not the mesh (a mesh never spans more processes than the
+    job).
+    """
+    del mesh
+    import jax
+
+    if not _initialized and jax.process_count() == 1:
+        return LocalCoordinator()
+    return JaxCoordinator()
+
+
+# ---------------------------------------------------------------------------
+# global-array materialization + device/rank topology
+# ---------------------------------------------------------------------------
+
+
+def fetch_global(x):
+    """Full logical value of ``x`` as numpy, on every process.
+
+    Single-process (or fully-addressable) arrays take the plain
+    ``np.asarray`` path — unchanged behavior and no wire traffic.  A
+    multi-process sharded array is assembled with one cross-process
+    allgather; the result is bit-identical on every process, which is what
+    the equivalence harness diffs across runs.
+    """
+    import numpy as np
+
+    if getattr(x, "is_fully_addressable", True):
+        return np.asarray(x)
+    from jax.experimental import multihost_utils
+
+    return np.asarray(multihost_utils.process_allgather(x, tiled=True))
+
+
+def process_local_ranks(mesh) -> List[int]:
+    """Global ranks (flat positions in ``mesh.devices``) owned by me.
+
+    Rank order is mesh order — the same order the PGAS arenas, group
+    rings and collective permutes use — so ``local_ranks`` indexes
+    straight into per-rank tables.
+    """
+    import jax
+
+    me = jax.process_index()
+    return [i for i, d in enumerate(mesh.devices.flat)
+            if d.process_index == me]
+
+
+def device_process_map(mesh) -> List[int]:
+    """Per-global-rank owning process ids, in mesh order."""
+    return [int(d.process_index) for d in mesh.devices.flat]

@@ -29,6 +29,7 @@ import itertools
 import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from .coordination import LocalCoordinator, ProcessCoordinator
 from .groups import DiompGroup
 
 __all__ = [
@@ -363,6 +364,19 @@ class GlobalMemory:
     ``nranks`` is the number of participants of the world group (devices).
     ``segment_bytes`` models each device's registered global segment (on v5e:
     the HBM slice the runtime plans into, default 16 GB).
+
+    Multi-controller mode: in a multi-process job each process *owns* only
+    the arenas of its ``local_ranks`` (device visibility is per-process);
+    remote ranks have no arena object here at all.  Every collective
+    allocation then runs the paper's "all participating nodes coordinate"
+    protocol over ``coordinator``: symmetric allocs agree on one common
+    offset from the *intersection of every process's free extents* (not a
+    single process's view), asymmetric allocs assemble the global
+    size/offset vectors from per-process contributions, and any process's
+    local failure is voted into a collective failure so all processes
+    raise (or commit) together.  The default — all ranks local, a
+    :class:`~repro.core.coordination.LocalCoordinator` — is bit-for-bit
+    the old single-controller behavior.
     """
 
     def __init__(
@@ -370,13 +384,30 @@ class GlobalMemory:
         nranks: int,
         segment_bytes: int = 16 * 2**30,
         allocator: str = "linear",
+        *,
+        local_ranks: Optional[Sequence[int]] = None,
+        coordinator: Optional[ProcessCoordinator] = None,
     ):
         if nranks <= 0:
             raise ValueError("nranks must be positive")
         self.nranks = nranks
         self.segment_bytes = segment_bytes
+        self.coordinator = coordinator if coordinator is not None \
+            else LocalCoordinator()
+        if local_ranks is None:
+            local_ranks = range(nranks)
+        self.local_ranks: Tuple[int, ...] = tuple(int(r) for r in local_ranks)
+        if not self.local_ranks:
+            raise ValueError("a process must own at least one rank")
+        for r in self.local_ranks:
+            if not 0 <= r < nranks:
+                raise ValueError(f"local rank {r} outside [0, {nranks})")
         alloc_cls = {"linear": LinearAllocator, "buddy": BuddyAllocator}[allocator]
-        self._arenas = [alloc_cls(segment_bytes) for _ in range(nranks)]
+        local = set(self.local_ranks)
+        self._arenas: List[Optional[object]] = [
+            alloc_cls(segment_bytes) if r in local else None
+            for r in range(nranks)
+        ]
         self._slp_arena = LinearAllocator(2**20)  # symmetric 1 MiB SLP table
         self._regions: Dict[int, Region] = {}
         self._slps: Dict[int, SecondLevelPtr] = {}
@@ -388,6 +419,25 @@ class GlobalMemory:
         # against these (page churn must NOT translate into arena churn —
         # see docs/SERVING.md).
         self.alloc_counts = {"symmetric": 0, "asymmetric": 0, "free": 0}
+
+    @property
+    def multiprocess(self) -> bool:
+        return self.coordinator.num_processes > 1
+
+    def _local_arenas(self):
+        """(rank, arena) pairs this process owns, in rank order."""
+        return [(r, self._arenas[r]) for r in self.local_ranks]
+
+    def _arena(self, rank: int):
+        if not 0 <= rank < self.nranks:
+            raise AllocError(f"rank {rank} outside [0, {self.nranks})")
+        arena = self._arenas[rank]
+        if arena is None:
+            raise AllocError(
+                f"rank {rank} is not process-local (this process owns "
+                f"{self.local_ranks}); remote arenas are reachable only "
+                "through the coordinated collective calls")
+        return arena
 
     # -- collective allocation (paper: "all participating nodes coordinate") --
     def alloc_symmetric(
@@ -404,30 +454,41 @@ class GlobalMemory:
         Fast path: arenas still in lockstep (collective alloc/free only)
         hand out identical offsets independently.  Once asymmetric
         allocations have diverged the arenas, the collective falls back to
-        a *coordinated* allocation: intersect every rank's free extents and
-        commit the first common offset on all ranks (the paper's "all
-        participating nodes coordinate").
+        a *coordinated* allocation: intersect every rank's free extents —
+        across all processes in a multi-controller job — and commit the
+        first common offset on all ranks (the paper's "all participating
+        nodes coordinate").
         """
         with self._lock:
             self.alloc_counts["symmetric"] += 1
             offsets = []
             done = []
             try:
-                for arena in self._arenas:
+                for _, arena in self._local_arenas():
                     offsets.append(arena.alloc(size))
                     done.append(arena)
             except AllocError:
                 for arena, off in zip(done, offsets):
                     arena.free(off)
                 offsets, done = [], []
-            if offsets and len(set(offsets)) != 1:
-                # arenas diverged (asymmetric churn): retry coordinated
+            candidate = offsets[0] if offsets and len(set(offsets)) == 1 \
+                else -1
+            if self.multiprocess:
+                # one common offset needs *global* agreement, not just the
+                # local arenas': vote the candidate across processes
+                votes = self.coordinator.allgather(candidate)
+                if candidate >= 0 and any(v != candidate for v in votes):
+                    candidate = -1
+            if candidate < 0 and offsets:
+                # diverged (asymmetric churn, or a remote process saw a
+                # different offset): roll back and retry coordinated
                 for arena, off in zip(done, offsets):
                     arena.free(off)
                 offsets = []
             if not offsets:
                 common = self._alloc_common_offset(size)
-                offsets = [common] * self.nranks
+                offsets = [common] * len(self.local_ranks)
+            offsets = self._assemble_symmetric(offsets)
             region = Region(
                 rid=next(self._rid),
                 name=name,
@@ -441,11 +502,21 @@ class GlobalMemory:
             self._regions[region.rid] = region
             return region
 
+    def _assemble_symmetric(self, local_offsets: List[int]) -> List[int]:
+        """Expand the agreed common offset to the global per-rank vector
+        (symmetric by construction: one offset everywhere)."""
+        return [local_offsets[0]] * self.nranks
+
     def _alloc_common_offset(self, size: int) -> int:
         """Coordinated symmetric allocation across diverged arenas.
 
-        Intersects all ranks' free extents and commits the first aligned
-        offset every arena can honor; rolls back cleanly per candidate.
+        Intersects all ranks' free extents — every process contributes its
+        *local* arenas' extents, and the global intersection is computed
+        identically everywhere from the exchanged lists — then commits the
+        first aligned offset every arena of every process can honor.  A
+        candidate any process cannot place is rolled back on all of them
+        (a per-candidate commit vote), so the chosen offset is common by
+        protocol, not by assumption.
         """
 
         def intersect(a: List[Tuple[int, int]], b: List[Tuple[int, int]]):
@@ -462,36 +533,54 @@ class GlobalMemory:
                     j += 1
             return out
 
-        exts = sorted(self._arenas[0].free_extents())
-        for arena in self._arenas[1:]:
+        local = self._local_arenas()
+        exts = sorted(local[0][1].free_extents())
+        for _, arena in local[1:]:
             exts = intersect(exts, sorted(arena.free_extents()))
-        align = max(arena.alignment_for(size) for arena in self._arenas)
+        align = max(arena.alignment_for(size) for _, arena in local)
+        if self.multiprocess:
+            # per-process contributions -> one global view on every process
+            contributions = self.coordinator.allgather(
+                {"extents": [list(e) for e in exts], "align": align})
+            exts = [tuple(e) for e in contributions[0]["extents"]]
+            for contrib in contributions[1:]:
+                exts = intersect(
+                    exts, [tuple(e) for e in contrib["extents"]])
+            align = max(int(c["align"]) for c in contributions)
         needed = _align_up(max(size, 1), align)
         for off, ext in exts:
             cand = _align_up(off, align)
             if cand + needed > off + ext:
                 continue
             placed = []
+            ok = True
             try:
-                for arena in self._arenas:
+                for _, arena in local:
                     arena.alloc_at(cand, size)
                     placed.append(arena)
             except AllocError:
-                for arena in placed:
-                    arena.free(cand)
-                continue
-            return cand
+                ok = False
+            if self.multiprocess:
+                ok = all(self.coordinator.allgather(ok))
+            if ok:
+                return cand
+            for arena in placed:
+                arena.free(cand)
         raise AllocError(
             f"no common symmetric offset for {size} bytes across "
-            f"{self.nranks} diverged arenas")
+            f"{self.nranks} diverged arenas"
+            + (f" on {self.coordinator.num_processes} processes"
+               if self.multiprocess else ""))
 
     def alloc_asymmetric(
         self,
         name: str,
-        sizes: Sequence[int],
-        group: DiompGroup,
+        sizes: Optional[Sequence[int]] = None,
+        group: DiompGroup = None,
         logical_axes: Tuple[Optional[str], ...] = (),
         dtype: str = "bfloat16",
+        *,
+        local_sizes: Optional[Sequence[int]] = None,
     ) -> SecondLevelPtr:
         """Per-rank sizes differ; returns the second-level pointer handle.
 
@@ -501,28 +590,51 @@ class GlobalMemory:
         A size of 0 means the rank holds NO payload at all (fully ragged
         allocation — e.g. a KV page homed on one rank): only the symmetric
         32-byte wrapper exists there, recorded as offset -1.
+
+        Multi-controller extent exchange: callers pass either the full
+        global ``sizes`` vector (every process must pass the same one —
+        verified collectively, a torn bootstrap raises everywhere) or
+        ``local_sizes`` covering only this process's :attr:`local_ranks`;
+        the global vector is then *assembled from per-process
+        contributions*.  Either way each process places payloads only in
+        its own arenas, and the per-rank offsets of the mapping-table
+        entry are exchanged so every process records the identical,
+        globally-consistent :class:`Region`.
         """
+        if (sizes is None) == (local_sizes is None):
+            raise ValueError("pass exactly one of sizes / local_sizes")
+        if local_sizes is not None:
+            if len(local_sizes) != len(self.local_ranks):
+                raise ValueError(
+                    f"need {len(self.local_ranks)} local sizes for ranks "
+                    f"{self.local_ranks}, got {len(local_sizes)}")
+            sizes = self._exchange_sizes(local_sizes)
         if len(sizes) != self.nranks:
             raise ValueError(f"need {self.nranks} sizes, got {len(sizes)}")
         with self._lock:
             self.alloc_counts["asymmetric"] += 1
             slot = self._slp_arena.alloc(_SLP_BYTES)
-            offsets = []
-            done = []
+            offsets = {}
+            ok = True
             try:
-                for arena, size in zip(self._arenas, sizes):
-                    if size <= 0:
-                        offsets.append(-1)
-                        done.append(None)
-                    else:
-                        offsets.append(arena.alloc(size))
-                        done.append(arena)
+                for rank, arena in self._local_arenas():
+                    size = sizes[rank]
+                    offsets[rank] = -1 if size <= 0 else arena.alloc(size)
             except AllocError:
-                for arena, off in zip(done, offsets):
-                    if arena is not None:
-                        arena.free(off)
+                ok = False
+            err = None
+            if self.multiprocess:
+                offsets, ok, err = self._exchange_asymmetric(
+                    sizes, offsets, slot, ok)
+            if not ok:
+                for rank, off in offsets.items():
+                    if off >= 0 and self._arenas[rank] is not None:
+                        self._arenas[rank].free(off)
                 self._slp_arena.free(slot)
-                raise
+                raise AllocError(
+                    err or f"asymmetric allocation {name!r} failed "
+                    "collectively (no room on at least one rank)")
+            offsets = [offsets.get(r, -1) for r in range(self.nranks)]
             region = Region(
                 rid=next(self._rid),
                 name=name,
@@ -538,6 +650,56 @@ class GlobalMemory:
             self._slps[region.rid] = slp
             return slp
 
+    def _exchange_sizes(self, local_sizes: Sequence[int]) -> List[int]:
+        """Assemble the global size vector from per-process contributions
+        (each process speaks only for its own ranks)."""
+        payload = [[int(r), int(s)]
+                   for r, s in zip(self.local_ranks, local_sizes)]
+        rows = self.coordinator.allgather(payload)
+        full: Dict[int, int] = {}
+        for row in rows:
+            for r, s in row:
+                if int(r) in full:
+                    raise AllocError(
+                        f"extent exchange: rank {r} contributed twice "
+                        "(overlapping local_ranks across processes)")
+                full[int(r)] = int(s)
+        if sorted(full) != list(range(self.nranks)):
+            raise AllocError(
+                f"extent exchange covered ranks {sorted(full)}, "
+                f"expected 0..{self.nranks - 1}")
+        return [full[r] for r in range(self.nranks)]
+
+    def _exchange_asymmetric(self, sizes, offsets, slot, ok):
+        """One collective round that (a) verifies every process ran the
+        same allocation (sizes + SLP slot agree — a torn bootstrap fails
+        everywhere), (b) votes local placement success into a collective
+        verdict, and (c) assembles the global per-rank offset vector from
+        each owner's contribution."""
+        payload = {
+            "ok": bool(ok),
+            "slot": int(slot),
+            "sizes": [int(s) for s in sizes],
+            "offsets": [[int(r), int(o)] for r, o in sorted(offsets.items())],
+        }
+        rows = self.coordinator.allgather(payload)
+        err = None
+        if any(row["sizes"] != payload["sizes"] for row in rows):
+            err = ("asymmetric extent exchange: processes disagree on the "
+                   "per-rank size vector (torn SPMD bootstrap)")
+        elif any(row["slot"] != payload["slot"] for row in rows):
+            err = ("asymmetric allocation: second-level-pointer slots "
+                   "diverged across processes (SLP arenas out of lockstep)")
+        if err is not None:
+            return offsets, False, err
+        if not all(row["ok"] for row in rows):
+            return offsets, False, None
+        merged: Dict[int, int] = {}
+        for row in rows:
+            for r, o in row["offsets"]:
+                merged[int(r)] = int(o)
+        return merged, True, None
+
     def free(self, handle) -> None:
         """Collective free; invalidates any cached remote pointers."""
         region = handle.region if isinstance(handle, SecondLevelPtr) else handle
@@ -546,7 +708,9 @@ class GlobalMemory:
             if region.rid not in self._regions:
                 raise AllocError(f"double free of region {region.name!r}")
             for arena, off in zip(self._arenas, region.offsets):
-                if off < 0:      # zero-size rank: nothing was placed there
+                if off < 0 or arena is None:
+                    # zero-size rank, or a rank another process owns:
+                    # nothing was placed in *this* process's arenas
                     continue
                 arena.free(off)
             slp = self._slps.pop(region.rid, None)
@@ -569,15 +733,15 @@ class GlobalMemory:
 
     # -- introspection ----------------------------------------------------------
     def bytes_in_use(self, rank: int = 0) -> int:
-        return self._arenas[rank].bytes_in_use
+        return self._arena(rank).bytes_in_use
 
     def bytes_free(self, rank: int = 0) -> int:
-        return self._arenas[rank].bytes_free
+        return self._arena(rank).bytes_free
 
     def capacity(self, rank: int = 0) -> int:
         """Actual arena capacity (the buddy allocator rounds the segment up
         to a power of two)."""
-        return self._arenas[rank].capacity
+        return self._arena(rank).capacity
 
     def regions(self) -> List[Region]:
         return list(self._regions.values())
@@ -599,5 +763,5 @@ class GlobalMemory:
         ]
 
     def check_invariants(self) -> None:
-        for arena in self._arenas:
+        for _, arena in self._local_arenas():
             arena.check_invariants()

@@ -1,14 +1,24 @@
-"""Production + smoke meshes.
+"""Production + smoke + multi-process meshes.
 
 Functions, not module-level constants: importing this module never touches
 jax device state (the dry-run must set XLA_FLAGS before any jax init).
+
+Single-controller tests use :func:`make_smoke_mesh` (all devices live in
+this process).  Multi-controller jobs — joined via
+``diomp.init(coordinator=...)`` — use :func:`make_process_mesh`, which
+validates the per-process device count and process count against the
+actual runtime before building a mesh over the *global* device set, so a
+mis-launched job fails with a topology error instead of a hang inside the
+first collective.
 """
 
 from __future__ import annotations
 
+from typing import Optional, Sequence, Tuple
+
 from repro.core.compat import make_mesh
 
-__all__ = ["make_production_mesh", "make_smoke_mesh"]
+__all__ = ["make_production_mesh", "make_smoke_mesh", "make_process_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,10 +28,97 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_mesh(shape, axes, axis_types="auto")
 
 
-def make_smoke_mesh(ndev: int = 8, *, pods: bool = True):
-    """Small CPU mesh for tests/examples (8 virtual devices by default)."""
+def _smoke_shape(ndev: int, pods: bool) -> Tuple[Tuple[int, ...],
+                                                 Tuple[str, ...]]:
     if pods and ndev % 4 == 0:
-        shape, axes = (2, ndev // 4, 2), ("pod", "data", "model")
+        return (2, ndev // 4, 2), ("pod", "data", "model")
+    return (max(ndev // 2, 1), min(ndev, 2)), ("data", "model")
+
+
+def make_smoke_mesh(ndev: int = 8, *, pods: bool = True):
+    """Small CPU mesh for tests/examples (8 virtual devices by default).
+
+    ``ndev`` is validated against the devices this runtime actually has:
+    asking for more than exist fails here with the fix spelled out, not
+    deep inside ``jax.make_mesh`` with a shape error.
+    """
+    import jax
+
+    if ndev <= 0:
+        raise ValueError(f"ndev must be positive, got {ndev}")
+    avail = jax.device_count()
+    if ndev > avail:
+        raise ValueError(
+            f"make_smoke_mesh(ndev={ndev}) needs {ndev} devices but the "
+            f"runtime has {avail} (local={jax.local_device_count()}, "
+            f"processes={jax.process_count()}); raise "
+            "--xla_force_host_platform_device_count in XLA_FLAGS or "
+            "launch more processes")
+    shape, axes = _smoke_shape(ndev, pods)
+    return make_mesh(shape, axes, axis_types="auto")
+
+
+def make_process_mesh(
+    ndev_per_proc: Optional[int] = None,
+    num_processes: Optional[int] = None,
+    *,
+    shape: Optional[Sequence[int]] = None,
+    axes: Optional[Sequence[str]] = None,
+    pods: bool = False,
+):
+    """Mesh over the **global** device set of a multi-controller job.
+
+    ``ndev_per_proc`` / ``num_processes`` default to the runtime's actual
+    topology; passing them pins the expectation and raises if the launch
+    does not match (the harness passes both, so a worker that came up with
+    the wrong device visibility dies loudly).  ``shape``/``axes`` override
+    the default layout (e.g. ``shape=(n,), axes=("x",)`` for ring suites);
+    the default is the smoke-mesh layout over ``ndev_per_proc *
+    num_processes`` devices.
+
+    Device order is jax's global order — process-major, so consecutive
+    mesh positions within a process's block are process-local and every
+    process computes the identical global layout.
+    """
+    import jax
+
+    actual_local = jax.local_device_count()
+    actual_procs = jax.process_count()
+    if ndev_per_proc is None:
+        ndev_per_proc = actual_local
+    if num_processes is None:
+        num_processes = actual_procs
+    if ndev_per_proc != actual_local:
+        raise ValueError(
+            f"make_process_mesh(ndev_per_proc={ndev_per_proc}) but this "
+            f"process sees {actual_local} local devices — set "
+            "local_device_count in diomp.init / XLA_FLAGS before jax "
+            "initializes")
+    if num_processes != actual_procs:
+        raise ValueError(
+            f"make_process_mesh(num_processes={num_processes}) but the "
+            f"job has {actual_procs} processes — check the "
+            "jax.distributed launch (coordinator/num_processes/"
+            "process_id)")
+    total = ndev_per_proc * num_processes
+    if jax.device_count() != total:
+        raise ValueError(
+            f"runtime reports {jax.device_count()} global devices, "
+            f"expected {ndev_per_proc} x {num_processes} = {total}")
+    if shape is None:
+        shape, default_axes = _smoke_shape(total, pods)
+        axes = tuple(axes) if axes is not None else default_axes
     else:
-        shape, axes = (max(ndev // 2, 1), min(ndev, 2)), ("data", "model")
+        shape = tuple(int(s) for s in shape)
+        if axes is None:
+            raise ValueError("explicit shape needs explicit axes")
+        axes = tuple(axes)
+    import math
+
+    if math.prod(shape) != total:
+        raise ValueError(
+            f"mesh shape {shape} covers {math.prod(shape)} devices, the "
+            f"job has {total}")
+    if len(shape) != len(axes):
+        raise ValueError(f"shape {shape} vs axes {axes} rank mismatch")
     return make_mesh(shape, axes, axis_types="auto")

@@ -1,0 +1,65 @@
+"""Session fixtures: one harness launch per topology, shared by tests.
+
+Each fixture is a full multi-process run (real OS processes, each with
+its own jax runtime) of the same SPMD worker program; tests then diff
+the per-process JSON results.  Launches are cached for the session and
+an infra-unavailable outcome (worker exit 77, e.g. a sandbox that
+forbids localhost sockets) turns into a skip, so the tier-1 suite
+degrades gracefully instead of failing on machines that cannot fork
+a jax.distributed job.
+"""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import mp_launcher  # noqa: E402
+
+COMPUTE_CASES = ["pgas", "ring_matmul", "minimod", "moe_dispatch",
+                 "ring_attention", "grad_buckets", "determinism"]
+CHAOS_SEED = 1234
+
+_cache = {}
+
+
+def _run(key, **kw):
+    if key not in _cache:
+        try:
+            _cache[key] = mp_launcher.launch(**kw)
+        except mp_launcher.MultiprocUnavailable as e:
+            _cache[key] = e
+    val = _cache[key]
+    if isinstance(val, mp_launcher.MultiprocUnavailable):
+        pytest.skip(f"multi-process harness unavailable: {val}")
+    return val
+
+
+@pytest.fixture(scope="session")
+def baseline():
+    """Single process, 4 virtual devices — today's tier-1 topology."""
+    return _run("1x4", cases=COMPUTE_CASES, num_processes=1,
+                ndev_per_proc=4, tag="1x4")
+
+
+@pytest.fixture(scope="session")
+def two_proc():
+    """2 real processes x 2 devices each (same 4 global devices)."""
+    return _run("2x2", cases=COMPUTE_CASES, num_processes=2,
+                ndev_per_proc=2, tag="2x2")
+
+
+@pytest.fixture(scope="session")
+def four_proc():
+    """4 real processes x 1 device each — every rank a separate host."""
+    return _run("4x1", cases=COMPUTE_CASES, num_processes=4,
+                ndev_per_proc=1, tag="4x1")
+
+
+@pytest.fixture(scope="session")
+def chaos_two():
+    """2x2 with DIOMP_CHAOS_* armed in the workers' environment."""
+    return _run("2x2-chaos", cases=["chaos_ring"], num_processes=2,
+                ndev_per_proc=2, chaos_seed=CHAOS_SEED, tag="2x2-chaos")

@@ -1,0 +1,155 @@
+"""Subprocess launcher + tmpdir result rendezvous for the harness.
+
+``launch(cases, num_processes, ndev_per_proc)`` spawns ``num_processes``
+copies of :mod:`mp_worker` (each a REAL operating-system process with its
+own jax runtime and device visibility), pointed at a freshly-bound
+coordinator port on localhost.  Results rendezvous through per-process
+JSON files in a scratch directory; the launcher reaps every worker, maps
+the exit-code protocol (77 = infrastructure unavailable -> the caller
+skips) and returns the parsed, process-indexed result list.
+
+Environment contract:
+
+* each worker gets its own ``XLA_FLAGS`` (the launcher strips any
+  inherited forced-device-count so a worker only ever sees
+  ``ndev_per_proc`` devices) and ``PYTHONPATH=src``;
+* ambient ``DIOMP_CHAOS_*`` is stripped — the harness arms chaos
+  explicitly via ``chaos_seed`` so calm runs stay calm even under a
+  chaos-armed outer CI job;
+* ``DIOMP_MULTIPROC=0`` is the kill switch (everything skips);
+* ``DIOMP_MULTIPROC_ARTIFACTS`` redirects scratch dirs somewhere
+  CI can upload on failure.
+"""
+
+import json
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+WORKER = Path(__file__).with_name("mp_worker.py")
+INFRA_EXIT = 77
+DEFAULT_TIMEOUT_S = 600
+
+
+class MultiprocUnavailable(Exception):
+    """Multi-process execution can't run here; tests should skip."""
+
+
+class WorkerFailure(AssertionError):
+    """A worker failed for real (nonzero, non-77 exit or timeout)."""
+
+
+def _free_port():
+    with socket.socket() as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def _scratch_dir(tag):
+    root = os.environ.get("DIOMP_MULTIPROC_ARTIFACTS")
+    if root:
+        d = Path(root) / tag
+        d.mkdir(parents=True, exist_ok=True)
+        return d
+    return Path(tempfile.mkdtemp(prefix=f"diomp-mp-{tag}-"))
+
+
+def _worker_env(chaos_seed):
+    env = os.environ.copy()
+    # device visibility is the worker's own: never inherit a forced count
+    env.pop("XLA_FLAGS", None)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    for k in ("DIOMP_CHAOS_SEED", "DIOMP_CHAOS_P", "DIOMP_CHAOS_KINDS",
+              "DIOMP_CHAOS_VERBS"):
+        env.pop(k, None)
+    if chaos_seed is not None:
+        env["DIOMP_CHAOS_SEED"] = str(chaos_seed)
+        env["DIOMP_CHAOS_P"] = os.environ.get("DIOMP_MP_CHAOS_P", "0.15")
+        env["DIOMP_CHAOS_KINDS"] = "drop,fail"
+    return env
+
+
+def _tail(path, lines=40):
+    try:
+        text = Path(path).read_text(errors="replace").splitlines()
+        return "\n".join(text[-lines:])
+    except OSError:
+        return "<no log>"
+
+
+def launch(cases, num_processes, ndev_per_proc, *, chaos_seed=None,
+           timeout=DEFAULT_TIMEOUT_S, tag=None):
+    """Run ``cases`` under ``num_processes`` x ``ndev_per_proc`` devices.
+
+    Returns ``[result_0, ..., result_{n-1}]`` (one parsed JSON dict per
+    process).  Raises :class:`MultiprocUnavailable` when the run cannot
+    happen here (caller skips) and :class:`WorkerFailure` with the log
+    tails when a worker genuinely failed.
+    """
+    if os.environ.get("DIOMP_MULTIPROC", "1") == "0":
+        raise MultiprocUnavailable("disabled via DIOMP_MULTIPROC=0")
+    tag = tag or (f"{num_processes}x{ndev_per_proc}"
+                  + ("-chaos" if chaos_seed is not None else ""))
+    outdir = _scratch_dir(tag)
+    port = _free_port()
+    env = _worker_env(chaos_seed)
+    procs, logs = [], []
+    for pid in range(num_processes):
+        log_path = outdir / f"proc{pid}.log"
+        log = open(log_path, "w")
+        procs.append(subprocess.Popen(
+            [sys.executable, str(WORKER),
+             "--coordinator", f"127.0.0.1:{port}",
+             "--num-processes", str(num_processes),
+             "--process-id", str(pid),
+             "--ndev-per-proc", str(ndev_per_proc),
+             "--cases", ",".join(cases),
+             "--out", str(outdir / f"result{pid}.json")],
+            env=env, cwd=str(REPO), stdout=log,
+            stderr=subprocess.STDOUT))
+        logs.append((log, log_path))
+
+    deadline = time.monotonic() + timeout
+    rcs = []
+    try:
+        for p in procs:
+            rcs.append(p.wait(timeout=max(1.0,
+                                          deadline - time.monotonic())))
+    except subprocess.TimeoutExpired:
+        for p in procs:
+            p.kill()
+        for p in procs:
+            p.wait()
+        tails = "\n".join(f"--- proc{i} ---\n{_tail(lp)}"
+                          for i, (_, lp) in enumerate(logs))
+        raise WorkerFailure(
+            f"harness run {tag} timed out after {timeout}s\n{tails}")
+    finally:
+        for log, _ in logs:
+            log.close()
+
+    if any(rc == INFRA_EXIT for rc in rcs):
+        raise MultiprocUnavailable(
+            f"run {tag}: workers reported infra-unavailable "
+            f"(exit codes {rcs}); last log:\n{_tail(logs[0][1])}")
+    if any(rc != 0 for rc in rcs):
+        tails = "\n".join(f"--- proc{i} (exit {rcs[i]}) ---\n{_tail(lp)}"
+                          for i, (_, lp) in enumerate(logs))
+        raise WorkerFailure(f"harness run {tag} failed\n{tails}")
+
+    results = []
+    for pid in range(num_processes):
+        path = outdir / f"result{pid}.json"
+        if not path.exists():
+            raise WorkerFailure(
+                f"run {tag}: proc{pid} exited 0 without writing {path}")
+        with open(path) as fh:
+            results.append(json.load(fh))
+    return results

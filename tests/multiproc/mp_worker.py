@@ -1,0 +1,504 @@
+"""SPMD worker: one process of the cross-process equivalence harness.
+
+Launched by :mod:`mp_launcher` as ``python mp_worker.py --coordinator
+host:port --num-processes N --process-id I ...`` — never imported by
+pytest.  It joins the multi-controller job via
+``diomp.init(coordinator=...)``, runs the requested equivalence cases
+over the *global* device set, and writes a JSON result file whose
+digests the host-side tests diff bitwise across runs with different
+process counts (1x4 vs 2x2 vs 4x1).
+
+Every case follows the same discipline:
+
+* inputs are seeded numpy, built identically on every process (SPMD);
+* outputs are materialized with
+  :func:`repro.core.coordination.fetch_global` (bit-identical on every
+  process even when the sharded array is not fully addressable) and
+  reduced to sha256 digests;
+* the OMPCCL call/byte logs, retry logs, RMA tracker counters and the
+  PGAS mapping table are snapshotted via ``ctx.gather_stats()`` — a
+  collective — and checked rank-against-rank (``rank_parity``), then
+  digested for cross-run comparison (``logs_digest`` /
+  ``logical_digest``, the latter excluding retry traffic so it is
+  chaos-invariant).
+
+Exit codes: 0 = all cases ran; 77 = the multi-process infrastructure is
+unavailable (tests skip); anything else is a real failure.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import traceback
+
+INFRA_EXIT = 77
+
+
+# ---------------------------------------------------------------------------
+# digest + log-snapshot helpers
+# ---------------------------------------------------------------------------
+
+
+def _digest(arr):
+    import numpy as np
+
+    a = np.ascontiguousarray(np.asarray(arr))
+    h = hashlib.sha256()
+    h.update(str(a.dtype).encode())
+    h.update(repr(a.shape).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def _obj_digest(obj):
+    return hashlib.sha256(
+        json.dumps(obj, sort_keys=True).encode("utf-8")).hexdigest()
+
+
+def _log_report(ctx):
+    """Collective log snapshot -> parity flag + cross-run digests."""
+    rows = ctx.gather_stats()
+    canon = json.loads(json.dumps(
+        [{k: v for k, v in r.items() if k != "process_id"} for r in rows]))
+    parity = all(r == canon[0] for r in canon)
+    mine = canon[0]
+    logical = {k: mine[k] for k in ("stats", "byte_stats", "rma", "pgas")}
+    rma = {k: v for k, v in logical["rma"].items()
+           if k not in ("retry_puts", "retry_bytes")}
+    logical = dict(logical, rma=rma)
+    ompccl_put_bytes = sum(
+        int(d.get("put", 0)) for d in mine["byte_stats"].values())
+    return {
+        "rank_parity": parity,
+        "logs_digest": _obj_digest(canon),
+        "logical_digest": _obj_digest(logical),
+        "retry_total": sum(sum(d.values()) for d in
+                           mine["retry_stats"].values()),
+        "ompccl_put_bytes": ompccl_put_bytes,
+        "tracker_put_bytes": int(mine["rma"]["put_bytes"]),
+        "byte_parity": ompccl_put_bytes == int(mine["rma"]["put_bytes"]),
+    }
+
+
+def _ring_mesh():
+    import jax
+
+    from repro.launch.mesh import make_process_mesh
+
+    return make_process_mesh(shape=(jax.device_count(),), axes=("x",))
+
+
+# ---------------------------------------------------------------------------
+# cases
+# ---------------------------------------------------------------------------
+
+
+def _ring_matmul_payload(report_chaos):
+    import jax
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.compat import shard_map
+    from repro.core.context import DiompContext, use_default
+    from repro.core.coordination import fetch_global
+    from repro.core.groups import DiompGroup
+    from repro.kernels.ring_matmul.ops import ring_allgather_matmul
+    from repro.kernels.ring_matmul.ref import ring_allgather_matmul_ref
+
+    n = jax.device_count()
+    mesh = _ring_mesh()
+    group = DiompGroup(("x",), name="ring")
+    ctx = DiompContext(mesh=mesh, segment_bytes=1 << 20)
+    rng = np.random.RandomState(0)
+    A = rng.randn(4 * n, 24).astype(np.float32)
+    B = rng.randn(24, 8 * n).astype(np.float32)
+    out = {}
+    with use_default(ctx):
+        for impl in ("fused", "host"):
+            f = jax.jit(shard_map(
+                lambda a, b, impl=impl: ring_allgather_matmul(
+                    a, b, group, impl=impl),
+                mesh=mesh, in_specs=(P("x", None), P(None, "x")),
+                out_specs=P(None, "x")))
+            out[impl] = fetch_global(f(A, B))
+        r = jax.jit(shard_map(
+            lambda a, b: ring_allgather_matmul_ref(a, b, group),
+            mesh=mesh, in_specs=(P("x", None), P(None, "x")),
+            out_specs=P(None, "x")))
+        out["ref"] = fetch_global(r(A, B))
+    rep = {"digests": {k: _digest(v) for k, v in out.items()},
+           "fused_eq_ref": bool(np.array_equal(out["fused"], out["ref"])),
+           **_log_report(ctx)}
+    if report_chaos:
+        fp = ctx.fault_plan
+        rep["chaos"] = {
+            "armed": fp is not None,
+            "injected": dict(fp.injected_counts()) if fp else {},
+            "injected_total": len(fp.injected) if fp else 0,
+            "unrecovered": len(fp.unrecovered()) if fp else -1,
+        }
+    return rep
+
+
+def case_ring_matmul():
+    return _ring_matmul_payload(report_chaos=False)
+
+
+def case_chaos_ring():
+    """Same program as ring_matmul, run with DIOMP_CHAOS_* armed by the
+    launcher; the host test diffs ``logical_digest`` against the calm
+    run and asserts every injected fault was recovered."""
+    return _ring_matmul_payload(report_chaos=True)
+
+
+def case_minimod():
+    import jax
+
+    from repro.apps.minimod import run_minimod
+
+    n = jax.device_count()
+    runs = {
+        "fused": dict(grid=(8 * n, 8, 16), mode="fused"),
+        "host": dict(grid=(8 * n, 8, 16), mode="host"),
+        # asymmetric decomposition: rank 0 owns a double-weight slab
+        "weighted": dict(grid=(10 * n, 8, 16), mode="fused",
+                         weights=tuple(2.0 if r == 0 else 1.0
+                                       for r in range(n))),
+    }
+    out = {}
+    for tag, kw in runs.items():
+        grid = kw.pop("grid")
+        r = run_minimod(grid=grid, steps=2, nz=n, ny=1, **kw)
+        out[tag] = {
+            "digest": _digest(r.field),
+            "energy": float(r.energy),
+            "z_extents": list(r.z_extents),
+            "puts": int(r.puts),
+            "put_bytes": int(r.put_bytes),
+            "byte_parity": (r.puts == r.tracker_puts
+                            and r.put_bytes == r.tracker_put_bytes),
+            "region_sizes": list(r.region_sizes),
+            "alloc_counts": dict(r.alloc_counts),
+        }
+    return out
+
+
+def case_moe_dispatch():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.compat import shard_map
+    from repro.core.context import (DiompContext, default_context,
+                                    use_default)
+    from repro.core.coordination import fetch_global
+    from repro.core.groups import DiompGroup
+    from repro.kernels.moe_dispatch import (measure_expert_load,
+                                            moe_dispatch, moe_ref,
+                                            route_topk)
+    from repro.kernels.plan import default_planner
+
+    n = jax.device_count()
+    mesh = _ring_mesh()
+    group = DiompGroup(("x",), name="epx")
+    ctx = DiompContext(mesh=mesh, segment_bytes=1 << 22)
+    rng = np.random.RandomState(1)
+    E, t_loc, d, f, k = 8, 8, 16, 16, 2
+    toks = rng.randn(n * t_loc, d).astype(np.float32)
+    router = (rng.randn(d, E) + 2.0 * rng.randn(1, E)).astype(np.float32)
+    wg = (rng.randn(E, d, f) / np.sqrt(d)).astype(np.float32)
+    wu = (rng.randn(E, d, f) / np.sqrt(d)).astype(np.float32)
+    wd = (rng.randn(E, f, d) / np.sqrt(f)).astype(np.float32)
+    rep = {}
+    with use_default(ctx):
+        top_w, top_e = jax.jit(route_topk, static_argnums=2)(toks, router, k)
+        loads = measure_expert_load(
+            np.asarray(top_e).reshape(n, t_loc, k), E, sources=n)
+        plan = default_planner().plan_alltoall(t_loc, d, k, E, n,
+                                               jnp.float32, loads=loads)
+        want = np.asarray(moe_ref(jnp.asarray(toks), top_e, top_w,
+                                  jnp.asarray(wg), jnp.asarray(wu),
+                                  jnp.asarray(wd)))
+        rep["loads"] = [int(x) for x in loads]
+        rep["digests"] = {"ref": _digest(want)}
+        for impl in ("fused", "host"):
+            def fn(tk, rt, g, u, dn, impl=impl):
+                w, e = route_topk(tk, rt, k)
+                with default_context().dispatch_stats.collect() as ds:
+                    o = moe_dispatch(tk, e, w, g, u, dn, group,
+                                     impl=impl, plan=plan)
+                return o, ds["moe_dropped"].reshape(1)
+
+            jf = jax.jit(shard_map(
+                fn, mesh=mesh,
+                in_specs=(P("x", None), P(None, None), P("x", None, None),
+                          P("x", None, None), P("x", None, None)),
+                out_specs=(P("x", None), P("x"))))
+            o, dropped = jf(toks, router, wg, wu, wd)
+            o = fetch_global(o)
+            rep["digests"][impl] = _digest(o)
+            rep[f"{impl}_eq_ref"] = bool(np.array_equal(o, want))
+            rep[f"{impl}_dropped"] = float(
+                np.asarray(fetch_global(dropped)).sum())
+    rep.update(_log_report(ctx))
+    return rep
+
+
+def case_ring_attention():
+    import jax
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.compat import shard_map
+    from repro.core.context import DiompContext, use_default
+    from repro.core.coordination import fetch_global
+    from repro.core.groups import DiompGroup
+    from repro.kernels.ring_attention import ring_attention, \
+        ring_attention_ref
+
+    n = jax.device_count()
+    mesh = _ring_mesh()
+    group = DiompGroup(("x",), name="x")
+    ctx = DiompContext(mesh=mesh, segment_bytes=1 << 22)
+    rng = np.random.RandomState(2)
+    tq, H, KH, D, DV, B = 4, 4, 2, 8, 8, 2
+    T = n * tq
+    q = rng.randn(B, T, H, D).astype(np.float32)
+    kk = rng.randn(B, T, KH, D).astype(np.float32)
+    v = rng.randn(B, T, KH, DV).astype(np.float32)
+    spec = P(None, "x")
+    rep = {"digests": {}}
+    with use_default(ctx):
+        want = np.asarray(jax.jit(
+            lambda q, k, v: ring_attention_ref(q, k, v, n=n))(q, kk, v))
+        rep["digests"]["ref"] = _digest(want)
+        for impl in ("fused", "host"):
+            jf = jax.jit(shard_map(
+                lambda q, k, v, impl=impl: ring_attention(
+                    q, k, v, group, impl=impl),
+                mesh=mesh, in_specs=(spec,) * 3, out_specs=spec))
+            o = fetch_global(jf(q, kk, v))
+            rep["digests"][impl] = _digest(o)
+            rep[f"{impl}_eq_ref"] = bool(np.array_equal(o, want))
+    rep.update(_log_report(ctx))
+    return rep
+
+
+def case_grad_buckets():
+    import jax
+    import numpy as np
+
+    from repro import configs
+    from repro.core.compat import shard_map
+    from repro.core.context import DiompContext, use_default
+    from repro.core.coordination import fetch_global
+    from repro.distributed import buckets as bk
+    from repro.distributed.sharding import rules_for_ctx
+    from repro.launch.mesh import make_process_mesh
+    from repro.models import schema as sch
+    from repro.models.config import ParallelCtx
+    from repro.train.step import reduce_gradients
+
+    n = jax.device_count()
+    if n < 4 or n % 2:
+        return {"skipped": True}
+    mesh = make_process_mesh(shape=(2, n // 2), axes=("data", "model"))
+    cfg = configs.get_reduced("glm4-9b")
+    ctx_bk = ParallelCtx.from_mesh(mesh)
+    ctx_pp = ParallelCtx.from_mesh(mesh, bucket_bytes=0)
+    pspecs = sch.partition_specs(cfg, mesh, rules_for_ctx(ctx_bk))
+    plan = bk.plan_for_config(cfg, mesh, ctx_bk)
+    rng = np.random.RandomState(0)
+    grads = {name: rng.randn(*s.shape).astype(np.float32)
+             for name, s in sch.build_schema(cfg).items()}
+    gspecs = {name: pspecs[name] for name in sch.build_schema(cfg)}
+
+    def traced(pctx, plan_, dctx):
+        def red(g):
+            with use_default(dctx):
+                out, _ = reduce_gradients(g, cfg, pctx, pspecs=pspecs,
+                                          plan=plan_)
+            return out
+
+        return jax.jit(shard_map(red, mesh=mesh, in_specs=(gspecs,),
+                                 out_specs=gspecs))
+
+    d_bk = DiompContext(mesh=mesh, segment_bytes=1 << 20)
+    d_pp = DiompContext(mesh=mesh, segment_bytes=1 << 20)
+    out_bk = traced(ctx_bk, plan, d_bk)(grads)
+    out_pp = traced(ctx_pp, None, d_pp)(grads)
+    f_bk = {name: fetch_global(v) for name, v in sorted(out_bk.items())}
+    f_pp = {name: fetch_global(v) for name, v in sorted(out_pp.items())}
+    match = all(np.allclose(f_bk[name], f_pp[name], rtol=1e-5, atol=1e-6)
+                for name in f_bk)
+
+    def n_allreduce(d):
+        return sum(c.get("allreduce", 0) for c in d.stats().values())
+
+    # psum order may differ legally across process layouts, so the
+    # cross-run comparison uses float64 sums (tolerance), not digests —
+    # the digest is still recorded for the within-run rank-parity story.
+    return {
+        "digest": _obj_digest({name: _digest(v) for name, v in f_bk.items()}),
+        "sums": {name: float(np.float64(v).sum()) for name, v in
+                 f_bk.items()},
+        "bk_matches_perparam": bool(match),
+        "n_allreduce_bk": int(n_allreduce(d_bk)),
+        "n_allreduce_pp": int(n_allreduce(d_pp)),
+        "n_buckets": len(plan.buckets),
+        **_log_report(d_bk),
+    }
+
+
+def case_pgas():
+    import jax
+
+    from repro.core.context import DiompContext
+    from repro.core.groups import DiompGroup
+    from repro.core.pgas import AllocError
+
+    n = jax.device_count()
+    mesh = _ring_mesh()
+    group = DiompGroup(("x",), name="x")
+    ctx = DiompContext(mesh=mesh, segment_bytes=1 << 16)
+    mem = ctx.memory
+    r1 = mem.alloc_symmetric("sym-a", 2048, group)
+    # global-vector asymmetric: every process passes the same sizes
+    slp = mem.alloc_asymmetric("rag", [256 * (r + 1) for r in range(n)],
+                               group)
+    # per-process contribution: each process speaks only for its ranks
+    slp2 = mem.alloc_asymmetric(
+        "rag-local", group=group,
+        local_sizes=[384 * (r + 1) for r in mem.local_ranks])
+    # churn, then a symmetric alloc that must coordinate: after the ragged
+    # allocs the arenas have diverged, so the common offset comes from the
+    # free-extent intersection protocol, not the local fast path
+    mem.free(r1)
+    r2 = mem.alloc_symmetric("sym-b", 1024, group)
+    mem.check_invariants()
+    oversize_raises = False
+    try:
+        mem.alloc_symmetric("too-big", 1 << 20, group)
+    except AllocError:
+        oversize_raises = True
+    table = [
+        [row["name"], bool(row["symmetric"]), list(row["bytes"]),
+         list(row["offsets"])]
+        for row in sorted(mem.mapping_table(), key=lambda r: r["rid"])
+    ]
+    return {
+        "table": table,
+        "table_digest": _obj_digest(table),
+        "sym_b_offsets_identical": len(set(r2.offsets)) == 1,
+        "rag_offsets": list(slp.region.offsets),
+        "rag_local_sizes": list(slp2.region.sizes),
+        "oversize_raises": oversize_raises,
+        "alloc_counts": dict(mem.alloc_counts),
+        **_log_report(ctx),
+    }
+
+
+def case_determinism():
+    """Seeded substrates must be process-invariant: the fault schedule,
+    the sha256-derived RNG streams, and the serving arrival trace."""
+    from repro.core.faults import FaultPlan
+    from repro.core.resilience import derive_rng
+    from repro.serve.trace import bursty_trace
+
+    plan = FaultPlan(seed=1234, p=0.3, kinds=("drop", "fail", "timeout"))
+    stream = []
+    for i in range(240):
+        f = plan.next_fault(("put", "get", "allreduce")[i % 3])
+        stream.append(None if f is None else [f.verb, f.call_index, f.kind])
+    rngs = [[round(derive_rng("halo", i, tag).random(), 17)
+             for tag in ("x", "y")] for i in range(32)]
+    trace = [repr(r) for r in bursty_trace(seed=7, n=48)]
+    return {
+        "fault_digest": _obj_digest(stream),
+        "rng_digest": _obj_digest(rngs),
+        "trace_digest": _obj_digest(trace),
+        "injected_counts": plan.injected_counts(),
+    }
+
+
+CASES = {
+    "pgas": case_pgas,
+    "ring_matmul": case_ring_matmul,
+    "minimod": case_minimod,
+    "moe_dispatch": case_moe_dispatch,
+    "ring_attention": case_ring_attention,
+    "grad_buckets": case_grad_buckets,
+    "determinism": case_determinism,
+    "chaos_ring": case_chaos_ring,
+}
+
+
+# ---------------------------------------------------------------------------
+# main
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--coordinator", required=True)
+    ap.add_argument("--num-processes", type=int, required=True)
+    ap.add_argument("--process-id", type=int, required=True)
+    ap.add_argument("--ndev-per-proc", type=int, required=True)
+    ap.add_argument("--cases", required=True)
+    ap.add_argument("--out", required=True)
+    args = ap.parse_args(argv)
+
+    names = [c for c in args.cases.split(",") if c]
+    unknown = [c for c in names if c not in CASES]
+    if unknown:
+        print(f"unknown cases: {unknown}", file=sys.stderr)
+        return 2
+
+    try:
+        import repro as diomp
+
+        diomp.init(coordinator=args.coordinator,
+                   num_processes=args.num_processes,
+                   process_id=args.process_id,
+                   local_device_count=args.ndev_per_proc)
+        import jax
+
+        if jax.process_count() != args.num_processes:
+            raise RuntimeError(
+                f"joined as {jax.process_count()} processes, "
+                f"asked for {args.num_processes}")
+    except Exception:
+        traceback.print_exc()
+        print("multi-process bootstrap unavailable; exiting 77",
+              file=sys.stderr)
+        return INFRA_EXIT
+
+    result = {
+        "process_id": int(jax.process_index()),
+        "num_processes": int(jax.process_count()),
+        "ndev_per_proc": int(jax.local_device_count()),
+        "global_devices": int(jax.device_count()),
+        "cases": {},
+    }
+    for name in names:
+        print(f"[proc {args.process_id}] case {name} ...", flush=True)
+        result["cases"][name] = CASES[name]()
+
+    tmp = args.out + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(result, fh, indent=1, sort_keys=True)
+    os.replace(tmp, args.out)
+
+    # all processes finish before the launcher reaps anyone (a process
+    # exiting early would poison its peers' pending collectives)
+    from jax.experimental import multihost_utils
+
+    multihost_utils.sync_global_devices("diomp-harness-done")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

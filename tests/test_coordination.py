@@ -1,0 +1,184 @@
+"""Single-process unit tests for the multi-controller bootstrap layer.
+
+The cross-process behavior is exercised for real by tests/multiproc;
+here we pin the pieces that must hold in ANY topology: LocalCoordinator
+semantics (the identity exchange every pre-PR-10 test now runs on),
+process-local arena guards in GlobalMemory, the local_sizes/sizes
+contract of the extent exchange, mesh validation, the ``diomp.init``
+argument contract, and the single-process shape of ``gather_stats``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.context import DiompContext, init, reset_default_context
+from repro.core.coordination import (JaxCoordinator, LocalCoordinator,
+                                     coordinator_for, fetch_global,
+                                     is_distributed, process_local_ranks)
+from repro.core.groups import DiompGroup
+from repro.core.pgas import AllocError, GlobalMemory
+from repro.launch.mesh import make_process_mesh, make_smoke_mesh
+
+G = DiompGroup(("x",), name="x")
+
+
+# ---------------------------------------------------------------------------
+# coordinators
+# ---------------------------------------------------------------------------
+
+
+def test_local_coordinator_identity():
+    c = LocalCoordinator()
+    assert c.process_id == 0 and c.num_processes == 1
+    assert c.allgather({"a": (1, 2)}) == [{"a": [1, 2]}]  # JSON round-trip
+    assert c.broadcast("x") == "x"
+    assert c.agree(["anything"])
+    c.barrier("tag")  # no-op, no jax
+
+
+def test_coordinator_for_single_process(mesh8):
+    assert isinstance(coordinator_for(mesh8), LocalCoordinator)
+    assert not is_distributed()
+
+
+def test_jax_coordinator_single_process_roundtrip():
+    # a 1-process "distributed" job degenerates to the identity exchange
+    c = JaxCoordinator()
+    assert c.num_processes == 1
+    assert c.allgather_bytes(b"payload") == [b"payload"]
+    assert c.allgather([1, "two"]) == [[1, "two"]]
+
+
+def test_fetch_global_is_plain_numpy_locally():
+    x = np.arange(12.0).reshape(3, 4)
+    got = fetch_global(x)
+    np.testing.assert_array_equal(got, x)
+
+
+def test_process_local_ranks_covers_mesh(mesh8):
+    ranks = process_local_ranks(mesh8)
+    assert ranks == list(range(mesh8.devices.size))
+
+
+# ---------------------------------------------------------------------------
+# GlobalMemory: process-local arenas + extent exchange contract
+# ---------------------------------------------------------------------------
+
+
+def test_remote_rank_arena_is_guarded():
+    gm = GlobalMemory(4, 1 << 12, local_ranks=[0, 1])
+    slp = gm.alloc_asymmetric("kv", [64, 64, 0, 0], G)
+    assert slp.region.offsets[2] == -1
+    assert gm.bytes_in_use(0) > 0
+    with pytest.raises(AllocError, match="not process-local"):
+        gm.bytes_in_use(3)
+    with pytest.raises(AllocError, match="outside"):
+        gm.bytes_in_use(7)
+
+
+def test_alloc_asymmetric_exactly_one_of_sizes_and_local_sizes():
+    gm = GlobalMemory(2, 1 << 12)
+    with pytest.raises(ValueError, match="exactly one"):
+        gm.alloc_asymmetric("both", [8, 8], G, local_sizes=[8, 8])
+    with pytest.raises(ValueError, match="exactly one"):
+        gm.alloc_asymmetric("neither", group=G)
+
+
+def test_alloc_asymmetric_local_sizes_must_cover_local_ranks():
+    gm = GlobalMemory(4, 1 << 12, local_ranks=[1, 2])
+    with pytest.raises(ValueError, match="local sizes"):
+        gm.alloc_asymmetric("short", group=G, local_sizes=[64])
+    # partial visibility without peer processes: the assembled size
+    # vector cannot cover every rank, and the exchange says so
+    with pytest.raises(AllocError, match="covered ranks"):
+        gm.alloc_asymmetric("uncovered", group=G, local_sizes=[64, 128])
+
+
+def test_local_sizes_equals_global_sizes_table():
+    """One process owning every rank: the contribution path must build
+    the identical region the global-vector path builds."""
+    gm_a = GlobalMemory(4, 1 << 12)
+    gm_b = GlobalMemory(4, 1 << 12)
+    a = gm_a.alloc_asymmetric("kv", [32, 64, 0, 128], G)
+    b = gm_b.alloc_asymmetric("kv", group=G, local_sizes=[32, 64, 0, 128])
+    assert a.region.sizes == b.region.sizes
+    assert a.region.offsets == b.region.offsets
+
+
+# ---------------------------------------------------------------------------
+# meshes
+# ---------------------------------------------------------------------------
+
+
+def test_make_smoke_mesh_validates_ndev():
+    with pytest.raises(ValueError, match="positive"):
+        make_smoke_mesh(0)
+    with pytest.raises(ValueError,
+                       match="xla_force_host_platform_device_count"):
+        make_smoke_mesh(4096)
+
+
+def test_make_process_mesh_single_process_defaults():
+    import jax
+
+    mesh = make_process_mesh()
+    assert mesh.devices.size == jax.device_count()
+
+
+def test_make_process_mesh_explicit_ring():
+    import jax
+
+    n = jax.device_count()
+    mesh = make_process_mesh(shape=(n,), axes=("x",))
+    assert dict(mesh.shape) == {"x": n}
+    with pytest.raises(ValueError, match="explicit axes"):
+        make_process_mesh(shape=(n,))
+    with pytest.raises(ValueError, match="covers"):
+        make_process_mesh(shape=(n + 1,), axes=("x",))
+    with pytest.raises(ValueError, match="rank mismatch"):
+        make_process_mesh(shape=(n, 1), axes=("x",))
+
+
+def test_make_process_mesh_validates_claimed_topology():
+    import jax
+
+    with pytest.raises(ValueError, match="local devices"):
+        make_process_mesh(ndev_per_proc=jax.local_device_count() + 1)
+    with pytest.raises(ValueError, match="processes"):
+        make_process_mesh(num_processes=jax.process_count() + 1)
+
+
+# ---------------------------------------------------------------------------
+# diomp.init + gather_stats
+# ---------------------------------------------------------------------------
+
+
+def test_init_topology_args_require_coordinator():
+    with pytest.raises(ValueError, match="coordinator"):
+        init(num_processes=2)
+    with pytest.raises(ValueError, match="coordinator"):
+        init(process_id=0)
+    reset_default_context()
+
+
+def test_init_accepts_coordinator_instance(mesh8):
+    ctx = init(mesh=mesh8, coordinator=LocalCoordinator())
+    try:
+        assert ctx.process_id == 0 and ctx.num_processes == 1
+        assert not ctx.multiprocess
+    finally:
+        reset_default_context()
+
+
+def test_gather_stats_single_process_shape(mesh8):
+    ctx = DiompContext(mesh=mesh8, segment_bytes=1 << 16)
+    ctx.memory.alloc_symmetric("a", 512, G)
+    rows = ctx.gather_stats()
+    assert len(rows) == 1
+    (row,) = rows
+    assert row["process_id"] == 0
+    assert row["pgas"]["alloc_counts"]["symmetric"] == 1
+    names = [r[0] for r in row["pgas"]["regions"]]
+    assert "a" in names
+    for key in ("stats", "byte_stats", "retry_stats", "rma"):
+        assert key in row
